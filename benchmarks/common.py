@@ -1,0 +1,38 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gateway_controller import ControllerConfig
+from repro.core.simulator import Arch, SimConfig, simulate
+
+RESULTS = Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(parents=True, exist_ok=True)
+
+
+def fixed_gateway_config(g: int, base: SimConfig = SimConfig()) -> SimConfig:
+    """ReSiPI datapath with the controller pinned at exactly g gateways."""
+    ctl = ControllerConfig(l_m=base.ctl.l_m, max_gateways=g, min_gateways=g)
+    return dataclasses.replace(base.with_arch(Arch.RESIPI), ctl=ctl)
+
+
+def timed(fn, *args, repeat: int = 1, **kwargs):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kwargs)
+    out = jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+        else out
+    return out, (time.time() - t0) / repeat * 1e6   # us per call
+
+
+def save_json(name: str, data) -> Path:
+    path = RESULTS / name
+    path.write_text(json.dumps(data, indent=1, default=float))
+    return path

@@ -1,0 +1,48 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figures 10-13 + Table 2 are
+the paper artifacts; roofline + lane_schedule are the framework-level
+additions (EXPERIMENTS.md indexes them).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _run(name, fn, derived_fn):
+    t0 = time.time()
+    out = fn()
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived_fn(out)}", flush=True)
+    return out
+
+
+def main() -> None:
+    from benchmarks import (fig10_lm_dse, fig11_main, fig12_adaptivity,
+                            fig13_residency, table2_overhead, lane_schedule)
+
+    print("name,us_per_call,derived")
+    _run("fig10_lm_dse", fig10_lm_dse.run,
+         lambda r: f"L_m={r['l_m_selected']:.4f}(paper 0.0152)")
+    _run("fig11_main", fig11_main.run,
+         lambda r: (f"lat-{r['summary']['latency_reduction_vs_prowaves']:.0%}"
+                    f"/pow-{r['summary']['power_reduction_vs_prowaves']:.0%}"
+                    f"/en-{r['summary']['energy_reduction_vs_prowaves']:.0%}"
+                    f"(paper 37/25/53)"))
+    _run("fig12_adaptivity", fig12_adaptivity.run,
+         lambda r: (f"settle={r['adaptation']['resipi_settle'][0]}"
+                    f"intervals(paper~3),maxGW={r['max_gateways_used']}"))
+    _run("fig13_residency", fig13_residency.run,
+         lambda r: (f"residency_ratio="
+                    f"{r['max_ratio_pro_over_resipi']:.2f}x"))
+    _run("table2_overhead", table2_overhead.run,
+         lambda r: (f"ctl_power={r['model']['total_power_uw']:.0f}uW"
+                    f"(paper 959uW)"))
+    _run("lane_schedule", lane_schedule.run,
+         lambda r: (f"lanes={r['resipi']['mean_lanes']:.2f},"
+                    f"power={r['resipi']['power_mw']:.0f}mW"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + lockstep decode with a KV cache on a
+GQA model (phi4-mini family, smoke scale).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "phi4-mini-3.8b", "--smoke",
+                "--requests", "8", "--batch", "4",
+                "--prompt-len", "24", "--new-tokens", "12",
+                "--max-len", "64"])
+
+
+if __name__ == "__main__":
+    main()

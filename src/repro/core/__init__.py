@@ -1,0 +1,13 @@
+"""ReSiPI core: the paper's contribution as composable JAX modules.
+
+Level 1 (faithful reproduction): photonics, gateway_controller, selection,
+noc, traffic, simulator — the 2.5D photonic-interposer network of the paper.
+
+Level 2 (framework integration): reconfig_runtime — the same controller
+driving communication-lane reconfiguration in the multi-pod trainer.
+"""
+from repro.core import constants, photonics, gateway_controller, selection
+from repro.core import noc, traffic, simulator, reconfig_runtime
+
+__all__ = ["constants", "photonics", "gateway_controller", "selection",
+           "noc", "traffic", "simulator", "reconfig_runtime"]

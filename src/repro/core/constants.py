@@ -1,0 +1,106 @@
+"""Physical and simulation constants.
+
+Paper-side constants come from ReSiPI Table 1 and §4.1 (power model inherited
+from PROWAVES [16]/Polster [19]); TPU-side constants are the v5e targets used
+by the roofline analysis (§Roofline in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+# ---------------------------------------------------------------------------
+# ReSiPI paper constants (Table 1 + §4.1 + §4.3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhotonicPower:
+    """Silicon-photonic power model (PROWAVES model, §4.1)."""
+
+    laser_mw_per_wavelength: float = 30.0   # per wavelength per waveguide
+    tia_mw: float = 2.0                     # per active photodiode/receiver
+    tuning_mw_per_mr: float = 3.0           # thermal tuning per active MR
+    driver_mw: float = 3.0                  # per active modulator driver
+    pcmc_reconfig_nj: float = 2.0           # PCM switch reconfiguration energy
+    pcmc_reconfig_cycles: int = 100         # 100 ns @ 1 GHz (Kato et al. [10])
+    laser_tune_cycles: int = 1              # SOA laser power tuning: 20-50 ps
+    awgr_loss_db: float = 1.8               # AWGR insertion loss (§4.4)
+    controller_lgc_uw: float = 172.0        # Table 2, per-chiplet local ctl
+    controller_inc_uw: float = 787.0        # Table 2, interposer controller
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """2.5D system topology (Table 1)."""
+
+    n_chiplets: int = 4
+    mesh_x: int = 4                         # intra-chiplet mesh is 4x4
+    mesh_y: int = 4
+    max_gateways_per_chiplet: int = 4       # ReSiPI / AWGR
+    memory_gateways: int = 2                # gateways for memory controllers
+    gateway_buffer_flits: int = 8           # ReSiPI/AWGR (PROWAVES uses 32)
+    router_buffer_flits: int = 4
+    noc_freq_ghz: float = 1.0
+    link_gbps_per_wavelength: float = 12.0  # optical data rate
+    flit_bits: int = 32
+    packet_flits: int = 8
+    reconfig_interval_cycles: int = 1_000_000
+    sim_cycles: int = 100_000_000
+    warmup_cycles: int = 10_000
+
+    @property
+    def routers_per_chiplet(self) -> int:
+        return self.mesh_x * self.mesh_y
+
+    @property
+    def packet_bits(self) -> int:
+        return self.packet_flits * self.flit_bits
+
+    @property
+    def total_gateways(self) -> int:
+        """All chiplet gateways + memory-controller gateways (18 in Table 1)."""
+        return (self.n_chiplets * self.max_gateways_per_chiplet
+                + self.memory_gateways)
+
+    def gateway_service_cycles(self, wavelengths: int) -> float:
+        """Cycles to serialize one packet through a gateway with W wavelengths.
+
+        bits/cycle = W * (link_gbps / freq_ghz); one packet = packet_bits.
+        """
+        bits_per_cycle = wavelengths * (self.link_gbps_per_wavelength
+                                        / self.noc_freq_ghz)
+        return self.packet_bits / bits_per_cycle
+
+
+# Architecture-variant wavelength budgets (§4.1): PROWAVES uses up to 16
+# wavelengths on a single gateway per chiplet; ReSiPI uses 4 wavelengths on up
+# to 4 gateways per chiplet (equal peak bisection bandwidth); AWGR statically
+# uses one wavelength per port (18 total).
+RESIPI_WAVELENGTHS = 4
+PROWAVES_MAX_WAVELENGTHS = 16
+PROWAVES_MIN_WAVELENGTHS = 4   # Fig. 12.d floor: PROWAVES never drops below
+                               # ~4 active wavelengths on its single gateway
+AWGR_WAVELENGTHS = 18
+
+# The paper's empirically selected maximum allowable gateway load (§4.2),
+# in packets/cycle/gateway, chosen accepting <=10% latency overhead.
+PAPER_L_M = 0.0152
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e roofline constants (targets for the dry-run analysis)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TPUv5e:
+    peak_bf16_flops: float = 197e12        # FLOP/s per chip
+    hbm_bytes_per_s: float = 819e9         # HBM bandwidth per chip
+    ici_bytes_per_s_per_link: float = 50e9 # ICI per link
+    hbm_bytes: int = 16 * 1024 ** 3        # 16 GiB HBM per chip
+    vmem_bytes: int = 128 * 1024 ** 2      # ~128 MiB VMEM
+    mxu_dim: int = 128                     # systolic array tile
+
+
+PHOTONIC_POWER = PhotonicPower()
+NETWORK = NetworkConfig()
+TPU = TPUv5e()

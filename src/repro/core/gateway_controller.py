@@ -1,0 +1,133 @@
+"""ReSiPI dynamic gateway management (§3.3, Fig. 6-7).
+
+The epoch controller measures the mean per-gateway load of each chiplet over a
+reconfiguration interval (Eq. 5) and applies hysteresis thresholds:
+
+    activate   when L_c >  T_P_g = L_m                 (Eq. 6)
+    deactivate when L_c <  T_N_g = L_m * (1 - 1/g)     (Eq. 7, from Eqs. 8-10)
+
+This module is pure JAX so the exact same control law drives both the Level-1
+network simulator (gateways on a photonic interposer) and the Level-2 training
+runtime (communication lanes on a TPU mesh) — see reconfig_runtime.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import PAPER_L_M
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    l_m: float = PAPER_L_M        # maximum allowable per-gateway load (§4.2)
+    max_gateways: int = 4         # G: per-chiplet maximum
+    min_gateways: int = 1
+
+
+def t_p(cfg: ControllerConfig) -> jax.Array:
+    """Eq. 6: activation threshold — constant L_m for every g."""
+    return jnp.float32(cfg.l_m)
+
+
+def t_n(g: jax.Array, cfg: ControllerConfig) -> jax.Array:
+    """Eq. 7: deactivation threshold L_m * (1 - 1/g)."""
+    g = jnp.maximum(g.astype(jnp.float32), 1.0)
+    return cfg.l_m * (1.0 - 1.0 / g)
+
+
+def average_gateway_load(packets: jax.Array, interval_cycles: jax.Array,
+                         g: jax.Array) -> jax.Array:
+    """Eq. 5: L_c^i = (1/g_c) * sum_j P_j / T_i.
+
+    Args:
+      packets: total packets transmitted by the chiplet's active gateways
+        during the interval (scalar or [chiplets]).
+      interval_cycles: T_i, interval duration in cycles.
+      g: number of active gateways.
+    """
+    g = jnp.maximum(g.astype(jnp.float32), 1.0)
+    return packets / (interval_cycles * g)
+
+
+def update_gateways(g: jax.Array, load: jax.Array,
+                    cfg: ControllerConfig) -> jax.Array:
+    """One controller decision (Fig. 6): g -> g+1, g-1 or g.
+
+    Vectorizes over chiplets. Hysteresis: since T_N_g < T_P for all g, the
+    bands overlap nowhere and the controller cannot oscillate within one
+    interval (property-tested).
+    """
+    g = g.astype(jnp.int32)
+    inc = (load > t_p(cfg)) & (g < cfg.max_gateways)
+    dec = (load < t_n(g, cfg)) & (g > cfg.min_gateways)
+    return jnp.where(inc, g + 1, jnp.where(dec, g - 1, g))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ControllerState:
+    """Carried across reconfiguration intervals (one per chiplet)."""
+    g: jax.Array                  # [chiplets] int32 — active gateways
+    packets_seen: jax.Array       # [chiplets] float32 — accumulator
+    epoch: jax.Array              # scalar int32
+
+    @staticmethod
+    def init(n_chiplets: int, cfg: ControllerConfig) -> "ControllerState":
+        # §3.3: "initially set to the maximum allowed".
+        return ControllerState(
+            g=jnp.full((n_chiplets,), cfg.max_gateways, jnp.int32),
+            packets_seen=jnp.zeros((n_chiplets,), jnp.float32),
+            epoch=jnp.int32(0))
+
+
+def epoch_step(state: ControllerState, packets_this_interval: jax.Array,
+               interval_cycles: float, cfg: ControllerConfig
+               ) -> Tuple[ControllerState, dict]:
+    """Run one reconfiguration-interval update (Fig. 7 flow).
+
+    Returns the new state plus a record dict: per-chiplet g before/after, the
+    measured loads, and the global gateway total GT used by Eq. 4 / the laser
+    power manager. Gateway deactivation is modeled flush-then-deactivate
+    (§3.3): the interval that *decides* to drop a gateway still pays its
+    power; activation raises laser power first, so the new gateway is usable
+    within the same interval boundary (100-cycle PCM + <1-cycle SOA delays,
+    §4.3 — negligible vs the 1M-cycle interval, charged as energy).
+    """
+    load = average_gateway_load(packets_this_interval,
+                                jnp.float32(interval_cycles), state.g)
+    g_new = update_gateways(state.g, load, cfg)
+    record = {
+        "g_before": state.g,
+        "g_after": g_new,
+        "load": load,
+        "gt": jnp.sum(g_new),
+        "changed": jnp.sum(jnp.abs(g_new - state.g)),
+    }
+    new_state = ControllerState(g=g_new,
+                                packets_seen=jnp.zeros_like(state.packets_seen),
+                                epoch=state.epoch + 1)
+    return new_state, record
+
+
+def scan_controller(loads_per_interval: jax.Array, cfg: ControllerConfig,
+                    interval_cycles: float) -> dict:
+    """Replay the controller over a [T, chiplets] load trace with lax.scan.
+
+    `loads_per_interval` is the would-be load *per single gateway* if exactly
+    one gateway were active (i.e. total packets / interval); Eq. 5 rescales by
+    the live g each epoch. Used for unit tests and the adaptivity benchmark.
+    """
+    n_chiplets = loads_per_interval.shape[1]
+    state0 = ControllerState.init(n_chiplets, cfg)
+
+    def step(state, total_load):
+        packets = total_load * interval_cycles
+        new_state, rec = epoch_step(state, packets, interval_cycles, cfg)
+        return new_state, rec
+
+    _, recs = jax.lax.scan(step, state0, loads_per_interval)
+    return recs

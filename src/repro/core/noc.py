@@ -1,0 +1,138 @@
+"""Intra-chiplet NoC latency model (epoch scale).
+
+The Level-1 simulator models each reconfiguration interval with a queueing
+abstraction instead of Noxim's cycle-accurate flit walk (DESIGN.md §9.2). The
+model has three serial segments per inter-chiplet packet (§3.4):
+
+  (1) source router -> source gateway:   mesh hops + convergence queueing
+  (2) gateway -> gateway over photonics: serialization + M/D/1 gateway queue
+  (3) destination gateway -> dest router: mesh hops + ejection queueing
+
+plus plain mesh latency for intra-chiplet packets. Queueing terms use M/D/1
+waiting time with a burstiness multiplier and a finite-buffer backpressure
+amplification — the two effects that make small-buffer NoCs saturate well
+below link capacity. Calibration constants are collected in `NocModel` and
+documented; tests/test_noc.py pins their qualitative properties (monotone in
+load, decreasing in gateways, knee location).
+
+The flit-level Pallas kernel (kernels/noc_step) cross-validates this model on
+short windows and produces the Fig. 13 residency maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import NETWORK, NetworkConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class NocModel:
+    cfg: NetworkConfig = NETWORK
+    router_pipeline_cycles: float = 2.0   # per-hop pipelined router traversal
+    photonic_flight_cycles: float = 2.0   # time-of-flight + E/O + O/E
+    burstiness: float = 3.0               # PARSEC batch-arrival factor
+    # Finite-buffer backpressure: with 4-flit router / 8-flit gateway buffers
+    # the network saturates at an effective utilization rho_sat < 1. The
+    # queueing term diverges as rho -> buffer_sat instead of 1.0.
+    buffer_sat: float = 0.55
+    # Mesh links adjacent to a gateway router that traffic converges onto.
+    feed_links: float = 2.0
+
+    def serialization_cycles(self, wavelengths) -> jax.Array:
+        """Cycles to push one packet through a gateway with W wavelengths."""
+        w = jnp.asarray(wavelengths, jnp.float32)
+        bits_per_cycle = w * (self.cfg.link_gbps_per_wavelength
+                              / self.cfg.noc_freq_ghz)
+        return self.cfg.packet_bits / bits_per_cycle
+
+    @property
+    def port_cycles(self) -> float:
+        """Electronic gateway-port service time: the chiplet-side NoC ejects
+        1 flit/cycle into the gateway (32 Gb/s at 1 GHz x 32-bit flits), so a
+        packet needs packet_flits cycles *regardless of optical wavelengths*.
+        This is the physical reason deep WDM on a single gateway saturates
+        (Fig. 3 / Fig. 13): optical bandwidth beyond ~3 wavelengths outruns
+        the electronic port. More gateways = more ports (ReSiPI's insight).
+        """
+        return float(self.cfg.packet_flits)
+
+    # -- queueing primitives -------------------------------------------------
+
+    def _md1_wait(self, rho: jax.Array, service: jax.Array) -> jax.Array:
+        """M/D/1 waiting time with burst amplification and buffer saturation.
+
+        W = b * rho_eff * s / (2 (1 - rho_eff)), rho_eff = rho / rho_sat.
+        Clipped slightly below saturation so the epoch model stays finite;
+        the simulator reports saturation separately via `saturated` flags.
+        """
+        rho_eff = jnp.clip(rho / self.buffer_sat, 0.0, 0.995)
+        return self.burstiness * rho_eff * service / (2.0 * (1.0 - rho_eff))
+
+    # -- per-segment latencies ----------------------------------------------
+
+    def gateway_latency(self, load_pkts_per_cycle: jax.Array,
+                        wavelengths) -> jax.Array:
+        """Segment (2): M/D/1 queue at the gateway + serialization + flight.
+
+        `load_pkts_per_cycle` is L from Eq. 5 — per-gateway packet rate.
+        The queue's service time is the *slower* of optical serialization and
+        the electronic port (see `port_cycles`); transit adds both stages
+        pipelined (max) plus time of flight.
+        """
+        s_opt = self.serialization_cycles(wavelengths)
+        s_eff = jnp.maximum(s_opt, self.port_cycles)
+        rho = jnp.clip(load_pkts_per_cycle * s_eff, 0.0, 1.0)
+        return (s_eff + self._md1_wait(rho, s_eff)
+                + self.photonic_flight_cycles)
+
+    def access_latency(self, hops: jax.Array,
+                       load_pkts_per_cycle: jax.Array) -> jax.Array:
+        """Segments (1)/(3): mesh walk to/from the gateway.
+
+        Convergence congestion: all of a gateway's traffic (L pkts/cycle *
+        packet_flits flits) crosses ~feed_links mesh links of 1 flit/cycle
+        next to the gateway router; local through-traffic is folded into
+        buffer_sat.
+        """
+        walk = hops * self.router_pipeline_cycles
+        flits_per_cycle = load_pkts_per_cycle * self.cfg.packet_flits
+        rho_link = jnp.clip(flits_per_cycle / self.feed_links, 0.0, 1.0)
+        link_service = jnp.float32(self.cfg.packet_flits)  # 1 flit/cycle links
+        return walk + self._md1_wait(rho_link, link_service)
+
+    def mesh_latency(self, mean_hops: jax.Array,
+                     link_load_flits: jax.Array) -> jax.Array:
+        """Intra-chiplet (non-gateway) packets: uniform-mesh M/D/1 per link."""
+        walk = mean_hops * self.router_pipeline_cycles
+        rho = jnp.clip(link_load_flits, 0.0, 1.0)
+        service = jnp.float32(self.cfg.packet_flits)
+        return (walk + self.cfg.packet_flits
+                + self._md1_wait(rho, service))
+
+    # -- composite -----------------------------------------------------------
+
+    def inter_chiplet_latency(self, gw_load: jax.Array, wavelengths,
+                              src_hops: jax.Array, dst_hops: jax.Array
+                              ) -> jax.Array:
+        """End-to-end latency for an inter-chiplet packet (all segments)."""
+        return (self.access_latency(src_hops, gw_load)
+                + self.gateway_latency(gw_load, wavelengths)
+                + self.access_latency(dst_hops, gw_load))
+
+    def saturated(self, gw_load: jax.Array, wavelengths) -> jax.Array:
+        """True when the gateway queue has crossed the buffer knee."""
+        s = jnp.maximum(self.serialization_cycles(wavelengths),
+                        self.port_cycles)
+        return gw_load * s > self.buffer_sat
+
+
+def uniform_mesh_mean_hops(cfg: NetworkConfig = NETWORK) -> float:
+    """Mean XY hop count between uniformly random distinct routers."""
+    mx, my = cfg.mesh_x, cfg.mesh_y
+    # E|x1-x2| for uniform iid on {0..n-1} = (n^2-1)/(3n)
+    ex = (mx * mx - 1) / (3.0 * mx)
+    ey = (my * my - 1) / (3.0 * my)
+    return float(ex + ey)

@@ -1,0 +1,211 @@
+"""Photonic device models for the ReSiPI interposer.
+
+Implements the paper's §3.2: PCM-based reconfigurable directional couplers
+(PCMCs, Eqs. 1-3), the equal-power-share coupling-ratio schedule (Eq. 4), and
+microring-group (MRG) device-count / power accounting for the SWMR interposer
+of Fig. 4. Everything is pure-JAX and jittable over dynamic gateway-activity
+masks, so the controller (gateway_controller.py) can run under `lax.scan`.
+
+Eq. 4 note: the paper writes kappa_i = 1/(sum_c g_c - i) with i the PCMC chain
+index, under the convention that idle writers have kappa=0 and do not consume
+an index. We implement the equal-share-correct reading: i counts *active*
+writers upstream of PCMC i, which yields exactly P_laser/GT at every active
+writer for any activity pattern (property-tested in tests/test_photonics.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import PHOTONIC_POWER, NETWORK, PhotonicPower
+
+
+# ---------------------------------------------------------------------------
+# PCMC device (Fig. 5, Eqs. 1-3)
+# ---------------------------------------------------------------------------
+
+def pcmc_coupling_ratio(cl_amorphous: jax.Array, cl_crystalline: jax.Array
+                        ) -> jax.Array:
+    """Eq. 1: kappa = CL_am / CL_cr, clipped to the physical [0, 1] range."""
+    return jnp.clip(cl_amorphous / jnp.maximum(cl_crystalline, 1e-12), 0.0, 1.0)
+
+
+def pcmc_split(p_in: jax.Array, kappa: jax.Array,
+               insertion_loss_db: float = 0.0
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Eqs. 2-3: split input power into (cross, bar) outputs.
+
+    P_C = kappa * P_I ; P_B = (1 - kappa) * P_I, with optional insertion loss
+    applied to both arms (the paper assumes lossless transmission for Eq. 2-3;
+    loss_db=0 reproduces that).
+    """
+    loss = 10.0 ** (-insertion_loss_db / 10.0)
+    p_cross = kappa * p_in * loss
+    p_bar = (1.0 - kappa) * p_in * loss
+    return p_cross, p_bar
+
+
+def kappa_schedule(active: jax.Array) -> jax.Array:
+    """Eq. 4: coupling ratios for the N-1 PCMC chain given activity mask.
+
+    Args:
+      active: bool/int array [N] — gateway i's writer is active. Chain order
+        follows the MRG chain of Fig. 4 (gateway N has no PCMC: it receives
+        the bar-through remainder).
+
+    Returns:
+      kappa: float array [N-1]. kappa[i] = 1/(GT - a_i) if gateway i is
+      active (a_i = number of active gateways upstream of i), else 0.
+    """
+    active = active.astype(jnp.float32)
+    gt = jnp.sum(active)
+    # a_i = number of active writers strictly before chain position i.
+    upstream = jnp.cumsum(active) - active
+    denom = jnp.maximum(gt - upstream, 1.0)
+    kappa = jnp.where(active[:-1] > 0, 1.0 / denom[:-1], 0.0)
+    return kappa
+
+
+def power_division(active: jax.Array, laser_power_mw: jax.Array
+                   ) -> jax.Array:
+    """Propagate laser power down the PCMC chain (Fig. 4 wiring).
+
+    Returns per-gateway received optical power [N]. With kappa_schedule and a
+    laser tuned to `laser_power_mw`, every active gateway receives
+    laser_power_mw / GT and idle gateways receive 0 (the PCM power-gating
+    mechanism of §3.2).
+    """
+    kappa = kappa_schedule(active)
+    n = active.shape[0]
+
+    def step(p_bar, k):
+        p_cross, p_bar_next = pcmc_split(p_bar, k)
+        return p_bar_next, p_cross
+
+    p_remaining, taps = jax.lax.scan(step, laser_power_mw, kappa)
+    # Last gateway in the chain taps the remaining bar output directly.
+    received = jnp.concatenate([taps, p_remaining[None]])
+    # An idle final gateway must see zero power: with Eq. 4 the upstream taps
+    # exhaust the laser power exactly, so p_remaining==0 whenever the final
+    # gateway is idle; guard numerically.
+    received = jnp.where(active > 0, received, 0.0)
+    return received
+
+
+# ---------------------------------------------------------------------------
+# MRG accounting (Fig. 4): N gateways, W wavelengths
+#   each MRG: 1 modulator row (W MRs) + (N-1) filter rows (W MRs each)
+#   waveguides per MRG: N ; PCMCs in system: N-1
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InterposerGeometry:
+    n_gateways: int
+    wavelengths: int
+
+    @property
+    def mrgs(self) -> int:
+        return self.n_gateways
+
+    @property
+    def pcmcs(self) -> int:
+        return self.n_gateways - 1
+
+    @property
+    def modulators_per_mrg(self) -> int:
+        return self.wavelengths
+
+    @property
+    def filters_per_mrg(self) -> int:
+        return (self.n_gateways - 1) * self.wavelengths
+
+    @property
+    def total_mrs(self) -> int:
+        return self.mrgs * (self.modulators_per_mrg + self.filters_per_mrg)
+
+
+def interposer_power_mw(active: jax.Array,
+                        wavelengths: jax.Array,
+                        *,
+                        n_gateways: int,
+                        power: PhotonicPower = PHOTONIC_POWER,
+                        loss_db: float = 0.0,
+                        mode: str = "pcm") -> dict:
+    """Total photonic interposer power for a given activity state.
+
+    Thermal tuning is the power that pulls an MR onto resonance; a ring with
+    no light routed to it (PCM-gated MRG input) can be left untuned. A reader
+    gateway ejects one packet at a time, so it keeps exactly one filter row
+    (W rings) on-resonance; modulator rows of active writers are always lit.
+
+    Args:
+      active: [N] bool — active gateways (writers+readers co-gated, §3.2).
+      wavelengths: scalar or [N] — active wavelengths per gateway.
+      n_gateways: static N (chain length).
+      loss_db: optical path loss; laser power is scaled by 10^(loss/10) to
+        keep receiver-side power constant (the AWGR 1.8 dB penalty).
+      mode:
+        "pcm"    — ReSiPI: laser + tuning + driver + TIA all follow the
+                   PCMC-gated activity mask (non-volatile gating, §3.2).
+        "wdm"    — PROWAVES: per-gateway wavelength counts are adaptive
+                   (laser, driver, TIA, tuning scale with active lambdas)
+                   but every provisioned gateway stays lit — no PCM gating,
+                   so the single gateway per chiplet never powers down.
+        "static" — AWGR: everything provisioned is always on (fixed lasers,
+                   passive AWGR routing, per-port receiver rings tuned).
+
+    Returns dict with laser/tuning/driver/tia/total mW (jnp scalars).
+    """
+    active_f = active.astype(jnp.float32)
+    w = jnp.broadcast_to(jnp.asarray(wavelengths, jnp.float32), (n_gateways,))
+    loss_scale = 10.0 ** (loss_db / 10.0)
+
+    if mode == "pcm":
+        lit_w = jnp.sum(active_f * w)
+        laser = lit_w * power.laser_mw_per_wavelength
+        mods = lit_w                      # modulator rings of active writers
+        filters = lit_w                   # one tuned filter row per reader
+    elif mode == "wdm":
+        lit_w = jnp.sum(w)                # all provisioned gateways stay lit
+        laser = lit_w * power.laser_mw_per_wavelength
+        mods = lit_w
+        filters = lit_w
+    elif mode == "static":
+        lit_w = jnp.sum(w)
+        laser = lit_w * power.laser_mw_per_wavelength
+        mods = lit_w
+        # AWGR outputs keep a full receiver ring bank on-resonance (any of
+        # N wavelengths can arrive at any output port).
+        filters = jnp.float32(n_gateways * n_gateways)
+    else:
+        raise ValueError(f"unknown power mode: {mode}")
+
+    tia = filters if mode != "static" else jnp.float32(n_gateways)
+    tia = tia * power.tia_mw
+    tuning = (mods + filters) * power.tuning_mw_per_mr
+    driver = mods * power.driver_mw
+
+    laser = laser * loss_scale
+    controller = (power.controller_lgc_uw * NETWORK.n_chiplets
+                  + power.controller_inc_uw) / 1000.0
+    total = laser + tia + tuning + driver + controller
+    return {"laser_mw": laser, "tia_mw": tia, "tuning_mw": tuning,
+            "driver_mw": driver, "controller_mw": jnp.float32(controller),
+            "total_mw": total}
+
+
+def reconfig_energy_nj(prev_active: jax.Array, new_active: jax.Array,
+                       power: PhotonicPower = PHOTONIC_POWER) -> jax.Array:
+    """PCM reconfiguration energy for one epoch boundary.
+
+    Every PCMC whose kappa changes pays one ~2 nJ PCM state transition.
+    Non-volatility (the PCM retains state at zero power) is what makes the
+    steady-state term zero — the defining property exploited by the paper.
+    """
+    k_prev = kappa_schedule(prev_active)
+    k_new = kappa_schedule(new_active)
+    switched = jnp.sum((jnp.abs(k_new - k_prev) > 1e-6).astype(jnp.float32))
+    return switched * power.pcmc_reconfig_nj

@@ -1,0 +1,200 @@
+"""Level-2 ReSiPI: reconfigurable communication lanes for the trainer.
+
+The paper's mechanism — meter traffic per epoch, adjust the number of active
+gateways with hysteresis (Eqs. 5-7), power-gate the idle ones, and re-divide
+input power equally (Eq. 4) — maps onto a multi-pod TPU runtime as follows
+(DESIGN.md §2):
+
+  gateway            -> communication *lane*: one chunk-stream of a collective
+                        (a gradient reduce-scatter split into `lanes` chunks
+                        issues `lanes` smaller collectives that XLA can
+                        overlap with compute; MoE all-to-all likewise)
+  #active gateways   -> lane width per epoch
+  packets/interval   -> collective bytes/step metered per epoch
+  PCM reconfigure    -> swapping to the pre-compiled executable for the new
+                        lane width (non-volatile: no cost while unchanged)
+  laser power (Eq.4) -> equal per-lane bandwidth share; the photonic energy
+                        model is reused verbatim to report lane energy
+
+Lane width changes the *program*, so like the paper (design-time selection
+tables, §3.4) we pre-compile one executable per lane width and the controller
+switches between them at epoch boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import photonics
+from repro.core.constants import PHOTONIC_POWER
+from repro.core.gateway_controller import (ControllerConfig, ControllerState,
+                                           update_gateways)
+
+LANE_WIDTHS = (1, 2, 4)        # pre-compiled variants, like Fig. 8 a-d tables
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneConfig:
+    """Controller configuration for communication lanes.
+
+    l_m is the maximum allowable per-lane load in *bytes per step per lane
+    bandwidth-second* — i.e. the fraction of a lane's per-step byte budget
+    that may be used before we widen (hysteresis mirrors Eqs. 6-7).
+    """
+    max_lanes: int = max(LANE_WIDTHS)
+    min_lanes: int = 1
+    l_m: float = 0.60                       # per-lane utilization knee
+    lane_bytes_per_step: float = 50e9 * 1e-3  # ICI link bytes in ~1ms step
+
+    def controller(self) -> ControllerConfig:
+        return ControllerConfig(l_m=self.l_m, max_gateways=self.max_lanes,
+                                min_gateways=self.min_lanes)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LaneState:
+    lanes: jax.Array            # scalar int32 — current lane width
+    bytes_seen: jax.Array      # scalar float32 — bytes accumulated this epoch
+    steps_seen: jax.Array      # scalar int32
+    epoch: jax.Array           # scalar int32
+
+    @staticmethod
+    def init(cfg: LaneConfig) -> "LaneState":
+        return LaneState(lanes=jnp.int32(cfg.max_lanes),
+                         bytes_seen=jnp.float32(0.0),
+                         steps_seen=jnp.int32(0),
+                         epoch=jnp.int32(0))
+
+
+def meter_step(state: LaneState, bytes_this_step: jax.Array) -> LaneState:
+    """Accumulate one step's collective traffic (Eq. 5 numerator)."""
+    return LaneState(lanes=state.lanes,
+                     bytes_seen=state.bytes_seen + bytes_this_step,
+                     steps_seen=state.steps_seen + 1,
+                     epoch=state.epoch)
+
+
+def epoch_update(state: LaneState, cfg: LaneConfig
+                 ) -> Tuple[LaneState, Dict[str, jax.Array]]:
+    """Epoch-boundary lane decision — Eqs. 5-7 with lanes as gateways."""
+    steps = jnp.maximum(state.steps_seen.astype(jnp.float32), 1.0)
+    per_step = state.bytes_seen / steps
+    load = per_step / (cfg.lane_bytes_per_step
+                       * state.lanes.astype(jnp.float32))
+    lanes_new = update_gateways(state.lanes[None], load[None],
+                                cfg.controller())[0]
+    rec = {"load": load, "lanes_before": state.lanes,
+           "lanes_after": lanes_new,
+           "reconfigured": (lanes_new != state.lanes)}
+    return LaneState(lanes=lanes_new, bytes_seen=jnp.float32(0.0),
+                     steps_seen=jnp.int32(0), epoch=state.epoch + 1), rec
+
+
+def nearest_compiled_width(lanes: int,
+                           widths: Sequence[int] = LANE_WIDTHS) -> int:
+    """Snap a controller decision to the nearest pre-compiled lane width."""
+    return min(widths, key=lambda w: (abs(w - lanes), w))
+
+
+# ---------------------------------------------------------------------------
+# Lane materialization: chunked gradient collectives
+# ---------------------------------------------------------------------------
+
+def chunk_pytree(tree: Any, lanes: int) -> list:
+    """Split a gradient pytree into `lanes` balanced chunks (by byte size).
+
+    Greedy largest-first binning — the per-packet balanced gateway selection
+    of §3.4 applied to tensors. Returns a list of `lanes` sub-pytrees (dicts
+    keyed by flattened path index).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [(leaf.size * leaf.dtype.itemsize, i)
+             for i, leaf in enumerate(leaves)]
+    sizes.sort(reverse=True)
+    bins: list = [dict() for _ in range(lanes)]
+    loads = [0] * lanes
+    for sz, i in sizes:
+        b = loads.index(min(loads))
+        bins[b][i] = leaves[i]
+        loads[b] += sz
+    return bins
+
+
+def merge_chunks(bins: list, like: Any) -> Any:
+    """Inverse of chunk_pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out = [None] * len(leaves)
+    for b in bins:
+        for i, leaf in b.items():
+            out[i] = leaf
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def laned_psum(tree: Any, axis_name: str, lanes: int) -> Any:
+    """All-reduce a pytree as `lanes` independent chunk streams.
+
+    Each chunk is a separate jax.lax.psum: XLA's latency-hiding scheduler can
+    overlap chunk k+1's communication with whatever compute consumes chunk k
+    — the TPU rendering of "more gateways, each narrower" (Fig. 3 design B).
+    With lanes=1 this is the classical single fused all-reduce (design A).
+
+    Lanes are chained through `optimization_barrier` so XLA's all-reduce
+    combiner cannot re-fuse them into one deep collective: each lane stays
+    a separate wire-level stream the scheduler can interleave with the
+    consumer's compute (verified in tests/test_laned_sync.py by counting
+    all-reduce ops in the compiled HLO per width).
+    """
+    if axis_name is None:        # outside shard_map (tests): identity
+        return tree
+    if lanes <= 1:
+        return jax.lax.psum(tree, axis_name)
+    bins = chunk_pytree(tree, lanes)
+    reduced = []
+    token = None
+    for b in bins:
+        if not b:
+            reduced.append(b)
+            continue
+        if token is not None:
+            b, _ = jax.lax.optimization_barrier((b, token))
+        out = jax.lax.psum(b, axis_name)
+        token = jax.tree.leaves(out)[0]
+        reduced.append(out)
+    return merge_chunks(reduced, tree)
+
+
+def collective_bytes_of(tree: Any, axis_size: int) -> jax.Array:
+    """Static per-step all-reduce traffic estimate: 2*(n-1)/n * bytes."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = sum(leaf.size * leaf.dtype.itemsize for leaf in leaves)
+    return jnp.float32(2.0 * (axis_size - 1) / axis_size * total)
+
+
+# ---------------------------------------------------------------------------
+# Energy accounting: reuse the photonic interposer model for lanes
+# ---------------------------------------------------------------------------
+
+def lane_energy_report(lanes_history: jax.Array, cfg: LaneConfig) -> dict:
+    """Report lane energy with the paper's power model (per-epoch).
+
+    Lanes map to gateways with 4 'wavelengths' each; idle lanes are
+    PCM-gated. Reconfigurations pay the 2 nJ PCM cost each. Units are model
+    mW/nJ — used for *relative* schedule comparisons, as in Fig. 11.
+    """
+    max_l = cfg.max_lanes
+
+    def power_of(l):
+        active = jnp.arange(max_l) < l
+        pw = photonics.interposer_power_mw(active, jnp.float32(4.0),
+                                           n_gateways=max_l, mode="pcm")
+        return pw["total_mw"]
+
+    powers = jax.vmap(power_of)(lanes_history)
+    switches = jnp.sum((jnp.diff(lanes_history) != 0).astype(jnp.float32))
+    return {"mean_power_mw": jnp.mean(powers),
+            "reconfig_nj": switches * PHOTONIC_POWER.pcmc_reconfig_nj,
+            "mean_lanes": jnp.mean(lanes_history.astype(jnp.float32))}

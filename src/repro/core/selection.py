@@ -1,0 +1,150 @@
+"""Adaptive gateway selection (§3.4, Fig. 8).
+
+Routing an inter-chiplet packet takes three steps: (1) source router ->
+source gateway, (2) source gateway -> destination gateway over the photonic
+interposer, (3) destination gateway -> destination router. The source router
+only knows its *local* active-gateway count g_src; the source gateway knows
+g_dst of the destination chiplet. Selection decisions are design-time tables
+(one per activation level), exactly as §3.4 prescribes, rebuilt here
+programmatically:
+
+  * routers are partitioned into balanced groups of R_g = R / g per gateway,
+    each group containing the routers nearest to its gateway (Fig. 8 a-d),
+  * the destination table picks, for each (g_dst, dest_router), the active
+    gateway minimizing gateway->router hop count subject to the same balance.
+
+Tables are small numpy constants (computed once per topology); runtime
+lookups are jnp gathers, so per-packet selection is vmappable inside the
+simulator and differentiable-free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.constants import NETWORK, NetworkConfig
+
+
+def default_gateway_positions(cfg: NetworkConfig = NETWORK) -> np.ndarray:
+    """Gateway-attached router coordinates on the chiplet mesh.
+
+    Placement follows the edge-distributed scheme of [29]/Fig. 8d: gateways
+    sit on distinct edges so that consecutive activation levels keep them
+    maximally spread. Activation order is the row order of this array.
+    """
+    mx, my = cfg.mesh_x, cfg.mesh_y
+    pos = np.array([
+        [1, 0],                 # G1: south edge
+        [mx - 2, my - 1],       # G2: north edge (opposite side for g=2)
+        [0, my - 2],            # G3: west edge
+        [mx - 1, 1],            # G4: east edge
+    ], dtype=np.int32)
+    return pos[: cfg.max_gateways_per_chiplet]
+
+
+def _router_coords(cfg: NetworkConfig) -> np.ndarray:
+    xs, ys = np.meshgrid(np.arange(cfg.mesh_x), np.arange(cfg.mesh_y),
+                         indexing="ij")
+    return np.stack([xs.ravel(), ys.ravel()], axis=-1).astype(np.int32)
+
+
+def hop_count(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """XY (dimension-ordered) routing hop count on the mesh — the DeFT [22]
+    intra-chiplet distance metric (deadlock-freedom does not change hops)."""
+    return np.abs(a[..., 0] - b[..., 0]) + np.abs(a[..., 1] - b[..., 1])
+
+
+def _balanced_assignment(routers: np.ndarray, gw_pos: np.ndarray,
+                         capacity: int) -> np.ndarray:
+    """Greedy balanced nearest-gateway partition.
+
+    Sorts (router, gateway) pairs by hop distance and assigns greedily under a
+    per-gateway capacity of ceil(R/g) — the R_g = R/g_c balance rule of §3.4.
+    Deterministic; ties broken by (distance, router id, gateway id).
+    """
+    n_r, n_g = len(routers), len(gw_pos)
+    dist = hop_count(routers[:, None, :], gw_pos[None, :, :])  # [R, G]
+    order = sorted(((dist[r, g], r, g) for r in range(n_r) for g in range(n_g)))
+    assign = np.full((n_r,), -1, dtype=np.int32)
+    load = np.zeros((n_g,), dtype=np.int32)
+    for d, r, g in order:
+        if assign[r] == -1 and load[g] < capacity:
+            assign[r] = g
+            load[g] += 1
+    # Any leftovers (capacity exhausted by ties) -> least-loaded gateway.
+    for r in range(n_r):
+        if assign[r] == -1:
+            g = int(np.argmin(load))
+            assign[r] = g
+            load[g] += 1
+    return assign
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionTables:
+    """Design-time tables, one slice per activation level g in 1..G.
+
+    src_map:  [G, R] int  — source gateway index for each router when g
+                            gateways are active (entries < g).
+    dst_map:  [G, R] int  — destination gateway for each destination router.
+    src_hops: [G]  float  — mean router->gateway hops under src_map.
+    dst_hops: [G]  float  — mean gateway->router hops under dst_map.
+    gw_pos:   [Gmax, 2]   — gateway coordinates (activation order).
+    """
+    src_map: np.ndarray
+    dst_map: np.ndarray
+    src_hops: np.ndarray
+    dst_hops: np.ndarray
+    gw_pos: np.ndarray
+
+    def as_jax(self) -> dict:
+        return {"src_map": jnp.asarray(self.src_map),
+                "dst_map": jnp.asarray(self.dst_map),
+                "src_hops": jnp.asarray(self.src_hops),
+                "dst_hops": jnp.asarray(self.dst_hops)}
+
+
+def build_selection_tables(cfg: NetworkConfig = NETWORK) -> SelectionTables:
+    routers = _router_coords(cfg)
+    gw_pos = default_gateway_positions(cfg)
+    n_r = len(routers)
+    g_max = cfg.max_gateways_per_chiplet
+
+    src_map = np.zeros((g_max, n_r), dtype=np.int32)
+    dst_map = np.zeros((g_max, n_r), dtype=np.int32)
+    src_hops = np.zeros((g_max,), dtype=np.float32)
+    dst_hops = np.zeros((g_max,), dtype=np.float32)
+
+    for g in range(1, g_max + 1):
+        cap = int(np.ceil(n_r / g))
+        active_pos = gw_pos[:g]
+        assign = _balanced_assignment(routers, active_pos, cap)
+        src_map[g - 1] = assign
+        dst_map[g - 1] = assign      # step-3 tables share the balance rule
+        d = hop_count(routers, active_pos[assign])
+        src_hops[g - 1] = float(d.mean())
+        dst_hops[g - 1] = float(d.mean())
+
+    return SelectionTables(src_map=src_map, dst_map=dst_map,
+                           src_hops=src_hops, dst_hops=dst_hops,
+                           gw_pos=gw_pos)
+
+
+def select_source_gateway(tables: dict, router: jnp.ndarray,
+                          g_src: jnp.ndarray) -> jnp.ndarray:
+    """Step-1 selection: local table lookup (router only knows g_src)."""
+    return tables["src_map"][g_src - 1, router]
+
+
+def select_dest_gateway(tables: dict, dest_router: jnp.ndarray,
+                        g_dst: jnp.ndarray) -> jnp.ndarray:
+    """Step-2 selection at the source gateway (knows g_dst, §3.4)."""
+    return tables["dst_map"][g_dst - 1, dest_router]
+
+
+def mean_access_hops(tables: dict, g: jnp.ndarray) -> jnp.ndarray:
+    """Mean router<->gateway hop count at activation level g (vectorized)."""
+    return tables["src_hops"][jnp.maximum(g, 1) - 1]

@@ -1,0 +1,261 @@
+"""Epoch-level 2.5D network simulator (Level 1, DESIGN.md §3).
+
+Simulates the four compared interposer architectures (§4.1) over a traffic
+trace, one `lax.scan` step per reconfiguration interval:
+
+  * RESIPI      — dynamic gateways (Eqs. 5-7), 4 wavelengths, PCM gating
+  * RESIPI_ALL  — ReSiPI datapath with all gateways always active (Fig. 11)
+  * PROWAVES    — 1 gateway/chiplet, dynamic wavelength count [16]
+  * AWGR        — 4 gateways/chiplet static, 1 wavelength/port, 1.8 dB loss [8]
+
+Each step: traffic -> per-gateway load (selection tables) -> latency
+(noc.NocModel) -> power (photonics.interposer_power_mw) -> controller update.
+Energy is reported as power x mean-packet-latency (per-packet service-energy
+proxy; see EXPERIMENTS.md §Fig11 note) — consistent with the paper where the
+-53% energy claim is the product of the -37% latency and -25% power claims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import photonics
+from repro.core.constants import (AWGR_WAVELENGTHS, NETWORK,
+                                  PROWAVES_MAX_WAVELENGTHS,
+                                  PROWAVES_MIN_WAVELENGTHS,
+                                  RESIPI_WAVELENGTHS, NetworkConfig,
+                                  PHOTONIC_POWER)
+from repro.core.gateway_controller import (ControllerConfig, ControllerState,
+                                           epoch_step)
+from repro.core.noc import NocModel, uniform_mesh_mean_hops
+from repro.core.selection import build_selection_tables, mean_access_hops
+
+
+class Arch(enum.Enum):
+    RESIPI = "resipi"
+    RESIPI_ALL = "resipi_all"
+    PROWAVES = "prowaves"
+    AWGR = "awgr"
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    arch: Arch = Arch.RESIPI
+    cfg: NetworkConfig = NETWORK
+    ctl: ControllerConfig = ControllerConfig()
+    noc: NocModel = NocModel()
+    wavelengths: int = RESIPI_WAVELENGTHS
+    # PROWAVES wavelength controller: multiplicative increase/decrease with
+    # utilization hysteresis (reactive approximation of [16]'s epoch policy).
+    prowaves_rho_hi: float = 0.5
+    prowaves_rho_lo: float = 0.30
+
+    def with_arch(self, arch: Arch) -> "SimConfig":
+        w = {Arch.RESIPI: RESIPI_WAVELENGTHS,
+             Arch.RESIPI_ALL: RESIPI_WAVELENGTHS,
+             Arch.PROWAVES: PROWAVES_MAX_WAVELENGTHS,
+             Arch.AWGR: 1}[arch]
+        # PROWAVES ships 32-flit gateway buffers (4x ReSiPI, Table 1): deeper
+        # buffers push the backpressure knee out.
+        noc = dataclasses.replace(self.noc,
+                                  buffer_sat=0.65 if arch == Arch.PROWAVES
+                                  else self.noc.buffer_sat)
+        return dataclasses.replace(self, arch=arch, wavelengths=w, noc=noc)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SimState:
+    ctl: ControllerState          # gateway controller (ReSiPI)
+    wavelengths: jax.Array        # [C] PROWAVES per-chiplet active lambdas
+    prev_active: jax.Array        # [N_total] previous gateway activity
+
+
+def _activity_mask(g: jax.Array, sim: SimConfig) -> jax.Array:
+    """Expand per-chiplet g into the global gateway-chain activity mask.
+
+    Chain layout: C chiplets x G gateway slots (activation order), then the
+    2 memory-controller gateways, which are always active (Table 1).
+    """
+    gmax = sim.cfg.max_gateways_per_chiplet
+    slots = jnp.arange(gmax)[None, :] < g[:, None]          # [C, G]
+    mem = jnp.ones((sim.cfg.memory_gateways,), bool)
+    return jnp.concatenate([slots.reshape(-1), mem])
+
+
+def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
+                      ext_load: jax.Array, mem_load: jax.Array,
+                      int_load: jax.Array, ext_frac: jax.Array,
+                      sim: SimConfig, tables: dict) -> dict:
+    """Latency/load metrics for one interval given activity (g, lambda)."""
+    noc = sim.noc
+    # Per-gateway load after the Fig. 8 balanced selection. ext traffic of a
+    # chiplet spreads over its g active gateways; memory traffic over the 2
+    # memory gateways.
+    gw_load = ext_load / jnp.maximum(g.astype(jnp.float32), 1.0)       # [C]
+    mem_gw_load = mem_load / sim.cfg.memory_gateways
+
+    src_hops = mean_access_hops(tables, g)                             # [C]
+    # Destination side: packets land on a uniformly random other chiplet;
+    # the destination hop count mixes the other chiplets' activation levels.
+    dst_hops = jnp.mean(src_hops) * jnp.ones_like(src_hops)
+
+    inter_lat = noc.inter_chiplet_latency(gw_load, wavelengths,
+                                          src_hops, dst_hops)          # [C]
+    mem_lat = noc.inter_chiplet_latency(mem_gw_load, wavelengths
+                                        if wavelengths.ndim == 0
+                                        else jnp.mean(wavelengths),
+                                        jnp.mean(src_hops), 1.0)
+    mesh_hops = uniform_mesh_mean_hops(sim.cfg)
+    link_load = int_load * sim.cfg.packet_flits / (2.0 * sim.cfg.mesh_x)
+    intra_lat = noc.mesh_latency(jnp.float32(mesh_hops), link_load)    # [C]
+
+    # Traffic-weighted average packet latency across chiplets + memory.
+    w_ext = ext_load * (1.0 - jnp.mean(mem_load) * 0.0)
+    tot_ext = jnp.sum(w_ext) + 1e-9
+    tot_int = jnp.sum(int_load) + 1e-9
+    tot_mem = mem_load + 1e-9
+    lat = (jnp.sum(inter_lat * w_ext) + jnp.sum(intra_lat * int_load)
+           + mem_lat * tot_mem) / (tot_ext + tot_int + tot_mem)
+    return {"latency": lat, "gw_load": gw_load,
+            "inter_latency": inter_lat,
+            "mean_inter_latency": jnp.sum(inter_lat * w_ext) / tot_ext,
+            "saturated": jnp.any(noc.saturated(gw_load, wavelengths))}
+
+
+def _prowaves_update(lam: jax.Array, inter_latency: jax.Array,
+                     gw_load: jax.Array, sim: SimConfig) -> jax.Array:
+    """PROWAVES wavelength adaptation: latency-target driven [16].
+
+    PROWAVES picks the wavelength count that keeps the experienced network
+    delay under a target derived from the zero-load latency. When the single
+    gateway's electronic port is the bottleneck, extra wavelengths cannot
+    reduce delay, so the controller ratchets to the maximum and stays there
+    (the Fig. 12.d behavior) — power burns while latency stays high.
+    Multiplicative up / down with hysteresis reproduces the ~5-interval
+    instability on load transitions reported in §4.5.
+    """
+    base = sim.noc.inter_chiplet_latency(
+        jnp.float32(1e-4), jnp.float32(PROWAVES_MAX_WAVELENGTHS),
+        jnp.float32(2.5), jnp.float32(2.5))
+    s = sim.noc.serialization_cycles(lam)
+    rho_opt = gw_load * s
+    lam_up = jnp.minimum(lam * 2, PROWAVES_MAX_WAVELENGTHS)
+    lam_dn = jnp.maximum(lam // 2, PROWAVES_MIN_WAVELENGTHS)
+    hot = inter_latency > 1.5 * base
+    cold = (inter_latency < 1.3 * base) & (rho_opt < sim.prowaves_rho_lo)
+    return jnp.where(hot, lam_up, jnp.where(cold, lam_dn, lam))
+
+
+def make_step(sim: SimConfig, tables: dict):
+    """Build the per-interval scan body for the chosen architecture."""
+    cfg, ctl_cfg = sim.cfg, sim.ctl
+    interval = float(cfg.reconfig_interval_cycles)
+    n_total = cfg.total_gateways
+
+    def step(state: SimState, tr) -> Tuple[SimState, dict]:
+        ext, mem, intra, ext_frac = tr
+        if sim.arch in (Arch.RESIPI, Arch.RESIPI_ALL):
+            g = state.ctl.g
+            lam = jnp.float32(sim.wavelengths)
+        elif sim.arch == Arch.PROWAVES:
+            g = jnp.ones((cfg.n_chiplets,), jnp.int32)
+            lam = state.wavelengths.astype(jnp.float32)
+        else:  # AWGR: all gateways, 1 lambda per port
+            g = jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
+                         jnp.int32)
+            lam = jnp.float32(1.0)
+
+        m = _interval_metrics(g, lam, ext, mem, intra, ext_frac, sim, tables)
+
+        # --- power ---------------------------------------------------------
+        active = _activity_mask(g, sim)
+        if sim.arch == Arch.PROWAVES:
+            # 6 lit gateways (1/chiplet + 2 memory), per-chiplet lambdas.
+            n_pw = cfg.n_chiplets + cfg.memory_gateways
+            lam_mem = jnp.full((cfg.memory_gateways,),
+                               jnp.mean(state.wavelengths.astype(jnp.float32)))
+            per_gw_lam = jnp.concatenate(
+                [state.wavelengths.astype(jnp.float32), lam_mem])
+            pw = photonics.interposer_power_mw(
+                jnp.ones((n_pw,), bool), per_gw_lam,
+                n_gateways=n_pw, mode="wdm")
+        elif sim.arch == Arch.AWGR:
+            pw = photonics.interposer_power_mw(
+                active, jnp.float32(AWGR_WAVELENGTHS) / n_total,
+                n_gateways=n_total,
+                loss_db=PHOTONIC_POWER.awgr_loss_db, mode="static")
+        else:
+            pw = photonics.interposer_power_mw(
+                active, jnp.float32(sim.wavelengths),
+                n_gateways=n_total, mode="pcm")
+
+        # --- controller update ----------------------------------------------
+        reconf_nj = jnp.float32(0.0)
+        if sim.arch == Arch.RESIPI:
+            packets = ext * interval
+            new_ctl, rec = epoch_step(state.ctl, packets, interval, ctl_cfg)
+            new_active = _activity_mask(new_ctl.g, sim)
+            reconf_nj = photonics.reconfig_energy_nj(active, new_active)
+            new_state = SimState(ctl=new_ctl, wavelengths=state.wavelengths,
+                                 prev_active=new_active)
+        elif sim.arch == Arch.PROWAVES:
+            lam_new = _prowaves_update(state.wavelengths,
+                                       m["inter_latency"], m["gw_load"], sim)
+            new_state = SimState(ctl=state.ctl, wavelengths=lam_new,
+                                 prev_active=active)
+        else:
+            new_state = SimState(ctl=state.ctl, wavelengths=state.wavelengths,
+                                 prev_active=active)
+
+        # energy proxy: mW * cycles-per-packet -> pJ-scale unit (model units)
+        energy = pw["total_mw"] * m["latency"]
+        rec = {"latency": m["latency"], "power_mw": pw["total_mw"],
+               "laser_mw": pw["laser_mw"], "energy": energy,
+               "reconfig_nj": reconf_nj,
+               "g": g, "wavelengths": lam * jnp.ones((cfg.n_chiplets,)),
+               "gw_load": m["gw_load"], "saturated": m["saturated"]}
+        return new_state, rec
+
+    return step
+
+
+def simulate(trace: dict, sim: SimConfig) -> dict:
+    """Run a full trace; returns per-interval records + summary scalars."""
+    tables = build_selection_tables(sim.cfg).as_jax()
+    cfg = sim.cfg
+    state0 = SimState(
+        ctl=ControllerState.init(cfg.n_chiplets, sim.ctl),
+        wavelengths=jnp.full((cfg.n_chiplets,), PROWAVES_MAX_WAVELENGTHS
+                             if sim.arch == Arch.PROWAVES else
+                             sim.wavelengths, jnp.int32),
+        prev_active=_activity_mask(
+            jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
+                     jnp.int32), sim))
+
+    xs = (trace["ext_load"], trace["mem_load"], trace["int_load"],
+          jnp.broadcast_to(trace["ext_frac"], trace["mem_load"].shape))
+    step = make_step(sim, tables)
+    _, recs = jax.lax.scan(step, state0, xs)
+
+    summary = {
+        "mean_latency": jnp.mean(recs["latency"]),
+        "mean_power_mw": jnp.mean(recs["power_mw"]),
+        "mean_energy": jnp.mean(recs["energy"]),
+        "mean_gateways": jnp.mean(jnp.sum(recs["g"], axis=1)),
+        "mean_wavelengths": jnp.mean(recs["wavelengths"]),
+        "saturated_frac": jnp.mean(recs["saturated"].astype(jnp.float32)),
+        "total_reconfig_nj": jnp.sum(recs["reconfig_nj"]),
+    }
+    return {"records": recs, "summary": summary}
+
+
+def simulate_all_archs(trace: dict, base: SimConfig = SimConfig()) -> dict:
+    out = {}
+    for arch in Arch:
+        out[arch.value] = simulate(trace, base.with_arch(arch))["summary"]
+    return out

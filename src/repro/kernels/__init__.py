@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+flash_attention — blockwise softmax attention (prefill path)
+ssd_scan        — Mamba2 SSD intra-chunk compute (the roofline memory fix)
+noc_step        — flit-level NoC router sim (Fig. 13 residency)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes with
+assert_allclose. Kernels run interpret=True on CPU, compiled on TPU.
+"""

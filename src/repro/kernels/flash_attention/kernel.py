@@ -1,0 +1,125 @@
+"""FlashAttention Pallas TPU kernel.
+
+Schedule: grid (batch, heads, q_blocks, kv_blocks) — TPU grids execute
+sequentially with the last dimension innermost, so the running-softmax
+state (m, l, acc) lives in VMEM scratch that persists across the kv_block
+iterations of one q_block. Block shapes are BlockSpec-tiled into VMEM;
+matmul dims are kept multiples of the 128-wide MXU tile by construction
+(block_q/block_kv default 128/256, head_dim padded by the wrapper).
+
+Causal masking compares absolute positions derived from program_ids, and
+whole kv-blocks strictly above the diagonal are skipped via @pl.when.
+
+Validated in interpret mode against ref.reference_attention (also the jnp
+path used by the models at trace time — kernels/ops.py `flash_attention`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scratch, l_scratch, acc_scratch,
+                  *, scale: float, causal: bool,
+                  block_q: int, block_kv: int, n_kv_blocks: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bkv, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bkv, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                   # [bq, bkv]
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            k_pos = kj * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scratch[...]                         # [bq, 1]
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                          # [bq, bkv]
+        alpha = jnp.exp(m_prev - m_new)                 # [bq, 1]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scratch[...] = (acc_scratch[...] * alpha
+                            + jax.lax.dot_general(
+                                p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32))
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+
+    if causal:
+        # Skip kv blocks entirely above the causal diagonal.
+        @pl.when(kj * block_kv <= qi * block_q + block_q - 1)
+        def _():
+            _compute()
+    else:
+        _compute()
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scratch[...]
+        o_ref[0, 0] = (acc_scratch[...]
+                       / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, causal: bool = True,
+                           block_q: int = 128, block_kv: int = 256,
+                           scale: float | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """q,k,v: [B, H, S, d] (kv already repeated to H). Returns [B, H, S, d].
+
+    S must divide by the block sizes (the ops.py wrapper pads). `scale`
+    defaults to 1/sqrt(d) of the *given* d — the wrapper passes the
+    pre-padding head dim.
+    """
+    b, h, s_q, d = q.shape
+    s_kv = k.shape[2]
+    assert s_q % block_q == 0 and s_kv % block_kv == 0, (s_q, s_kv)
+    nq, nkv = s_q // block_q, s_kv // block_kv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_kv=block_kv, n_kv_blocks=nkv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, kj: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bi, hi, qi, kj: (bi, hi, kj, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bi, hi, qi, kj: (bi, hi, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, kj: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        *, causal: bool = True) -> jax.Array:
+    """Naive softmax attention. q,k,v: [B, H, S, d] -> [B, H, S, d]."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        s_q, s_kv = s.shape[-2:]
+        mask = (jnp.arange(s_q)[:, None] >= jnp.arange(s_kv)[None, :])
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

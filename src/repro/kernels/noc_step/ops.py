@@ -1,0 +1,87 @@
+"""Wrapper: build routing topology from selection tables + run the flit sim.
+
+`simulate_residency(app_load, g_active, wavelengths)` produces the Fig. 13
+per-router residency map for one chiplet under a given gateway activation —
+used by benchmarks/fig13_residency.py for both ReSiPI (g=2..4, W=4) and
+PROWAVES (g=1, W=16, port-limited drain).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import NETWORK, NetworkConfig
+from repro.core.selection import (build_selection_tables,
+                                  default_gateway_positions, _router_coords)
+from repro.kernels.noc_step.kernel import noc_run_pallas
+
+
+def build_topology(g_active: int, wavelengths: int,
+                   cfg: NetworkConfig = NETWORK
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(next_mat [R+g, R+g], drain [R+g], buf [R+g], gw_router_idx [g]).
+
+    Mesh routers 0..R-1 route flits via XY toward their assigned gateway
+    (Fig. 8 balanced partition); a gateway sink node is appended per active
+    gateway. Sink drain = min(optical serialization, electronic port) rate.
+    """
+    tables = build_selection_tables(cfg)
+    assign = tables.src_map[g_active - 1]            # [R] -> gateway id
+    routers = _router_coords(cfg)
+    gw_pos = default_gateway_positions(cfg)[:g_active]
+    r = len(routers)
+    n = r + g_active
+    next_mat = np.zeros((n, n), np.float32)
+    mesh_x = cfg.mesh_x
+
+    def rid(x, y):
+        return x * cfg.mesh_y + y
+
+    for i, (x, y) in enumerate(routers):
+        gx, gy = gw_pos[assign[i]]
+        if x == gx and y == gy:
+            next_mat[i, r + assign[i]] = 1.0         # eject into gateway
+        elif x != gx:                                 # XY: x first
+            next_mat[i, rid(x + np.sign(gx - x), y)] = 1.0
+        else:
+            next_mat[i, rid(x, y + np.sign(gy - y))] = 1.0
+
+    # Gateway sink service: optical lanes vs the 1-flit/cycle electronic
+    # port — the min is what the chiplet actually sustains (§3.1 insight).
+    optical = wavelengths * cfg.link_gbps_per_wavelength / (
+        cfg.flit_bits * cfg.noc_freq_ghz)
+    drain = np.zeros((n,), np.float32)
+    drain[r:] = min(optical, 1.0)
+    buf = np.full((n,), float(cfg.router_buffer_flits), np.float32)
+    buf[r:] = float(cfg.gateway_buffer_flits)
+    gw_idx = np.array([rid(*gw_pos[k]) for k in range(g_active)])
+    return next_mat, drain, buf, gw_idx
+
+
+def simulate_residency(ext_load: float, g_active: int, wavelengths: int,
+                       cycles: int = 4096, seed: int = 0,
+                       cfg: NetworkConfig = NETWORK, interpret: bool = True):
+    """Returns (mean residency per router [4,4], drained flits).
+
+    ext_load: chiplet-level inter-chiplet packet rate (pkts/cycle); packets
+    arrive as `packet_flits`-sized bursts Poisson-thinned over routers.
+    """
+    r = cfg.routers_per_chiplet
+    next_mat, drain, buf, _ = build_topology(g_active, wavelengths, cfg)
+    n = next_mat.shape[0]
+    key = jax.random.PRNGKey(seed)
+    per_router = ext_load / r
+    arr = (jax.random.uniform(key, (cycles, r)) <
+           per_router).astype(jnp.float32) * cfg.packet_flits
+    arrivals = jnp.concatenate(
+        [arr, jnp.zeros((cycles, n - r), jnp.float32)], axis=1)
+    resid, occ, drained = noc_run_pallas(
+        arrivals, jnp.asarray(next_mat), jnp.asarray(drain),
+        jnp.asarray(buf), interpret=interpret)
+    mean_resid = resid[:r] / cycles
+    return (np.asarray(mean_resid).reshape(cfg.mesh_x, cfg.mesh_y),
+            float(jnp.sum(drained)))

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the NoC flit kernel (lax.scan over cycles)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
+                      drain_rate: jax.Array, buf_cap: jax.Array,
+                      *, link_rate: float = 1.0):
+    """Same contract as noc_run_pallas."""
+    r = arrivals.shape[1]
+    nmat = next_mat.astype(jnp.float32)
+    is_router = jnp.sign(jnp.sum(nmat, axis=1))
+    drain = drain_rate.astype(jnp.float32)
+    buf = buf_cap.astype(jnp.float32)
+
+    def cycle(carry, arr):
+        occ, resid, drained = carry
+        occ = occ + arr.astype(jnp.float32)
+        send = jnp.minimum(occ, link_rate) * is_router
+        inflow_want = send @ nmat
+        space = jnp.maximum(buf - occ, 0.0)
+        scale_dst = jnp.where(inflow_want > 0.0,
+                              jnp.minimum(1.0, space / jnp.maximum(
+                                  inflow_want, 1e-9)), 0.0)
+        scale_src = nmat @ scale_dst
+        moved = send * scale_src
+        inflow = moved @ nmat
+        occ = occ - moved + inflow
+        sunk = jnp.minimum(occ, drain)
+        occ = occ - sunk
+        return (occ, resid + occ, drained + sunk), None
+
+    zeros = jnp.zeros((r,), jnp.float32)
+    (occ, resid, drained), _ = jax.lax.scan(
+        cycle, (zeros, zeros, zeros), arrivals)
+    return resid, occ, drained

@@ -1,0 +1,107 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+Computes, per (batch, chunk, head) grid cell, the quadratic-within-chunk
+part of the SSD recurrence plus the chunk summary state:
+
+    y[q] = sum_{j<=q} C_q . B_j  * exp(cum[q]-cum[j]) * dt_j * x_j
+    S    = sum_j (exp(cum[-1]-cum[j]) * dt_j) * outer(x_j, B_j)
+
+The [Q, Q] decay matrix lives only in VMEM (Q=chunk_len, default 128-256):
+HBM traffic is O(Q (P+N)) per cell instead of the O(Q^2 H) the XLA path
+materializes — this kernel is the §Perf fix for the SSD memory-term
+bottleneck found in the roofline pass. The inter-chunk state scan stays in
+jnp (tiny, sequential).
+
+Grid: (B, NC, H) — heads innermost so B/C blocks (shared per group) stay
+VMEM-resident across head iterations of one group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, s_ref, *, chunk: int):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)       # [Q, P]
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)     # [Q, 1] -> [Q]
+    dt = dt[:, 0]
+    a = a_ref[0].astype(jnp.float32)                # scalar head decay
+    b = b_ref[0, 0, :, 0].astype(jnp.float32)       # [Q, N]
+    c = c_ref[0, 0, :, 0].astype(jnp.float32)       # [Q, N]
+
+    da = dt * a                                     # [Q]
+    cum = jnp.cumsum(da)                            # [Q]
+
+    # Intra-chunk: scores [Q, Q] = (C B^T) o decay o dt_j, lower-triangular.
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    seg = jnp.minimum(cum[:, None] - cum[None, :], 0.0)  # [Q, Q]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    w = jnp.where(iq >= ik, scores * jnp.exp(seg) * dt[None, :], 0.0)
+    y_ref[0, 0, :, 0] = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    # Chunk summary state: S [P, N] = sum_j w_j * outer(x_j, B_j).
+    decay_end = jnp.exp(cum[-1] - cum) * dt         # [Q]
+    xw = x * decay_end[:, None]                     # [Q, P]
+    s_ref[0, 0, 0] = jax.lax.dot_general(
+        xw, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(s_ref.dtype)
+
+
+def ssd_intra_chunk_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
+                           b_in: jax.Array, c_in: jax.Array,
+                           *, interpret: bool = True):
+    """Per-chunk SSD compute.
+
+    Args:
+      x:    [B, NC, Q, H, P]
+      dt:   [B, NC, Q, H]   (already softplus'd)
+      a:    [H]             (negative decay rates)
+      b_in: [B, NC, Q, H, N] (groups pre-broadcast to heads)
+      c_in: [B, NC, Q, H, N]
+
+    Returns:
+      y_intra: [B, NC, Q, H, P] f32
+      s_chunk: [B, NC, H, P, N] f32
+    """
+    bsz, nc, q, h, p = x.shape
+    n = b_in.shape[-1]
+
+    kernel = functools.partial(_ssd_kernel, chunk=q)
+    # layout: head-major blocks; dt gets a trailing singleton for 2D blocks
+    dt_e = dt[..., None]
+
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(bsz, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1, 1),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1,), lambda bi, ci, hi: (hi,)),
+            pl.BlockSpec((1, 1, q, 1, n),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, q, 1, n),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p),
+                         lambda bi, ci, hi: (bi, ci, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n),
+                         lambda bi, ci, hi: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt_e, a, b_in, c_in)
+    return y, s

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (mirrors
+repro.models.ssm.ssd_chunked's intra-chunk + summary-state math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference_intra_chunk(x, dt, a, b_in, c_in):
+    """Same contract as ssd_intra_chunk_pallas (b_in/c_in head-broadcast)."""
+    dtf = dt.astype(jnp.float32)
+    da = dtf * a.astype(jnp.float32)                  # [B,NC,Q,H]
+    cum = jnp.cumsum(da, axis=2)
+    seg = jnp.minimum(cum[:, :, :, None, :] - cum[:, :, None, :, :], 0.0)
+    q = x.shape[2]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", c_in.astype(jnp.float32),
+                        b_in.astype(jnp.float32))
+    w = scores * decay * dtf[:, :, None, :, :]
+    y = jnp.einsum("bcqkh,bckhp->bcqhp", w, x.astype(jnp.float32))
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtf
+    s = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn", decay_end,
+                   x.astype(jnp.float32), b_in.astype(jnp.float32))
+    return y, s

@@ -1,0 +1,284 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analyses.
+
+MUST be the very first two lines — before ANY other import — since jax locks
+the device count on first initialization:
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_NAMES, SHAPES, cell_applicable,  # noqa: E402
+                           get_config, shape_by_name)
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.launch import specs as S                              # noqa: E402
+from repro.models import get_model                               # noqa: E402
+from repro.models.params import partition_specs                  # noqa: E402
+from repro.sharding.rules import Rules, use_rules                # noqa: E402
+from repro.train.train_step import (abstract_train_state,        # noqa: E402
+                                    make_train_step, state_pspecs)
+from repro.launch.hlo_analysis import analyze_hlo                # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def collective_analysis(hlo_text: str, n_devices: int) -> dict:
+    """Per-device wire bytes by collective type, parsed from compiled HLO.
+
+    Wire-byte factors (per device, bidirectional-ring model):
+      all-reduce:        2 (n-1)/n * buffer      (result shape == buffer)
+      all-gather:        (n-1)/n  * result       (result is the gathered buf)
+      reduce-scatter:    (n-1)    * result       (input n x result)
+      all-to-all:        (n-1)/n  * buffer
+      collective-permute: 1       * buffer
+    """
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shape"))
+        n = max(_group_size(line, n_devices), 1)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * nbytes
+        elif op == "all-gather":
+            wire = (n - 1) / n * nbytes
+        elif op == "reduce-scatter":
+            wire = float(n - 1) * nbytes
+        elif op == "all-to-all":
+            wire = (n - 1) / n * nbytes
+        else:
+            wire = float(nbytes)
+        out[op] += wire
+        out["count"] += 1
+    out["total_wire_bytes"] = sum(out[k] for k in
+                                  ("all-reduce", "all-gather",
+                                   "reduce-scatter", "all-to-all",
+                                   "collective-permute"))
+    return out
+
+
+def to_shardings(pspec_tree, mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        pspec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rule_overrides: dict | None = None,
+               accum: int = 1):
+    """Build (lowered, n_devices) for one dry-run cell."""
+    cfg = get_config(arch)
+    cell = shape_by_name(shape_name)
+    ok, reason = cell_applicable(cfg, cell)
+    if not ok:
+        return None, reason
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = Rules(mesh, overrides=rule_overrides)
+    model = get_model(cfg)
+
+    with use_rules(rules):
+        if cell.kind == "train":
+            step = make_train_step(model, accum=accum)
+            state = abstract_train_state(model)
+            batch, batch_ps = S.batch_specs(cfg, cell, rules)
+            in_sh = (to_shardings(state_pspecs(model, rules), mesh),
+                     to_shardings(batch_ps, mesh))
+            fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(0,))
+            lowered = fn.lower(state, batch)
+        elif cell.kind == "prefill":
+            from repro.models.params import abstract_params
+            # serving runs bf16 weights (cast once at load, as in prod)
+            params = abstract_params(model.spec(), dtype=jnp.bfloat16)
+            batch, batch_ps = S.batch_specs(cfg, cell, rules)
+            param_ps = partition_specs(model.spec(), rules)
+            in_sh = (to_shardings(param_ps, mesh),
+                     to_shardings(batch_ps, mesh))
+            max_len = cell.seq_len
+
+            def prefill(p, b):
+                return model.prefill(p, b, max_len)
+
+            fn = jax.jit(prefill, in_shardings=in_sh)
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            from repro.models.params import abstract_params
+            params = abstract_params(model.spec(), dtype=jnp.bfloat16)
+            param_ps = partition_specs(model.spec(), rules)
+            tokens, tokens_ps = S.decode_tokens_specs(cfg, cell, rules)
+            caches, caches_ps = S.decode_cache_specs(cfg, cell, rules)
+            in_sh = (to_shardings(param_ps, mesh),
+                     to_shardings(tokens_ps, mesh),
+                     to_shardings(caches_ps, mesh))
+            fn = jax.jit(model.decode_step, in_shardings=in_sh,
+                         donate_argnums=(2,))
+            lowered = fn.lower(params, tokens, caches)
+    return (lowered, mesh.size), ""
+
+
+def analyze_cell(arch: str, shape_name: str, multi_pod: bool,
+                 rule_overrides: dict | None = None,
+                 accum: int = 1) -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "status": "ok"}
+    t0 = time.time()
+    try:
+        result, reason = lower_cell(arch, shape_name, multi_pod,
+                                    rule_overrides, accum)
+        if result is None:
+            rec["status"] = "skipped"
+            rec["reason"] = reason
+            return rec
+        lowered, n_dev = result
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device": int(ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {"flops_per_device": float(ca.get("flops", -1.0)),
+                       "bytes_accessed_per_device":
+                           float(ca.get("bytes accessed", -1.0))}
+        # Trip-count-corrected static analysis (XLA's cost_analysis counts
+        # every while body once — see launch/hlo_analysis.py).
+        corrected = analyze_hlo(compiled.as_text(), n_dev)
+        rec["corrected"] = {
+            "flops_per_device": corrected["flops_per_device"],
+            "bytes_per_device": corrected["bytes_per_device"]}
+        rec["collectives"] = corrected["collectives"]
+        rec["n_devices"] = n_dev
+    except Exception as e:  # record failures — they are bugs to fix
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def save_result(rec: dict, path: Path):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    data = {}
+    if path.exists():
+        data = json.loads(path.read_text())
+    key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+    data[key] = rec
+    path.write_text(json.dumps(data, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape cell or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(RESULTS_DIR / "dryrun.json"))
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--rules", default="default",
+                    choices=["default", "tp_only", "sp"],
+                    help="sharding-rule overlay (perf A/B comparisons)")
+    args = ap.parse_args()
+
+    from repro.sharding.rules import SP_OVERLAY, TP_ONLY_OVERLAY
+    overrides = {"default": None, "tp_only": TP_ONLY_OVERLAY,
+                 "sp": SP_OVERLAY}[args.rules]
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out = Path(args.out)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                print(f"[dryrun] {arch} x {shape} x {mesh_name} ...",
+                      flush=True)
+                rec = analyze_cell(arch, shape, mp, accum=args.accum,
+                                   rule_overrides=overrides)
+                save_result(rec, out)
+                status = rec["status"]
+                if status == "ok":
+                    mem = rec["memory"]["peak_per_device"] / 2**30
+                    fl = rec["cost"]["flops_per_device"]
+                    cw = rec["collectives"]["total_wire_bytes"] / 2**20
+                    print(f"  ok: peak {mem:.2f} GiB/dev, "
+                          f"{fl:.3g} flop/dev, wire {cw:.1f} MiB/dev "
+                          f"(lower {rec['lower_s']}s, "
+                          f"compile {rec['compile_s']}s)", flush=True)
+                elif status == "skipped":
+                    print(f"  skipped: {rec['reason']}", flush=True)
+                else:
+                    print(f"  ERROR: {rec['error']}", flush=True)
+
+    data = json.loads(out.read_text())
+    n_ok = sum(1 for r in data.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in data.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in data.values() if r["status"] == "error")
+    print(f"[dryrun] total: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

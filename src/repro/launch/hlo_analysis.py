@@ -1,0 +1,250 @@
+"""Static analysis of compiled HLO text — the dry-run 'profiler'.
+
+XLA's `compiled.cost_analysis()` counts each `while` body ONCE, so any
+scan-over-layers program under-reports FLOPs/bytes/collectives by ~n_layers.
+This module parses the HLO text into computations, extracts per-while
+`known_trip_count`s, and walks the call graph multiplying costs through
+nested loops. It produces:
+
+    flops            — 2 * numel(out) * contract_dim for every dot
+    bytes            — operand + result bytes of every non-fused op
+                       (fusion internals stay in-register and are skipped)
+    collective wire  — per-device bytes by collective type (ring model)
+
+All values are per-device (HLO text is the SPMD per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_info(shape_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Total bytes + [(dtype, dims)] parsed from a shape string."""
+    total = 0
+    shapes = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dlist = [int(d) for d in dims.split(",")] if dims else []
+        total += math.prod(dlist) * _DTYPE_BYTES[dtype] if dlist else \
+            _DTYPE_BYTES[dtype]
+        shapes.append((dtype, dlist))
+    return total, shapes
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    out_bytes: int
+    out_shape: List[int]
+    kind: str
+    line: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+    children: Optional[List[Tuple[str, float]]] = None  # (comp, multiplier)
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = {c: 0.0 for c in COLLECTIVES}
+        if self.children is None:
+            self.children = []
+
+
+def _split_type(rhs: str) -> Tuple[str, str]:
+    """Split an op RHS into (result type string, rest-with-opcode)."""
+    s = rhs.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[:i + 1], s[i + 1:].strip()
+        return s, ""
+    parts = s.split(None, 1)
+    if len(parts) == 2:
+        return parts[0], parts[1]
+    return s, ""
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def _wire_bytes(op: str, nbytes: int, n: int) -> float:
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * nbytes
+    if op == "all-gather":
+        return (n - 1) / n * nbytes
+    if op == "reduce-scatter":
+        return float(n - 1) * nbytes
+    if op == "all-to-all":
+        return (n - 1) / n * nbytes
+    return float(nbytes)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _dot_flops(rhs: str, shapes_by_name: Dict[str, List[int]],
+               out_shape: List[int]) -> float:
+    """2 * numel(out) * contracted elements (from lhs operand shape)."""
+    ops = _OPERANDS_RE.findall(rhs.split("(", 1)[1]) if "(" in rhs else []
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    contract = 1
+    if m and ops:
+        lhs_shape = shapes_by_name.get(ops[0], [])
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs_shape):
+                contract *= lhs_shape[int(d)]
+    return 2.0 * math.prod(out_shape or [0]) * contract
+
+
+def analyze_hlo(hlo: str, n_devices: int) -> dict:
+    comps = _split_computations(hlo)
+    costs: Dict[str, CompCost] = {}
+
+    for name, lines in comps.items():
+        cost = CompCost()
+        shapes_by_name: Dict[str, List[int]] = {}
+        out_bytes_by_name: Dict[str, int] = {}
+        parsed = []
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            op_name, rhs = m.group(1), m.group(2)
+            type_str, rest = _split_type(rhs)
+            nbytes, shapes = _shape_info(type_str)
+            dims = shapes[0][1] if shapes else []
+            shapes_by_name[op_name] = dims
+            out_bytes_by_name[op_name] = nbytes
+            parsed.append((op_name, rest, nbytes, dims, line))
+
+        for op_name, rhs, nbytes, dims, line in parsed:
+            km = re.match(r"([a-z][\w\-]*)\s*\(", rhs)
+            kind = km.group(1) if km else rhs.split("(")[0].strip()
+            # --- collectives
+            hit = next((c for c in COLLECTIVES
+                        if re.match(rf"{c}(-start)?$", kind)), None)
+            if hit:
+                n = _group_size(line, n_devices)
+                cost.coll[hit] += _wire_bytes(hit, nbytes, max(n, 1))
+            # --- dots
+            if kind == "dot":
+                cost.flops += _dot_flops(rhs, shapes_by_name, dims)
+            # --- while children
+            if kind == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", rhs)
+                cm = re.search(r"condition=%?([\w\.\-]+)", rhs)
+                tm = _TRIP_RE.search(line)
+                trip = float(tm.group(1)) if tm else 1.0
+                if bm:
+                    cost.children.append((bm.group(1), trip))
+                if cm:
+                    cost.children.append((cm.group(1), trip))
+            # --- fusion / call children (multiplier 1)
+            for ref in re.findall(r"(?:calls|to_apply|"
+                                  r"true_computation|false_computation)="
+                                  r"%?([\w\.\-]+)", rhs):
+                cost.children.append((ref, 1.0))
+            # --- bytes: approximate true HBM traffic as write-once-per-
+            # produced-buffer plus matmul reads. Counting every op's
+            # operands would double-count (each tensor once as producer
+            # output and once per consumer), and CPU HLO has far more
+            # fusion boundaries than TPU — so we count: outputs of compute
+            # ops that materialize buffers, plus dot operand reads (weight
+            # and activation streams into the MXU).
+            if kind in ("dot", "fusion", "convolution", "reduce", "sort",
+                        "scatter", "gather", "dynamic-slice",
+                        "dynamic-update-slice", "custom-call", "rng",
+                        "rng-bit-generator") or kind.startswith("all-") \
+                    or kind in ("reduce-scatter", "collective-permute"):
+                cost.bytes += nbytes
+            if kind == "dot" and "(" in rhs:
+                for ref in _OPERANDS_RE.findall(
+                        rhs[rhs.index("("):].split(")", 1)[0]):
+                    cost.bytes += out_bytes_by_name.get(ref, 0)
+        costs[name] = cost
+
+    # entry = computation containing a while or the one named like main
+    entry = next((n for n in comps if n.endswith("main") or
+                  n.startswith("main")), None)
+    if entry is None:
+        # fall back: computation that is no one's child
+        children = {c for cc in costs.values() for c, _ in cc.children}
+        roots = [n for n in comps if n not in children]
+        entry = roots[0] if roots else next(iter(comps))
+
+    memo: Dict[str, dict] = {}
+
+    def resolve(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        if name not in costs or depth > 50:
+            return {"flops": 0.0, "bytes": 0.0,
+                    **{c: 0.0 for c in COLLECTIVES}}
+        c = costs[name]
+        total = {"flops": c.flops, "bytes": c.bytes,
+                 **{k: v for k, v in c.coll.items()}}
+        for child, mult in c.children:
+            sub = resolve(child, depth + 1)
+            for k in total:
+                total[k] += mult * sub[k]
+        memo[name] = total
+        return total
+
+    total = resolve(entry)
+    coll_total = sum(total[c] for c in COLLECTIVES)
+    return {"flops_per_device": total["flops"],
+            "bytes_per_device": total["bytes"],
+            "collectives": {**{c: total[c] for c in COLLECTIVES},
+                            "total_wire_bytes": coll_total},
+            "entry": entry}

@@ -1,0 +1,21 @@
+"""Model registry: ModelConfig -> Model instance (uniform API)."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import DecoderLM, SSMLM, HybridLM
+from repro.models.encdec import EncDecLM
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return SSMLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family: {cfg.family}")
+
+
+__all__ = ["get_model", "DecoderLM", "SSMLM", "HybridLM", "EncDecLM"]

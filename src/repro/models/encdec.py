@@ -1,0 +1,185 @@
+"""Encoder-decoder model (seamless-m4t-large-v2).
+
+Encoder consumes precomputed modality-frontend embeddings (speech frames —
+the frontend itself is a stub per the assignment), decoder is a causal LM
+with cross-attention over encoder output. Cross-attention K/V are projected
+once per layer from the encoder memory and cached for decode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec, stack_specs
+from repro.models.transformer import chunked_cross_entropy
+from repro.sharding.rules import shard
+
+
+def enc_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def dec_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln_x": L.rmsnorm_spec(cfg.d_model),
+        "xattn": L.attention_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_enc = cfg.encoder_layers
+        self.n_dec = cfg.decoder_layers
+
+    def spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "frame_proj": {"w": ParamSpec((cfg.d_model, cfg.d_model),
+                                          ("model_d", None))},
+            "embed": L.embed_spec(cfg),
+            "encoder": stack_specs(enc_block_spec(cfg), self.n_enc),
+            "ln_enc": L.rmsnorm_spec(cfg.d_model),
+            "decoder": stack_specs(dec_block_spec(cfg), self.n_dec),
+            "ln_f": L.rmsnorm_spec(cfg.d_model),
+            "unembed": L.unembed_spec(cfg),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: [B, S_enc, D] precomputed frontend embeddings."""
+        cfg = self.cfg
+        x = jnp.einsum("bsd,dk->bsk", L.cast(frames),
+                       L.cast(params["frame_proj"]["w"]))
+        x = shard(x, "batch", "seq", None)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(xc, p_layer):
+            h = L.rmsnorm(p_layer["ln1"], xc, cfg.norm_eps)
+            attn, _ = L.attention(p_layer["attn"], h, cfg,
+                                  positions=positions, causal=False)
+            xc = xc + attn
+            h = L.rmsnorm(p_layer["ln2"], xc, cfg.norm_eps)
+            return shard(xc + L.mlp(p_layer["mlp"], h, cfg),
+                         "batch", "seq_outer", None), None
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return L.rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+    # -- decoder ---------------------------------------------------------------
+    def _project_memory(self, p_xattn, memory):
+        cfg = self.cfg
+        k = jnp.einsum("bsd,dgk->bsgk", memory, L.cast(p_xattn["wk"]))
+        v = jnp.einsum("bsd,dgk->bsgk", memory, L.cast(p_xattn["wv"]))
+        if cfg.use_bias:
+            k = k + L.cast(p_xattn["bk"])
+            v = v + L.cast(p_xattn["bv"])
+        return k, v
+
+    def _run_decoder(self, params, x, positions, memory=None,
+                     mem_kv=None, caches=None):
+        """memory: [B,S_enc,D] (training/prefill) or mem_kv: pre-projected
+        stacked (k, v) [L, B, S_enc, G, d] (decode)."""
+        cfg = self.cfg
+        b, s_enc = None, None
+        if memory is not None:
+            b, s_enc, _ = memory.shape
+            mem_pos = jnp.broadcast_to(
+                jnp.arange(s_enc, dtype=jnp.int32), (b, s_enc))
+        else:
+            b = x.shape[0]
+            s_enc = mem_kv[0].shape[2]
+            mem_pos = jnp.broadcast_to(
+                jnp.arange(s_enc, dtype=jnp.int32), (b, s_enc))
+
+        def body(xc, layer_in):
+            p_layer, cache_layer, mem_kv_layer = layer_in
+            h = L.rmsnorm(p_layer["ln1"], xc, cfg.norm_eps)
+            attn, new_cache = L.attention(
+                p_layer["attn"], h, cfg, positions=positions, causal=True,
+                cache=cache_layer)
+            xc = xc + attn
+            h = L.rmsnorm(p_layer["ln_x"], xc, cfg.norm_eps)
+            if mem_kv_layer is not None:
+                kv = mem_kv_layer
+            else:
+                kv = self._project_memory(p_layer["xattn"], memory)
+            xattn, _ = L.attention(p_layer["xattn"], h, cfg,
+                                   positions=positions, memory=kv,
+                                   memory_positions=mem_pos)
+            xc = xc + xattn
+            h = L.rmsnorm(p_layer["ln2"], xc, cfg.norm_eps)
+            return shard(xc + L.mlp(p_layer["mlp"], h, cfg),
+                         "batch", "seq_outer", None), new_cache
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, new_caches = jax.lax.scan(
+            body, x, (params["decoder"], caches, mem_kv))
+        return x, new_caches
+
+    # -- api -------------------------------------------------------------------
+    def train_loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        x = L.embed(params["embed"], batch["tokens"])
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _ = self._run_decoder(params, x, positions, memory=memory)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        sum_loss, sum_w = chunked_cross_entropy(
+            params["unembed"], x, batch["labels"], batch.get("loss_mask"),
+            real_vocab=cfg.real_vocab)
+        loss = sum_loss / jnp.maximum(sum_w, 1.0)
+        return loss, {"loss": loss}
+
+    def prefill(self, params, batch, max_len: int):
+        """Encode + decoder prefill. Returns ((kv_caches, mem_kv), logits)."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        x = L.embed(params["embed"], batch["tokens"])
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        caches = L.KVCache(
+            k=jnp.zeros((self.n_dec, b, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), L.COMPUTE_DTYPE),
+            v=jnp.zeros((self.n_dec, b, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), L.COMPUTE_DTYPE),
+            length=jnp.zeros((self.n_dec,), jnp.int32))
+        x, new_caches = self._run_decoder(params, x, positions,
+                                          memory=memory, caches=caches)
+        # Pre-project cross K/V once for decode (vmap over layers).
+        mem_kv = jax.vmap(self._project_memory, in_axes=(0, None))(
+            params["decoder"]["xattn"], memory)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x[:, -1:])[:, 0]
+        return (new_caches, mem_kv), logits
+
+    def decode_step(self, params, tokens, caches):
+        cfg = self.cfg
+        kv_caches, mem_kv = caches
+        x = L.embed(params["embed"], tokens)
+        b = x.shape[0]
+        pos = jnp.broadcast_to(kv_caches.length[0][None, None],
+                               (b, 1)).astype(jnp.int32)
+        x, new_caches = self._run_decoder(params, x, pos, mem_kv=mem_kv,
+                                          caches=kv_caches)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x)[:, 0]
+        return logits, (new_caches, mem_kv)

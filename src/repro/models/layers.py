@@ -1,0 +1,362 @@
+"""Core transformer layers: norms, RoPE, GQA attention (dense / blockwise
+flash / decode-with-cache), and MLPs. Pure functions over ParamSpec trees.
+
+Conventions: activations are bf16, accumulation f32, params f32 (cast at
+use). Tensor names: B batch, S/Q/K sequence, D d_model, H q-heads, G kv
+heads, d head_dim, F d_ff, V vocab.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.sharding.rules import shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((d,), ("model_d",), init="ones")}
+
+
+def rmsnorm(p, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return cast(y * p["scale"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., S, n, d]; positions: [..., S]."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, h, g = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("model_d", "heads", None)),
+        "wk": ParamSpec((d, g, hd), ("model_d", "kv", None)),
+        "wv": ParamSpec((d, g, hd), ("model_d", "kv", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "model_d"),
+                        fan_in_dims=(0, 1)),
+    }
+    if cfg.use_bias:
+        s.update({
+            "bq": ParamSpec((h, hd), ("heads", None), init="zeros"),
+            "bk": ParamSpec((g, hd), ("kv", None), init="zeros"),
+            "bv": ParamSpec((g, hd), ("kv", None), init="zeros"),
+            "bo": ParamSpec((d,), ("model_d",), init="zeros"),
+        })
+    return s
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    k = jnp.einsum("bsd,dgk->bsgk", x, cast(p["wk"]))
+    v = jnp.einsum("bsd,dgk->bsgk", x, cast(p["wv"]))
+    if cfg.use_bias:
+        q = q + cast(p["bq"])
+        k = k + cast(p["bk"])
+        v = v + cast(p["bv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv", None)
+    v = shard(v, "batch", "seq", "kv", None)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B,S,G,d] -> [B,S,H,d] by repeating each kv head H/G times."""
+    g = k.shape[2]
+    if g == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // g, axis=2)
+
+
+def _dense_attend(q, k, v, causal: bool, q_pos, k_pos) -> jax.Array:
+    """Materialized-scores attention for short sequences. [B,S,H,d] io."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = q_pos[:, :, None] >= k_pos[:, None, :]         # [B,Q,K]
+        scores = jnp.where(mask[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def _flash_attend(q, k, v, causal: bool, q_pos, k_pos,
+                  block_q: int, block_kv: int) -> jax.Array:
+    """Blockwise (FlashAttention-style) softmax in pure jnp.
+
+    Outer scan over query blocks, inner scan over KV blocks with running
+    (max, denom, acc). Never materializes [S, S]; this is what lets the
+    32k-token prefill lower within HBM. The Pallas kernel
+    (kernels/flash_attention) implements the same schedule for TPU; this
+    function is also its reference oracle.
+    """
+    b, s_q, h, hd = q.shape
+    s_kv = k.shape[1]
+    nq = -(-s_q // block_q)
+    nkv = -(-s_kv // block_kv)
+    pad_q = nq * block_q - s_q
+    pad_kv = nkv * block_kv - s_kv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pad_kv)), constant_values=2**30)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    qb = qp.reshape(b, nq, block_q, h, hd).transpose(1, 0, 2, 3, 4)
+    qposb = qpos.reshape(b, nq, block_q).transpose(1, 0, 2)
+    kb = kp.reshape(b, nkv, block_kv, h, hd)
+    vb = vp.reshape(b, nkv, block_kv, h, hd)
+    kposb = kpos.reshape(b, nkv, block_kv)
+
+    def q_block_step(_, q_in):
+        q_i, qpos_i = q_in                       # [B,bq,H,d], [B,bq]
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            k_j, v_j, kpos_j = kv_in
+            s_ij = jnp.einsum("bqhd,bkhd->bhqk", q_i, k_j)
+            s_ij = s_ij.astype(jnp.float32) * scale
+            if causal:
+                mask = qpos_i[:, :, None] >= kpos_j[:, None, :]
+                s_ij = jnp.where(mask[:, None], s_ij, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            p_ij = jnp.exp(s_ij - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p_ij, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p_ij.astype(q_i.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, block_q), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        acc0 = jnp.zeros((b, h, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+             kposb.transpose(1, 0, 2)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 2, 1, 3).astype(q_i.dtype)
+
+    _, ob = jax.lax.scan(q_block_step, None, (qb, qposb))
+    out = ob.transpose(1, 0, 2, 3, 4).reshape(b, nq * block_q, h, hd)
+    return out[:, :s_q]
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Decode-time cache. k/v: [B, S_max, G, d]; length: filled positions."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array           # scalar int32
+
+
+jax.tree_util.register_dataclass(KVCache)
+
+
+def attention(p, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array,
+              causal: bool = True,
+              cache: Optional[KVCache] = None,
+              memory: Optional[Tuple[jax.Array, jax.Array]] = None,
+              memory_positions: Optional[jax.Array] = None,
+              use_flash: Optional[bool] = None) -> Tuple[jax.Array,
+                                                         Optional[KVCache]]:
+    """GQA attention with three execution paths.
+
+      * cache is None, memory is None: self-attention (train/prefill);
+        flash path when S > cfg.flash_block_q (or use_flash=True).
+      * memory given: cross-attention over encoder output (no cache here).
+      * cache given: single-token decode — append to cache, attend over it.
+
+    Returns (output [B,S,D], updated cache or None).
+    """
+    b, s, _ = x.shape
+    h = cfg.n_heads
+
+    if memory is not None:
+        mem_k, mem_v = memory
+        q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+        if cfg.use_bias:
+            q = q + cast(p["bq"])
+        q = rope(q, positions, cfg.rope_theta)
+        k = _repeat_kv(mem_k, h)
+        v = _repeat_kv(mem_v, h)
+        out = _dense_attend(q, k, v, False, positions,
+                            memory_positions)
+        new_cache = None
+    elif cache is not None and s > 1:
+        # Prefill-into-cache: attend over the new segment with the flash
+        # path (cache is empty at prefill start), write K/V to the cache.
+        q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+        kr = _repeat_kv(k_new, h)
+        vr = _repeat_kv(v_new, h)
+        out = _flash_attend(q, kr, vr, causal, positions, positions,
+                            cfg.flash_block_q, cfg.flash_block_kv)
+        idx = cache.length
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, idx, 1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, idx, 1)
+        new_cache = KVCache(k=k_all, v=v_all, length=idx + s)
+    elif cache is not None:
+        # Single-token decode: attend over the filled cache. Grouped-query
+        # einsum — kv heads are NOT repeated to q heads, so the cache stays
+        # sequence-sharded end-to-end (repeat would force GSPMD into an
+        # involuntary full rematerialization; §Perf iteration 2).
+        q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+        idx = cache.length
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, idx, 1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, idx, 1)
+        k_pos = jnp.arange(k_all.shape[1], dtype=jnp.int32)
+        valid_to = idx + s
+        g = cfg.n_kv_heads
+        rep = h // g
+        hd = q.shape[-1]
+        qg = q.reshape(b, s, g, rep, hd)
+        scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_all)
+        scores = scores.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+        mask = (k_pos[None, :] <= positions[:, :1])       # [B, S]
+        mask &= (k_pos < valid_to)[None, :]
+        scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v_all)
+        out = out.reshape(b, s, h, hd)
+        new_cache = KVCache(k=k_all, v=v_all, length=idx + s)
+    else:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        kr = _repeat_kv(k, h)
+        vr = _repeat_kv(v, h)
+        flash = use_flash if use_flash is not None \
+            else s > cfg.flash_block_q
+        if flash:
+            out = _flash_attend(q, kr, vr, causal, positions, positions,
+                                cfg.flash_block_q, cfg.flash_block_kv)
+        else:
+            out = _dense_attend(q, kr, vr, causal, positions, positions)
+        new_cache = None
+
+    out = shard(out, "batch", "seq", "heads", None)
+    y = jnp.einsum("bqhd,hdD->bqD", out, cast(p["wo"]))
+    if cfg.use_bias:
+        y = y + cast(p["bo"])
+    return shard(y, "batch", "seq", None), new_cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=COMPUTE_DTYPE, n_layers: Optional[int] = None,
+               abstract: bool = False):
+    """Per-layer stacked KV cache [L, B, S_max, G, d]."""
+    L = n_layers if n_layers is not None else cfg.decoder_layers
+    g, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (L, batch, max_len, g, hd)
+    if abstract:
+        arr = jax.ShapeDtypeStruct(shape, dtype)
+        ln = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        arr = jnp.zeros(shape, dtype)
+        ln = jnp.int32(0)
+    return KVCache(k=arr, v=arr if abstract else jnp.zeros(shape, dtype),
+                   length=ln)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None
+             ) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.activation == "swiglu":
+        s = {
+            "wi": ParamSpec((d, f), ("model_d", "ff")),
+            "wg": ParamSpec((d, f), ("model_d", "ff")),
+            "wo": ParamSpec((f, d), ("ff", "model_d")),
+        }
+    else:
+        s = {
+            "wi": ParamSpec((d, f), ("model_d", "ff")),
+            "wo": ParamSpec((f, d), ("ff", "model_d")),
+        }
+    if cfg.use_bias:
+        s["bi"] = ParamSpec((f,), ("ff",), init="zeros")
+        s["bo"] = ParamSpec((d,), ("model_d",), init="zeros")
+    return s
+
+
+def mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, cast(p["wi"]))
+    if cfg.use_bias:
+        h = h + cast(p["bi"])
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, cast(p["wg"]))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", "seq", "ff")
+    y = jnp.einsum("bsf,fd->bsd", h, cast(p["wo"]))
+    if cfg.use_bias:
+        y = y + cast(p["bo"])
+    return shard(y, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return {"embedding": ParamSpec((cfg.vocab, cfg.d_model),
+                                   ("vocab", "model_d"), scale=0.02,
+                                   fan_in_dims=(1,))}
+
+
+def embed(p, tokens: jax.Array) -> jax.Array:
+    out = cast(p["embedding"])[tokens]
+    return shard(out, "batch", "seq", None)
+
+
+def unembed_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab), ("model_d", "vocab"))}
+
+
+def unembed(p, x: jax.Array) -> jax.Array:
+    logits = jnp.einsum("bsd,dv->bsv", x, cast(p["w"]))
+    return shard(logits, "batch", "seq", "vocab")

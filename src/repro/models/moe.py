@@ -1,0 +1,159 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded sort-based
+dispatch, expert-parallel execution.
+
+Dispatch is index-based (argsort + gather) rather than one-hot-einsum: a
+[tokens, E, C] dispatch tensor is infeasible at 384 experts x 1M tokens,
+while gather indices are O(E*C). Expert weights are sharded
+experts->data (EP) and expert_ff->model (TP); the token redistribution from
+batch-sharded to expert-sharded layout is the all-to-all that the ReSiPI
+lane controller meters and manages at Level 2 (DESIGN.md §5).
+
+The router also returns per-expert load statistics — the Eq. 5 'packets per
+gateway' analogue — consumed by repro.core.reconfig_runtime.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import cast
+from repro.sharding.rules import shard
+
+
+def moe_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    assert cfg.moe is not None
+    d, m = cfg.d_model, cfg.moe
+    e, f = m.n_experts, m.expert_d_ff
+    s = {
+        "router": ParamSpec((d, e), ("model_d", None), scale=0.02),
+        "wi": ParamSpec((e, d, f), ("experts", "model_d", "expert_ff"),
+                        fan_in_dims=(1,)),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_ff", "model_d"),
+                        fan_in_dims=(1,)),
+    }
+    if cfg.activation == "swiglu":
+        s["wg"] = ParamSpec((e, d, f), ("experts", "model_d", "expert_ff"),
+                            fan_in_dims=(1,))
+    return s
+
+
+def route_topk(logits: jax.Array, top_k: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k gates per token. logits [T, E] -> (gates [T,k], experts [T,k])."""
+    gates, experts = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
+    return gates, experts
+
+
+def build_dispatch(experts: jax.Array, n_experts: int, capacity: int
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Capacity-bounded dispatch + combine indices.
+
+    Args:
+      experts: [T, k] int — chosen expert per (token, choice).
+    Returns:
+      gather_idx:  [E, C] int — token feeding each expert slot (T = empty,
+        points at a zero pad row).
+      choice_idx:  [E, C] int — which of the k choices that slot serves.
+      combine_idx: [T, k] int — flat slot (e*C + rank) each choice landed
+        in, or E*C for dropped choices (points at a zero pad row). The
+        combine is therefore a pure GATHER — a scatter-add combine makes
+        GSPMD all-reduce a full [T, D] buffer per layer (§Perf iter 4).
+      kept: [T, k] bool — choices that fit under capacity.
+    """
+    t, k = experts.shape
+    flat_expert = experts.reshape(-1)                          # [T*k]
+    # Rank of each (token, choice) within its expert queue, in token order —
+    # deterministic tie-break, same rule as the paper's per-packet FIFO.
+    order = jnp.argsort(flat_expert, stable=True)              # [T*k]
+    sorted_experts = flat_expert[order]
+    seg_start = jnp.searchsorted(sorted_experts,
+                                 jnp.arange(n_experts), side="left")
+    rank_sorted = jnp.arange(t * k) - seg_start[sorted_experts]
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    kept = rank < capacity
+
+    # Dropped (over-capacity) choices are routed to an out-of-range slot so
+    # the scatter discards them instead of clobbering kept entries.
+    slot = flat_expert * capacity + jnp.minimum(rank, capacity - 1)
+    slot = jnp.where(kept, slot, n_experts * capacity)
+    token_of_flat = jnp.arange(t * k) // k
+    choice_of_flat = jnp.arange(t * k) % k
+    gather_idx = jnp.full((n_experts * capacity,), t, jnp.int32)
+    choice_idx = jnp.zeros((n_experts * capacity,), jnp.int32)
+    gather_idx = gather_idx.at[slot].set(
+        token_of_flat.astype(jnp.int32), mode="drop")
+    choice_idx = choice_idx.at[slot].set(
+        choice_of_flat.astype(jnp.int32), mode="drop")
+    combine_idx = slot.reshape(t, k).astype(jnp.int32)
+    return (gather_idx.reshape(n_experts, capacity),
+            choice_idx.reshape(n_experts, capacity),
+            combine_idx,
+            kept.reshape(t, k))
+
+
+def moe_block(p, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """MoE FFN. x: [B, S, D] -> ([B, S, D], load-stats dict)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, cast(p["router"]))
+    gates, experts = route_topk(logits, m.top_k)               # [T,k]
+
+    capacity = int(m.capacity_factor * m.top_k * t / m.n_experts)
+    capacity = max(capacity, m.top_k)
+    gather_idx, choice_idx, combine_idx, kept = build_dispatch(
+        experts, m.n_experts, capacity)
+
+    # Gather tokens into expert-major layout: [E, C, D]. The implicit
+    # batch->expert resharding here is the EP all-to-all.
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+    xe = xt_pad[gather_idx]                                    # [E, C, D]
+    xe = shard(xe, "experts", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, cast(p["wi"]))
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xe, cast(p["wg"]))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "experts", None, "expert_ff")
+    ye = jnp.einsum("ecf,efd->ecd", h, cast(p["wo"]))          # [E, C, D]
+    ye = shard(ye, "experts", None, None)
+
+    # Combine: scatter-add expert outputs back to tokens, gate-weighted.
+    # §Perf iteration 4 A/B-tested this against a pure-gather combine
+    # (every token gathers its top-k slots): GSPMD lowered the gather
+    # variant to MORE wire (25.3 vs 16.6 TiB/dev at kimi/train_4k) because
+    # its backward is the same cross-shard scatter — the scatter-add form
+    # keeps the cheaper direction in the forward pass. (The real fix is an
+    # explicit shard_map all_to_all dispatch — see EXPERIMENTS.md §Perf.)
+    flat_slots = gather_idx.reshape(-1)                        # [E*C] -> token
+    gate_of_slot = gates[jnp.minimum(flat_slots, t - 1),
+                         choice_idx.reshape(-1)]
+    gate_of_slot = jnp.where(flat_slots < t, gate_of_slot, 0.0)
+    yt = jnp.zeros((t + 1, d), jnp.float32).at[flat_slots].add(
+        ye.reshape(-1, d).astype(jnp.float32)
+        * gate_of_slot[:, None])
+    y = yt[:t].reshape(b, s, d).astype(x.dtype)
+    y = shard(y, "batch", "seq", None)
+
+    # Load stats: tokens per expert (Eq. 5 numerator at Level 2) + aux loss.
+    tokens_per_expert = jnp.sum(
+        jax.nn.one_hot(experts, m.n_experts, dtype=jnp.float32)
+        * kept[..., None], axis=(0, 1))
+    me = jnp.mean(jax.nn.softmax(logits.astype(jnp.float32), -1), axis=0)
+    ce = tokens_per_expert / jnp.maximum(jnp.sum(tokens_per_expert), 1.0)
+    aux_loss = m.n_experts * jnp.sum(me * ce)
+    dropped = 1.0 - jnp.mean(kept.astype(jnp.float32))
+    stats = {"tokens_per_expert": tokens_per_expert,
+             "aux_loss": aux_loss, "drop_frac": dropped}
+    return y, stats

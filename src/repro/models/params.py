@@ -1,0 +1,86 @@
+"""Parameter specification machinery.
+
+Model modules declare their weights as `ParamSpec` trees (shape + logical
+sharding axes + init); from one spec tree we derive: random initialization,
+abstract ShapeDtypeStructs (for `.lower()` without allocation), and
+PartitionSpec trees (for pjit in_shardings). This keeps weight bookkeeping in
+exactly one place per architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import Rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"              # normal | zeros | ones
+    scale: Optional[float] = None     # stddev; None => 1/sqrt(fan_in)
+    fan_in_dims: Tuple[int, ...] = (0,)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(tree: Any, n: int, axis_name: Optional[str] = "layers"
+                ) -> Any:
+    """Prepend a scanned-layer axis to every spec in the tree."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(shape=(n,) + s.shape, axes=(axis_name,) + s.axes,
+                         init=s.init, scale=s.scale,
+                         fan_in_dims=tuple(d + 1 for d in s.fan_in_dims))
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def init_params(tree: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(s: ParamSpec, k) -> jax.Array:
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dtype)
+        fan_in = math.prod(s.shape[d] for d in s.fan_in_dims) or 1
+        std = s.scale if s.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(k, s.shape) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(s, k)
+                                        for s, k in zip(leaves, keys)])
+
+
+def abstract_params(tree: Any, dtype=jnp.float32) -> Any:
+    def one(s: ParamSpec):
+        return jax.ShapeDtypeStruct(s.shape, dtype)
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def partition_specs(tree: Any, rules: Rules) -> Any:
+    def one(s: ParamSpec):
+        return rules.spec_for_shape(s.shape, *s.axes)
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def shardings(tree: Any, rules: Rules) -> Any:
+    def one(s: ParamSpec):
+        import jax.sharding as shd
+        return shd.NamedSharding(rules.mesh,
+                                 rules.spec_for_shape(s.shape, *s.axes))
+    return jax.tree.map(one, tree, is_leaf=is_spec)
+
+
+def count_params(tree: Any) -> int:
+    return sum(math.prod(s.shape) for s in
+               jax.tree.leaves(tree, is_leaf=is_spec))

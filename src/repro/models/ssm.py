@@ -1,0 +1,210 @@
+"""Mamba2 blocks via the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060). Used by mamba2-130m and the zamba2-7b hybrid.
+
+The chunked form splits the sequence into chunks of Q tokens; within a chunk
+the recurrence is computed 'attention-like' (quadratic in Q), and a single
+[H, P, N] state is passed between chunks with a lax.scan — O(L*Q) compute,
+O(L) memory, and a constant-size state for decode. The intra-chunk einsums
+are the compute hot-spot mirrored by the Pallas kernel (kernels/ssd_scan);
+`ssd_chunked` doubles as that kernel's reference oracle.
+
+Shapes: x [B, L, H, P] (H ssd-heads, P head_dim), dt [B, L, H], A [H] (<0),
+B/C [B, L, G, N] (G groups broadcast over heads, N d_state).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import cast, rmsnorm, rmsnorm_spec
+from repro.sharding.rules import shard
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array,
+                b_in: jax.Array, c_in: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y [B,L,H,P], final_state [B,H,P,N])."""
+    bsz, l_in, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    # Pad the sequence to a chunk multiple with dt=0 tokens: zero dt means
+    # zero state contribution and unit decay, so padding is exact.
+    pad = (-l_in) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l_in + pad
+    nc = l // chunk
+    rep = h // g
+
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    dtr = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    br = jnp.repeat(b_in.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    cr = jnp.repeat(c_in.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    da = dtr * a.astype(jnp.float32)                    # [B,nc,Q,H], <= 0
+    da_cs = jnp.cumsum(da, axis=2)                      # inclusive cumsum
+
+    # --- intra-chunk (quadratic within chunk) ------------------------------
+    seg = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # clamp BEFORE exp: above-diagonal entries are masked anyway, but an
+    # unclamped exp overflows and poisons the backward pass through where().
+    # On the used (lower-tri) region seg <= 0 exactly, so the clamp is free.
+    seg = jnp.minimum(seg, 0.0)
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", cr, br)
+    w = scores * decay * dtr[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w.astype(x.dtype), xr)
+
+    # --- chunk summary states ----------------------------------------------
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)        # [B,nc,Q,H]
+    s_chunk = jnp.einsum("bcqh,bcqh,bcqhp,bcqhn->bchpn",
+                         decay_to_end, dtr, xr.astype(jnp.float32),
+                         br.astype(jnp.float32))               # [B,nc,H,P,N]
+
+    # --- inter-chunk recurrence ---------------------------------------------
+    total_decay = jnp.exp(da_cs[:, :, -1, :])                   # [B,nc,H]
+
+    def step(state, inp):
+        s_c, dec_c = inp                                        # [B,H,P,N]
+        out_state = state                                       # entering state
+        new_state = state * dec_c[..., None, None] + s_c
+        return new_state, out_state
+
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+    final_state, states_in = jax.lax.scan(
+        step, init,
+        (s_chunk.transpose(1, 0, 2, 3, 4),
+         total_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)              # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         cr.astype(jnp.float32), states_in,
+                         jnp.exp(da_cs)).astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)[:, :l_in]
+    return y, final_state
+
+
+def ssd_decode_step(x: jax.Array, dt: jax.Array, a: jax.Array,
+                    b_in: jax.Array, c_in: jax.Array,
+                    state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD update. x [B,1,H,P]; state [B,H,P,N]."""
+    bsz, _, h, p = x.shape
+    g = b_in.shape[2]
+    rep = h // g
+    br = jnp.repeat(b_in[:, 0], rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    cr = jnp.repeat(c_in[:, 0], rep, axis=1).astype(jnp.float32)
+    dtf = dt[:, 0].astype(jnp.float32)                            # [B,H]
+    da = jnp.exp(dtf * a.astype(jnp.float32))                     # [B,H]
+    xf = x[:, 0].astype(jnp.float32)                              # [B,H,P]
+    new_state = (state * da[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dtf, xf, br))
+    y = jnp.einsum("bhn,bhpn->bhp", cr, new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, conv_dim
+
+
+def mamba_spec(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("model_d", "heads")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), (None, "heads"),
+                            scale=0.5, fan_in_dims=(0,)),
+        "conv_b": ParamSpec((conv_dim,), ("heads",), init="zeros"),
+        "a_log": ParamSpec((n_heads,), ("heads",), init="ones"),
+        "dt_bias": ParamSpec((n_heads,), ("heads",), init="zeros"),
+        "d_skip": ParamSpec((n_heads,), ("heads",), init="ones"),
+        "norm": rmsnorm_spec(d_inner)["scale"],
+        "out_proj": ParamSpec((d_inner, d), ("heads", "model_d")),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. xbc [B,L,C]; w [W,C]; returns (y, new_state).
+
+    new_state is the last W-1 inputs [B, W-1, C] (decode carry).
+    """
+    width = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)              # [B, L+W-1, C]
+    y = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None]
+            for i in range(width))
+    y = jax.nn.silu(y + b[None, None])
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return y, new_state
+
+
+def mamba_block(p, x: jax.Array, cfg: ModelConfig, *,
+                ssm_state: Optional[jax.Array] = None,
+                conv_state: Optional[jax.Array] = None,
+                decode: bool = False):
+    """Mamba2 block. x [B,L,D] -> (y [B,L,D], (ssm_state, conv_state))."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    gn = s.n_groups * s.d_state
+
+    proj = jnp.einsum("bld,dk->blk", x, cast(p["in_proj"]))
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, cast(p["conv_w"]), cast(p["conv_b"]),
+                                 conv_state)
+    xs, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+
+    bsz, l = x.shape[0], x.shape[1]
+    xh = xs.reshape(bsz, l, n_heads, s.head_dim)
+    xh = shard(xh, "batch", "seq", "heads", None)
+    bh = b_in.reshape(bsz, l, s.n_groups, s.d_state)
+    ch = c_in.reshape(bsz, l, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if decode:
+        y, new_state = ssd_decode_step(xh, dt, a, bh, ch, ssm_state)
+    else:
+        y, new_state = ssd_chunked(xh, dt, a, bh, ch, s.chunk_len,
+                                   initial_state=ssm_state)
+    y = y + xh * cast(p["d_skip"])[None, None, :, None]
+    y = y.reshape(bsz, l, d_inner)
+
+    y = rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, cast(p["out_proj"]))
+    return shard(out, "batch", "seq", None), (new_state, new_conv)
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int,
+                   abstract: bool = False):
+    """Stacked per-layer (ssm_state, conv_state) decode caches."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    ssm_shape = (n_layers, batch, n_heads, s.head_dim, s.d_state)
+    conv_shape = (n_layers, batch, s.conv_width - 1, conv_dim)
+    if abstract:
+        return (jax.ShapeDtypeStruct(ssm_shape, jnp.float32),
+                jax.ShapeDtypeStruct(conv_shape, jnp.float32))
+    return (jnp.zeros(ssm_shape, jnp.float32),
+            jnp.zeros(conv_shape, jnp.float32))

@@ -1,0 +1,437 @@
+"""Decoder-only model assemblies: dense / MoE / VLM / SSM / hybrid.
+
+All families share: scan-over-layers with stacked weights (bounds compile
+time and enables uniform remat), chunked cross-entropy (never materializes
+[B, S, V] logits), and a uniform Model API:
+
+    spec()                          ParamSpec tree
+    train_loss(params, batch)       (loss, stats)
+    prefill(params, batch)          (caches, last_logits)
+    decode_step(params, tokens, caches)  (logits, caches)
+
+Caches are stacked per-layer pytrees so decode also scans over layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.params import ParamSpec, stack_specs
+from repro.sharding.rules import shard
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(unembed_p, hidden: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array], chunk: int = 512,
+                          real_vocab: Optional[int] = None
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over vocab, scanning seq chunks.
+
+    Avoids a [B, S, V] logits buffer: each step materializes only
+    [B, chunk, V]. Logits at indices >= real_vocab (TP padding) are masked
+    out of the partition function. Returns (sum_loss, sum_weight).
+    """
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    mask = jnp.pad(mask.astype(jnp.float32), ((0, 0), (0, pad)))
+
+    hs = hidden.reshape(b, nchunk, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nchunk, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nchunk, chunk).transpose(1, 0, 2)
+
+    def step(carry, xs):
+        sum_loss, sum_w = carry
+        h_c, l_c, m_c = xs
+        logits = L.unembed(unembed_p, h_c).astype(jnp.float32)
+        if real_vocab is not None and real_vocab < logits.shape[-1]:
+            pad_mask = jnp.arange(logits.shape[-1]) < real_vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m_c
+        return (sum_loss + jnp.sum(nll), sum_w + jnp.sum(m_c)), None
+
+    (sum_loss, sum_w), _ = jax.lax.scan(step, (0.0, 0.0), (hs, ls, ms))
+    return sum_loss, sum_w
+
+
+# ---------------------------------------------------------------------------
+# Transformer decoder block (dense / moe families)
+# ---------------------------------------------------------------------------
+
+def block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    s = {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        s["moe"] = MOE.moe_spec(cfg)
+    else:
+        s["mlp"] = L.mlp_spec(cfg)
+    return s
+
+
+def block_apply(p, x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array,
+                cache: Optional[L.KVCache] = None,
+                causal: bool = True):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, new_cache = L.attention(p["attn"], h, cfg,
+                                      positions=positions, causal=causal,
+                                      cache=cache)
+    x = x + attn_out
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    stats = None
+    if cfg.moe is not None:
+        ffn, stats = MOE.moe_block(p["moe"], h, cfg)
+    else:
+        ffn = L.mlp(p["mlp"], h, cfg)
+    # residual stream: sequence-sharded between blocks under SP
+    out = shard(x + ffn, "batch", "seq_outer", None)
+    return out, new_cache, stats
+
+
+def _zero_stats(cfg: ModelConfig):
+    if cfg.moe is None:
+        return None
+    return {"tokens_per_expert": jnp.zeros((cfg.moe.n_experts,),
+                                           jnp.float32),
+            "aux_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer (dense / moe / vlm)
+# ---------------------------------------------------------------------------
+
+class DecoderLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- spec ----------------------------------------------------------------
+    def spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "embed": L.embed_spec(cfg),
+            "layers": stack_specs(block_spec(cfg), cfg.n_layers),
+            "ln_f": L.rmsnorm_spec(cfg.d_model),
+            "unembed": L.unembed_spec(cfg),
+        }
+
+    # -- shared stack runner ---------------------------------------------------
+    def _run_stack(self, params, x, positions, caches=None, causal=True):
+        cfg = self.cfg
+
+        def body(carry, layer_in):
+            xc, stats_acc = carry
+            p_layer, cache_layer = layer_in
+            xc, new_cache, stats = block_apply(
+                p_layer, xc, cfg, positions=positions, cache=cache_layer,
+                causal=causal)
+            if stats is not None:
+                stats_acc = jax.tree.map(lambda a, b: a + b, stats_acc,
+                                         stats)
+            return (xc, stats_acc), new_cache
+
+        body = jax.checkpoint(
+            body, policy=getattr(jax.checkpoint_policies, cfg.remat_policy,
+                                 jax.checkpoint_policies.nothing_saveable))
+        (x, stats), new_caches = jax.lax.scan(
+            body, (x, _zero_stats(cfg)), (params["layers"], caches))
+        return x, stats, new_caches
+
+    # -- embedding helper (vlm prefix) ---------------------------------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        if cfg.family == "vlm" and "image_embeds" in batch:
+            img = L.cast(batch["image_embeds"])
+            img = shard(img, "batch", "seq", None)
+            x = jnp.concatenate([img, x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, positions
+
+    # -- train ----------------------------------------------------------------
+    def train_loss(self, params, batch) -> Tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x, stats, _ = self._run_stack(params, x, positions)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        labels = batch["labels"]
+        if x.shape[1] != labels.shape[1]:       # vlm: loss on text tail only
+            x = x[:, x.shape[1] - labels.shape[1]:]
+        mask = batch.get("loss_mask")
+        sum_loss, sum_w = chunked_cross_entropy(
+            params["unembed"], x, labels, mask,
+            real_vocab=cfg.real_vocab)
+        loss = sum_loss / jnp.maximum(sum_w, 1.0)
+        out_stats = {"loss": loss}
+        if stats is not None:
+            aux = stats["aux_loss"] / cfg.n_layers
+            out_stats.update(
+                aux_loss=aux, drop_frac=stats["drop_frac"] / cfg.n_layers,
+                tokens_per_expert=stats["tokens_per_expert"])
+            loss = loss + 0.01 * aux
+        return loss, out_stats
+
+    # -- serve ----------------------------------------------------------------
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        b, s, _ = x.shape
+        caches = L.KVCache(
+            k=jnp.zeros((cfg.n_layers, b, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), L.COMPUTE_DTYPE),
+            v=jnp.zeros((cfg.n_layers, b, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), L.COMPUTE_DTYPE),
+            length=jnp.int32(0))
+        # Prefill runs the flash path (no cache materialization cost in
+        # attention itself) then writes K/V per layer via the stack scan.
+        x, _, new_caches = self._run_stack(params, x, positions,
+                                           caches=self._split_cache(caches, s))
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        last = x[:, -1:]
+        logits = L.unembed(params["unembed"], last)[:, 0]
+        return self._merge_cache(new_caches, s), logits
+
+    def _split_cache(self, caches: L.KVCache, s: int):
+        # per-layer cache views for the scan (length broadcast per layer)
+        return L.KVCache(k=caches.k, v=caches.v,
+                         length=jnp.broadcast_to(caches.length,
+                                                 (caches.k.shape[0],)))
+
+    def _merge_cache(self, caches: L.KVCache, s: int):
+        return L.KVCache(k=caches.k, v=caches.v, length=caches.length[0])
+
+    def decode_step(self, params, tokens, caches: L.KVCache):
+        """tokens [B, 1] -> (logits [B, V], new caches)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens)
+        b = x.shape[0]
+        pos = jnp.broadcast_to(caches.length[None, None], (b, 1))
+        pos = pos.astype(jnp.int32)
+        x, _, new_caches = self._run_stack(
+            params, x, pos, caches=self._split_cache(caches, 1))
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x)[:, 0]
+        return logits, self._merge_cache(new_caches, 1)
+
+
+# ---------------------------------------------------------------------------
+# Pure SSM stack (mamba2)
+# ---------------------------------------------------------------------------
+
+class SSMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        layer = {"ln": L.rmsnorm_spec(cfg.d_model),
+                 "mamba": SSM.mamba_spec(cfg)}
+        return {
+            "embed": L.embed_spec(cfg),
+            "layers": stack_specs(layer, cfg.n_layers),
+            "ln_f": L.rmsnorm_spec(cfg.d_model),
+            "unembed": L.unembed_spec(cfg),
+        }
+
+    def _run_stack(self, params, x, caches=None, decode=False):
+        cfg = self.cfg
+
+        def body(xc, layer_in):
+            p_layer, cache_layer = layer_in
+            sstate = cstate = None
+            if cache_layer is not None:
+                sstate, cstate = cache_layer
+            h = L.rmsnorm(p_layer["ln"], xc, cfg.norm_eps)
+            y, (new_s, new_c) = SSM.mamba_block(
+                p_layer["mamba"], h, cfg, ssm_state=sstate,
+                conv_state=cstate, decode=decode)
+            return shard(xc + y, "batch", "seq_outer", None), (new_s, new_c)
+
+        body = jax.checkpoint(
+            body, policy=getattr(jax.checkpoint_policies, cfg.remat_policy,
+                                 jax.checkpoint_policies.nothing_saveable))
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+        return x, new_caches
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        x, _ = self._run_stack(params, x)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        sum_loss, sum_w = chunked_cross_entropy(
+            params["unembed"], x, batch["labels"], batch.get("loss_mask"),
+            real_vocab=cfg.real_vocab)
+        loss = sum_loss / jnp.maximum(sum_w, 1.0)
+        return loss, {"loss": loss}
+
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        b = x.shape[0]
+        caches = SSM.make_ssm_cache(cfg, b, cfg.n_layers)
+        x, new_caches = self._run_stack(params, x, caches=caches)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x[:, -1:])[:, 0]
+        return new_caches, logits
+
+    def decode_step(self, params, tokens, caches):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens)
+        x, new_caches = self._run_stack(params, x, caches=caches,
+                                        decode=True)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x)[:, 0]
+        return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): mamba backbone + weight-shared attention block
+# ---------------------------------------------------------------------------
+
+class HybridLM:
+    """`attn_every` mamba layers per group; one *shared* attention+MLP block
+    (single weight set, reused) applied after each group — the Zamba2
+    architecture. Leftover layers run as a tail group without attention."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        k = cfg.attn_every or 6
+        self.n_groups = cfg.n_layers // k
+        self.group_len = k
+        self.tail = cfg.n_layers - self.n_groups * k
+
+    def spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        mamba_layer = {"ln": L.rmsnorm_spec(cfg.d_model),
+                       "mamba": SSM.mamba_spec(cfg)}
+        s = {
+            "embed": L.embed_spec(cfg),
+            "groups": stack_specs(
+                stack_specs(mamba_layer, self.group_len, None),
+                self.n_groups),
+            "shared": block_spec(cfg),       # ONE weight set, reused
+            "ln_f": L.rmsnorm_spec(cfg.d_model),
+            "unembed": L.unembed_spec(cfg),
+        }
+        if self.tail:
+            s["tail"] = stack_specs(mamba_layer, self.tail)
+        return s
+
+    def _mamba_scan(self, p_layers, x, caches, decode):
+        cfg = self.cfg
+
+        def body(xc, layer_in):
+            p_layer, cache_layer = layer_in
+            sstate = cstate = None
+            if cache_layer is not None:
+                sstate, cstate = cache_layer
+            h = L.rmsnorm(p_layer["ln"], xc, cfg.norm_eps)
+            y, new_cache = SSM.mamba_block(p_layer["mamba"], h, cfg,
+                                           ssm_state=sstate,
+                                           conv_state=cstate, decode=decode)
+            return shard(xc + y, "batch", "seq_outer", None), new_cache
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.lax.scan(body, x, (p_layers, caches))
+
+    def _run(self, params, x, positions, ssm_caches=None, kv_caches=None,
+             decode=False):
+        """ssm_caches: ([G, gl, ...], tail [...]) stacked states or None.
+        kv_caches: KVCache with leading [n_groups] dim or None."""
+        cfg = self.cfg
+
+        def group_body(carry, group_in):
+            xc = carry
+            p_group, ssm_group, kv_group = group_in
+            xc, new_ssm = self._mamba_scan(p_group, xc, ssm_group, decode)
+            xc, new_kv, _ = block_apply(params["shared"], xc, cfg,
+                                        positions=positions, cache=kv_group,
+                                        causal=True)
+            return xc, (new_ssm, new_kv)
+
+        x, (new_ssm, new_kv) = jax.lax.scan(
+            group_body, x,
+            (params["groups"],
+             None if ssm_caches is None else ssm_caches[0],
+             kv_caches))
+        new_tail = None
+        if self.tail:
+            x, new_tail = self._mamba_scan(
+                params["tail"], x,
+                None if ssm_caches is None else ssm_caches[1], decode)
+        return x, (new_ssm, new_tail), new_kv
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _, _ = self._run(params, x, positions)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        sum_loss, sum_w = chunked_cross_entropy(
+            params["unembed"], x, batch["labels"], batch.get("loss_mask"),
+            real_vocab=cfg.real_vocab)
+        loss = sum_loss / jnp.maximum(sum_w, 1.0)
+        return loss, {"loss": loss}
+
+    def _init_caches(self, b: int, max_len: int):
+        cfg = self.cfg
+        ssm_g = SSM.make_ssm_cache(cfg, b, self.n_groups * self.group_len)
+        ssm_g = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, self.group_len)
+                                + a.shape[1:]), ssm_g)
+        ssm_t = SSM.make_ssm_cache(cfg, b, self.tail) if self.tail else None
+        kv = L.KVCache(
+            k=jnp.zeros((self.n_groups, b, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), L.COMPUTE_DTYPE),
+            v=jnp.zeros((self.n_groups, b, max_len, cfg.n_kv_heads,
+                         cfg.resolved_head_dim), L.COMPUTE_DTYPE),
+            length=jnp.zeros((self.n_groups,), jnp.int32))
+        return (ssm_g, ssm_t), kv
+
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"])
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        ssm_caches, kv = self._init_caches(b, max_len)
+        x, new_ssm, new_kv = self._run(params, x, positions,
+                                       ssm_caches=ssm_caches, kv_caches=kv)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x[:, -1:])[:, 0]
+        return (new_ssm, new_kv), logits
+
+    def decode_step(self, params, tokens, caches):
+        cfg = self.cfg
+        ssm_caches, kv = caches
+        x = L.embed(params["embed"], tokens)
+        b = x.shape[0]
+        pos = jnp.broadcast_to(kv.length[0][None, None], (b, 1)).astype(
+            jnp.int32)
+        x, new_ssm, new_kv = self._run(params, x, pos,
+                                       ssm_caches=ssm_caches, kv_caches=kv,
+                                       decode=True)
+        x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = L.unembed(params["unembed"], x)[:, 0]
+        return logits, (new_ssm, new_kv)

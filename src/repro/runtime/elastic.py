@@ -1,0 +1,50 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+Checkpoints are mesh-agnostic (full logical arrays per entry, written
+shard-wise), so scaling from 2 pods to 1 (node loss) or 1 to 2 (scale-up)
+is: build the new mesh -> rebuild shardings from the same Rules -> restore
+with device_put onto the new shardings. The batch schedule is rescaled to
+keep the global batch constant (synchronous data parallelism is preserved;
+see DESIGN.md fault-tolerance notes).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import Rules
+from repro.models.params import partition_specs
+from repro.checkpoint import ckpt
+
+
+def replan_mesh(multi_pod: bool):
+    """(mesh, rules) for the surviving topology."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return mesh, Rules(mesh)
+
+
+def restore_elastic(model, directory: str, multi_pod: bool,
+                    step: Optional[int] = None) -> Any:
+    """Restore train state onto the current topology's shardings."""
+    from repro.train.train_step import (abstract_train_state, state_pspecs)
+    from repro.launch.dryrun import to_shardings  # spec->NamedSharding
+    mesh, rules = replan_mesh(multi_pod)
+    like = abstract_train_state(model)
+    shardings = to_shardings(state_pspecs(model, rules), mesh)
+    return ckpt.restore_checkpoint(like, directory, step=step,
+                                   shardings=shardings), mesh, rules
+
+
+def rescale_batch(global_batch: int, old_dp: int, new_dp: int) -> dict:
+    """Keep the global batch fixed across re-meshing: adjust per-replica
+    microbatch and gradient-accumulation so optimization is bit-for-bit
+    schedule-compatible after elastic restart."""
+    assert global_batch % new_dp == 0, (global_batch, new_dp)
+    per_replica_old = global_batch // old_dp
+    per_replica_new = global_batch // new_dp
+    accum = max(1, per_replica_new // max(per_replica_old, 1))
+    return {"per_replica_batch": per_replica_new,
+            "grad_accum": accum,
+            "note": "global batch preserved; LR schedule unchanged"}

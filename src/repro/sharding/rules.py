@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP over the production mesh).
+
+Model code annotates arrays with *logical* axis names; this module maps them
+to mesh axes for whatever mesh is active. The production meshes are
+
+    single-pod:  (data=16, model=16)            — 256 chips
+    multi-pod:   (pod=2, data=16, model=16)     — 512 chips
+
+Rules (MaxText-style):
+    batch    -> (pod, data)   data parallelism, pods are an outer DP axis
+    heads    -> model         tensor parallelism over attention heads
+    kv       -> model         KV heads (padded when count < axis size)
+    ff       -> model         MLP hidden
+    vocab    -> model         embedding/unembedding table + logits
+    experts  -> data          expert parallelism (MoE all-to-all crosses the
+                              data axis — the interposer traffic ReSiPI manages)
+    seq      -> None          (SP variants map it to model; see perf log)
+    model_d / state / layers / capacity -> replicated
+
+GSPMD pads uneven dimensions, so head counts that don't divide the axis are
+legal (at a padding cost measured in the roofline pass).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, None]
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("data",),
+    "expert_ff": ("model",),
+    "seq": (),
+    # Residual-stream (layer-boundary) sequence axis: sharded over model
+    # under sequence parallelism (SP_OVERLAY). Kept distinct from "seq" so
+    # SP never steals the model axis from heads/ff INSIDE a block —
+    # Megatron-SP shards only the carries/norms between blocks.
+    "seq_outer": (),
+    # Decode KV caches shard their *sequence* dim over the model axis: GQA
+    # kv-head counts (4/8) can't divide a 16-way axis, but 32k contexts can.
+    # Decode attention then psum-reduces over the sharded seq — §Perf iter 2.
+    "kv_seq": ("model",),
+    # FSDP/ZeRO-3: weight embed-dims shard over the data axis, so params +
+    # optimizer state divide by DP degree; XLA inserts the per-layer weight
+    # all-gathers (measured in the collective roofline term). Without this,
+    # params/opt replicate DP-fold — §Perf iteration 1 measures the delta.
+    "model_d": ("data",),
+    "state": (),
+    "layers": (),
+    "capacity": (),
+}
+
+# Overlays (hillclimb levers; see EXPERIMENTS.md §Perf).
+SP_OVERLAY = {"seq_outer": ("model",)}                   # sequence parallel
+TP_ONLY_OVERLAY = {"model_d": ()}                        # pre-FSDP baseline
+
+
+class Rules:
+    """Resolves logical axis names against the active mesh."""
+
+    def __init__(self, mesh: Mesh, overrides: Optional[dict] = None):
+        self.mesh = mesh
+        table = dict(DEFAULT_RULES)
+        if overrides:
+            table.update(overrides)
+        self.table = table
+
+    def _mesh_axes(self, logical: Axis) -> Optional[tuple]:
+        if logical is None:
+            return None
+        axes = tuple(a for a in self.table[logical]
+                     if a in self.mesh.axis_names)
+        return axes or None
+
+    def spec(self, *logical_axes: Axis) -> P:
+        resolved = []
+        used = set()
+        for ax in logical_axes:
+            mesh_axes = self._mesh_axes(ax)
+            if mesh_axes is None:
+                resolved.append(None)
+                continue
+            fresh = tuple(a for a in mesh_axes if a not in used)
+            used.update(fresh)
+            if not fresh:
+                resolved.append(None)
+            elif len(fresh) == 1:
+                resolved.append(fresh[0])
+            else:
+                resolved.append(fresh)
+        return P(*resolved)
+
+    def spec_for_shape(self, shape: Sequence[int],
+                       *logical_axes: Axis) -> P:
+        """Like spec(), but checks divisibility AT ALLOCATION TIME.
+
+        pjit input shardings require exact divisibility; dims that don't
+        divide their assigned mesh-axis product fall back to replicated —
+        and crucially the mesh axis is then still AVAILABLE for a later
+        dim (e.g. grok-1's 8 experts can't divide data=16, so the expert
+        dim replicates and the weight's model_d dim takes the data axis
+        instead of losing it — FSDP for non-dividing-expert MoE).
+        """
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        resolved = []
+        used = set()
+        for dim, ax in zip(shape, logical_axes + (None,) * (
+                len(shape) - len(logical_axes))):
+            mesh_axes = self._mesh_axes(ax)
+            if mesh_axes is None:
+                resolved.append(None)
+                continue
+            fresh = tuple(a for a in mesh_axes if a not in used)
+            prod = 1
+            for a in fresh:
+                prod *= sizes[a]
+            if not fresh or dim % prod != 0:
+                resolved.append(None)
+                continue
+            used.update(fresh)
+            resolved.append(fresh[0] if len(fresh) == 1 else fresh)
+        return P(*resolved)
+
+    def sharding(self, *logical_axes: Axis) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+
+_ACTIVE: list = []
+
+
+def use_rules(rules: Rules):
+    """Context manager installing rules for `shard()` constraints."""
+    class _Ctx:
+        def __enter__(self):
+            _ACTIVE.append(rules)
+            return rules
+
+        def __exit__(self, *exc):
+            _ACTIVE.pop()
+            return False
+    return _Ctx()
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def shard(x: jax.Array, *logical_axes: Axis) -> jax.Array:
+    """Apply a logical sharding constraint if rules are active (no-op in
+    plain single-device tests, so model code runs everywhere unchanged)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(*logical_axes))

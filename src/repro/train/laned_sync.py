@@ -1,0 +1,82 @@
+"""Laned gradient synchronization — the ReSiPI lane width as an actual
+XLA program difference (DESIGN.md §2 table, last row).
+
+`make_laned_train_step(model, mesh, lanes)` builds a shard_map train step
+whose data-parallel gradient all-reduce is split into `lanes` chunk
+streams (`core.reconfig_runtime.laned_psum`): lanes=1 is one fused
+all-reduce (the paper's design A — one deep gateway); lanes=4 is four
+narrower concurrent collectives XLA can overlap with the optimizer update
+(design B — more gateways). The launcher pre-compiles one executable per
+width in LANE_WIDTHS and the epoch controller switches between them — the
+PCM-reconfiguration analogue (switch cost = executable swap; nothing while
+the width holds).
+
+Inside shard_map, model TP collectives would need manual placement, so this
+path runs the *data-parallel* axis only (model axis size 1 in its mesh) —
+exactly the gradient-sync traffic the Level-1 paper manages between
+chiplets. The pjit path (train_step.py) remains the TP/FSDP workhorse.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.reconfig_runtime import LANE_WIDTHS, laned_psum
+from repro.train.train_step import make_optimizer_for
+
+
+def make_laned_train_step(model, mesh: Mesh, lanes: int,
+                          opt_overrides=None) -> Callable:
+    """train_step(state, batch) with `lanes`-way chunked DP grad sync."""
+    cfg = model.cfg
+    _, opt_update, _ = make_optimizer_for(cfg, **(opt_overrides or {}))
+    axis = "data"
+
+    def per_shard_step(state, batch):
+        def loss_fn(params):
+            loss, _ = model.train_loss(params, batch)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        # THE lane choice: k chunk-streams of the gradient all-reduce.
+        grads = laned_psum(grads, axis, lanes)
+        inv = 1.0 / jax.lax.axis_size(axis)
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        loss = jax.lax.pmean(loss, axis)
+        new_params, new_opt, opt_stats = opt_update(
+            grads, state["opt"], state["params"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, **opt_stats}
+
+    rep = P()
+    batch_spec = {"tokens": P(axis, None), "labels": P(axis, None)}
+    state_spec = jax.tree.map(lambda _: rep, {"dummy": 0})
+
+    def train_step(state, batch):
+        state_specs = jax.tree.map(lambda _: rep, state)
+        out = shard_map(
+            per_shard_step, mesh=mesh,
+            in_specs=(state_specs, batch_spec),
+            out_specs=(state_specs,
+                       {"loss": rep, "grad_norm": rep, "lr": rep}),
+            check_rep=False)(state, batch)
+        return out
+
+    return jax.jit(train_step)
+
+
+def compile_lane_variants(model, mesh: Mesh, state, batch,
+                          opt_overrides=None) -> Dict[int, Callable]:
+    """Pre-compile one executable per lane width (the design-time tables
+    of §3.4); the epoch controller indexes into this dict at runtime."""
+    out = {}
+    for w in LANE_WIDTHS:
+        fn = make_laned_train_step(model, mesh, w, opt_overrides)
+        fn(state, batch)           # trigger compile (cached thereafter)
+        out[w] = fn
+    return out

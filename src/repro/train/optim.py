@@ -1,0 +1,182 @@
+"""Optimizers (no external deps): AdamW and Adafactor, plus LR schedules
+and global-norm clipping.
+
+Adafactor (factored second moments, no first moment, no master copy) is the
+DESIGN.md §7 choice for the >=100B MoE archs — its state is ~0.1 B/param vs
+AdamW's 8 B/param (f32 m+v), which is what lets kimi-k2-1t fit 512 x 16 GB.
+State tensors inherit the parameter's sharding (factored stats reduce over
+one axis, so their specs drop that axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10_000
+    clip_norm: float = 1.0
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.int32(0)}
+
+
+def adamw_update(grads: Any, state: dict, params: Any,
+                 cfg: AdamWConfig) -> Tuple[Any, dict, dict]:
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg.lr, cfg.warmup, cfg.total_steps)(step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        m_hat = m_new / (1 - cfg.b1 ** step.astype(jnp.float32))
+        v_hat = v_new / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * p
+        return p - lr * delta, m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p
+           in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8           # beta2 exponent: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_dim_factored: int = 128
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor_init(params: Any) -> dict:
+    def one(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"row": row, "col": col}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+    return {"stats": jax.tree.map(one, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.int32(0)}
+
+
+def adafactor_update(grads: Any, state: dict, params: Any,
+                     cfg: AdafactorConfig) -> Tuple[Any, dict, dict]:
+    step = state["step"] + 1
+    stepf = step.astype(jnp.float32)
+    lr = cosine_schedule(cfg.lr, cfg.warmup, cfg.total_steps)(step)
+    beta2 = 1.0 - stepf ** (-cfg.decay)
+
+    def upd(g, stat, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if "row" in stat:
+            row = beta2 * stat["row"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            col = beta2 * stat["col"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            vhat = (row[..., None] / jnp.maximum(row_mean[..., None], 1e-30)
+                    ) * col[..., None, :]
+            new_stat = {"row": row, "col": col}
+        else:
+            vhat = beta2 * stat["v"] + (1 - beta2) * g2
+            new_stat = {"v": vhat}
+        update = g / jnp.sqrt(jnp.maximum(vhat, cfg.eps))
+        # update clipping (RMS-based, as in the Adafactor paper)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if cfg.weight_decay:
+            update = update + cfg.weight_decay * p
+        return p - lr * update, new_stat
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["stats"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_p, {"stats": new_s, "step": step}, \
+        {"grad_norm": global_norm(grads), "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Uniform facade
+# ---------------------------------------------------------------------------
+
+def make_optimizer(name: str, **overrides):
+    """Returns (init_fn, update_fn, cfg)."""
+    if name == "adamw":
+        cfg = AdamWConfig(**overrides)
+        return adamw_init, \
+            lambda g, s, p: adamw_update(g, s, p, cfg), cfg
+    if name == "adafactor":
+        cfg = AdafactorConfig(**overrides)
+        return adafactor_init, \
+            lambda g, s, p: adafactor_update(g, s, p, cfg), cfg
+    raise ValueError(f"unknown optimizer: {name}")

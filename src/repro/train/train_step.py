@@ -1,0 +1,167 @@
+"""Train step factory: loss -> grad -> optimizer update, with gradient
+accumulation, bf16 compute / f32 params, and ReSiPI lane metering.
+
+The returned step functions are pjit-ready: `state_pspecs` /
+`abstract_state` give matching sharding/abstract trees for
+jit(in_shardings=...) and `.lower()` without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.params import (ParamSpec, abstract_params, init_params,
+                                 is_spec, partition_specs)
+from repro.sharding.rules import Rules
+from repro.train import optim
+from repro.core.reconfig_runtime import collective_bytes_of
+
+
+# ---------------------------------------------------------------------------
+# State construction
+# ---------------------------------------------------------------------------
+
+def make_optimizer_for(cfg: ModelConfig, **overrides):
+    return optim.make_optimizer(cfg.optimizer, **overrides)
+
+
+def init_train_state(model, key: jax.Array) -> dict:
+    params = init_params(model.spec(), key)
+    opt_init, _, _ = make_optimizer_for(model.cfg)
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.int32(0)}
+
+
+def abstract_train_state(model) -> dict:
+    params = abstract_params(model.spec())
+    opt_init, _, _ = make_optimizer_for(model.cfg)
+    opt = jax.eval_shape(opt_init, params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _opt_stat_specs(spec_tree: Any, rules: Rules, optimizer: str) -> Any:
+    """PartitionSpecs for optimizer state, derived from ParamSpecs.
+
+    AdamW m/v mirror the parameter sharding. Adafactor row stats drop the
+    last parameter axis, col stats drop the second-to-last.
+    """
+    if optimizer == "adamw":
+        pspecs = partition_specs(spec_tree, rules)
+        return {"m": pspecs, "v": pspecs, "step": P()}
+
+    def one(s: ParamSpec):
+        if optim._factored(s.shape):
+            return {"row": rules.spec_for_shape(s.shape[:-1],
+                                                *s.axes[:-1]),
+                    "col": rules.spec_for_shape(
+                        s.shape[:-2] + s.shape[-1:],
+                        *(s.axes[:-2] + s.axes[-1:]))}
+        return {"v": rules.spec_for_shape(s.shape, *s.axes)}
+
+    return {"stats": jax.tree.map(one, spec_tree, is_leaf=is_spec),
+            "step": P()}
+
+
+def state_pspecs(model, rules: Rules) -> dict:
+    spec_tree = model.spec()
+    return {"params": partition_specs(spec_tree, rules),
+            "opt": _opt_stat_specs(spec_tree, rules, model.cfg.optimizer),
+            "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Step factory
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, accum: int = 1,
+                    opt_overrides: Optional[dict] = None,
+                    guard: bool = True
+                    ) -> Callable[[dict, dict], Tuple[dict, dict]]:
+    """Build train_step(state, batch) -> (state, metrics).
+
+    accum > 1 splits the batch into `accum` microbatches scanned
+    sequentially with gradient averaging (activation memory / step-time
+    trade, one of the §Perf levers).
+
+    guard=True applies the non-finite-loss skip *inside* the jitted step
+    (jnp.where select), which stays correct under buffer donation — the
+    large-run SDC/poison-batch protection (runtime/fault_tolerance.py).
+    """
+    cfg = model.cfg
+    _, opt_update, _ = make_optimizer_for(cfg, **(opt_overrides or {}))
+
+    def loss_fn(params, microbatch):
+        return model.train_loss(params, microbatch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, stats), grads = grad_fn(params, batch)
+        return loss, stats, grads
+
+    def accumulated(params, batch):
+        def split(x):
+            return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+        micro = jax.tree.map(split, batch)
+
+        def step(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, stats), grads = grad_fn(params, mb)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+            return (loss_acc + loss, grads_acc), stats
+
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                             params)
+        (loss_sum, grads), stats = jax.lax.scan(
+            step, (jnp.float32(0.0), zeros), micro)
+        stats = jax.tree.map(lambda s: s[-1], stats)
+        scale = 1.0 / accum
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return loss_sum * scale, stats, grads
+
+    def train_step(state, batch):
+        if accum > 1:
+            loss, stats, grads = accumulated(state["params"], batch)
+        else:
+            loss, stats, grads = single(state["params"], batch)
+        new_params, new_opt, opt_stats = opt_update(
+            grads, state["opt"], state["params"])
+        if guard:
+            ok = jnp.isfinite(loss) & jnp.isfinite(opt_stats["grad_norm"])
+            sel = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(ok, a, b), new, old)
+            new_params = sel(new_params, state["params"])
+            new_opt = sel(new_opt, state["opt"])
+            opt_stats = dict(opt_stats, skipped=(~ok).astype(jnp.int32))
+        metrics = {"loss": loss, **opt_stats,
+                   # Lane-controller metering (Eq. 5 numerator, Level 2):
+                   # static DP gradient-sync traffic for this step.
+                   "collective_bytes": collective_bytes_of(grads, 2)}
+        for k in ("aux_loss", "drop_frac"):
+            if k in stats:
+                metrics[k] = stats[k]
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def batch_pspecs(cfg: ModelConfig, rules: Rules, kind: str = "train"):
+    """PartitionSpecs for a data batch dict."""
+    specs = {"tokens": rules.spec("batch", None),
+             "labels": rules.spec("batch", None)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = rules.spec("batch", None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = rules.spec("batch", None, None)
+    if kind != "train":
+        specs.pop("labels")
+    return specs

@@ -1,0 +1,106 @@
+"""Checkpointing (roundtrip, atomicity, GC) + fault-tolerance machinery."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.runtime.fault_tolerance import (Heartbeat, StepGuard,
+                                           StragglerMonitor)
+from repro.runtime.elastic import rescale_batch
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    ckpt.save_checkpoint(tree, str(tmp_path), step=10)
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+        jnp.shape(x), jnp.result_type(x)), tree)
+    restored = ckpt.restore_checkpoint(like, str(tmp_path))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), tree, restored)
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save_checkpoint(tree, str(tmp_path), step=s, keep=3)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    kept = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert len(kept) == 3
+    assert kept[-1] == "step_00000005"
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ckpt.save_checkpoint(_tree(), str(tmp_path), step=1)
+    bad_like = {"a": jax.ShapeDtypeStruct((5, 8), jnp.float32),
+                "nested": {"b": jax.ShapeDtypeStruct((6,), jnp.int32),
+                           "c": jax.ShapeDtypeStruct((), jnp.float32)}}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore_checkpoint(bad_like, str(tmp_path))
+
+
+def test_train_state_roundtrip(tmp_path):
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.train.train_step import init_train_state
+    model = get_model(get_smoke_config("stablelm-3b"))
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    ckpt.save_checkpoint(state, str(tmp_path), step=7)
+    restored = ckpt.restore_checkpoint(state, str(tmp_path))
+    np.testing.assert_allclose(
+        np.asarray(restored["params"]["embed"]["embedding"]),
+        np.asarray(state["params"]["embed"]["embedding"]))
+
+
+def test_heartbeat_detects_stall():
+    hb = Heartbeat(timeout_factor=3.0)
+    assert hb.beat(1.0)
+    assert hb.beat(1.1)
+    assert not hb.beat(10.0)        # 10x slower => degraded
+    assert hb.degraded
+
+
+def test_step_guard_abort_after_max_skips():
+    g = StepGuard(max_skips=2)
+    assert g.check(1.0, 1.0)
+    assert not g.check(float("nan"), 1.0)
+    assert not g.check(1.0, float("inf"))
+    with pytest.raises(RuntimeError, match="aborting"):
+        g.check(float("nan"), 1.0)
+
+
+def test_step_guard_grad_spike():
+    g = StepGuard(grad_spike_factor=10.0)
+    for _ in range(5):
+        assert g.check(1.0, 1.0)
+    assert not g.check(1.0, 100.0)   # 100x the EWMA
+
+
+def test_straggler_monitor_lane_narrowing():
+    m = StragglerMonitor(n_pods=4, threshold=1.3, escalate_after=2)
+    for epoch in range(2):
+        for pod in range(4):
+            for _ in range(5):
+                m.record(pod, 2.0 if pod == 3 else 1.0)
+        v = m.epoch_verdict()
+        assert v["slow_pods"] == [3]
+        assert v["narrow_lanes_for"] == [3]
+    assert v["escalate"] == [3]      # persistent => checkpoint/restart
+
+
+def test_elastic_rescale_preserves_global_batch():
+    plan = rescale_batch(global_batch=256, old_dp=32, new_dp=16)
+    assert plan["per_replica_batch"] == 16
+    assert plan["grad_accum"] == 2
+    with pytest.raises(AssertionError):
+        rescale_batch(global_batch=256, old_dp=32, new_dp=7)

@@ -1,0 +1,90 @@
+"""Controller tests: Eqs. 5-10, hysteresis properties, Fig. 6 table."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gateway_controller import (ControllerConfig,
+                                           ControllerState,
+                                           average_gateway_load, epoch_step,
+                                           scan_controller, t_n, t_p,
+                                           update_gateways)
+
+CFG = ControllerConfig(l_m=0.0152, max_gateways=4)
+
+
+def test_eq5_average_load():
+    # L = P / (T * g)
+    load = average_gateway_load(jnp.float32(3040.0), jnp.float32(1e5),
+                                jnp.int32(2))
+    assert float(load) == pytest.approx(0.0152)
+
+
+def test_fig6_threshold_table():
+    """T_N_g = L_m (1 - 1/g): 0, Lm/2, 2Lm/3, 3Lm/4 for g=1..4 (Fig. 6)."""
+    expect = [0.0, 0.0076, 0.0152 * 2 / 3, 0.0114]
+    got = [float(t_n(jnp.int32(g), CFG)) for g in (1, 2, 3, 4)]
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+    assert float(t_p(CFG)) == pytest.approx(0.0152)
+
+
+def test_eq6_increase_on_overload():
+    g = jnp.asarray([1, 2, 3, 4])
+    load = jnp.full((4,), 0.02)          # > L_m everywhere
+    out = update_gateways(g, load, CFG)
+    np.testing.assert_array_equal(np.asarray(out), [2, 3, 4, 4])  # capped
+
+
+def test_eq7_decrease_on_underload():
+    g = jnp.asarray([1, 2, 3, 4])
+    load = jnp.full((4,), 0.001)         # < T_N for g >= 2
+    out = update_gateways(g, load, CFG)
+    np.testing.assert_array_equal(np.asarray(out), [1, 1, 2, 3])  # floored
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(min_value=0.0, max_value=0.1, allow_nan=False),
+       st.integers(min_value=1, max_value=4))
+def test_hysteresis_bands_disjoint(load, g):
+    """T_N_g < T_P for all g, so a single load can never trigger both an
+    increase and a decrease — the controller cannot oscillate within one
+    interval."""
+    assert float(t_n(jnp.int32(g), CFG)) < float(t_p(CFG))
+    out = int(update_gateways(jnp.asarray([g]), jnp.asarray([load]),
+                              CFG)[0])
+    assert abs(out - g) <= 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(min_value=0.0005, max_value=0.012))
+def test_steady_load_reaches_fixed_point(load):
+    """Under constant load the controller converges and stays put."""
+    trace = jnp.full((30, 1), load)
+    recs = scan_controller(trace, CFG, interval_cycles=1e6)
+    g = np.asarray(recs["g_after"])[:, 0]
+    # after convergence, g stays constant
+    tail = g[-5:]
+    assert np.all(tail == tail[0])
+    # and the steady g's per-gateway load sits inside the hysteresis band
+    g_star = int(tail[0])
+    per_gw = load / g_star
+    if g_star < 4:
+        assert per_gw <= CFG.l_m + 1e-9
+    if g_star > 1:
+        assert per_gw >= float(t_n(jnp.int32(g_star), CFG)) - 1e-9 or \
+            g_star == 1
+
+
+def test_init_at_maximum():
+    st0 = ControllerState.init(4, CFG)
+    np.testing.assert_array_equal(np.asarray(st0.g), [4, 4, 4, 4])
+
+
+def test_epoch_step_records():
+    st0 = ControllerState.init(2, CFG)
+    packets = jnp.asarray([40000.0, 100.0])   # heavy / light chiplet
+    st1, rec = epoch_step(st0, packets, 1e6, CFG)
+    assert int(rec["gt"]) == int(jnp.sum(st1.g))
+    assert int(st1.epoch) == 1
+    # light chiplet decreases from 4 (load < T_N_4)
+    assert int(st1.g[1]) == 3

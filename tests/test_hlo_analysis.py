@@ -1,0 +1,78 @@
+"""Unit tests for the trip-count-corrected HLO static analyzer."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (_shape_info, _split_type,
+                                       _wire_bytes, analyze_hlo)
+
+CANNED = """\
+HloModule jit_f, entry_computation_layout={(f32[8,16])->f32[8,16]}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+  %arg = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%zero, %arg)
+  %while = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%while), index=1
+}
+"""
+
+
+def test_shape_info():
+    nbytes, shapes = _shape_info("f32[8,16]{1,0}")
+    assert nbytes == 8 * 16 * 4
+    nbytes, shapes = _shape_info("(f32[4], bf16[2,2])")
+    assert nbytes == 16 + 8
+
+
+def test_split_type_tuple():
+    t, rest = _split_type("(s32[], f32[8,16]) while(%t0), condition=%c")
+    assert t == "(s32[], f32[8,16])"
+    assert rest.startswith("while(")
+
+
+def test_wire_byte_factors():
+    assert _wire_bytes("all-reduce", 100, 4) == 2 * 0.75 * 100
+    assert _wire_bytes("all-gather", 100, 4) == 0.75 * 100
+    assert _wire_bytes("reduce-scatter", 100, 4) == 300
+    assert _wire_bytes("collective-permute", 100, 4) == 100
+
+
+def test_while_trip_count_multiplication():
+    res = analyze_hlo(CANNED, n_devices=8)
+    # dot flops: 2 * 8*16 * 16 = 4096 per iteration, x10 trips
+    assert res["flops_per_device"] == 10 * 2 * 8 * 16 * 16
+    # all-reduce wire: group size 4, 8*16*4 bytes, x10
+    expect = 10 * 2 * (3 / 4) * (8 * 16 * 4)
+    np.testing.assert_allclose(res["collectives"]["all-reduce"], expect)
+    assert res["collectives"]["total_wire_bytes"] == \
+        res["collectives"]["all-reduce"]
+
+
+def test_entry_detection():
+    res = analyze_hlo(CANNED, n_devices=8)
+    assert res["entry"].endswith("main")

@@ -1,0 +1,144 @@
+"""Pallas kernel tests: shape/dtype sweeps vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import reference_attention
+from repro.kernels.ssd_scan.ops import ssd_chunked_pallas
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_pallas
+from repro.kernels.ssd_scan.ref import reference_intra_chunk
+from repro.models.ssm import ssd_chunked
+from repro.kernels.noc_step.kernel import noc_run_pallas
+from repro.kernels.noc_step.ref import reference_noc_run
+from repro.kernels.noc_step.ops import build_topology
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,d", [(2, 256, 4, 64), (1, 384, 2, 80),
+                                     (2, 512, 3, 128), (1, 128, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_reference(b, s, h, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, h, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, h, d), dtype)
+    out = flash_attention(q, k, v, causal=True)
+    qt, kt, vt = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    ref = reference_attention(qt, kt, vt, causal=True).transpose(0, 2, 1, 3)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = flash_attention(q, k, v, causal=False)
+    qt, kt, vt = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    ref = reference_attention(qt, kt, vt, causal=False).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=st.sampled_from([128, 256, 384]),
+       h=st.integers(min_value=1, max_value=4),
+       d=st.sampled_from([32, 64, 96]))
+def test_flash_hypothesis_sweep(s, h, d):
+    ks = jax.random.split(jax.random.PRNGKey(s * h + d), 3)
+    q = jax.random.normal(ks[0], (1, s, h, d))
+    k = jax.random.normal(ks[1], (1, s, h, d))
+    v = jax.random.normal(ks[2], (1, s, h, d))
+    out = flash_attention(q, k, v, causal=True)
+    qt, kt, vt = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    ref = reference_attention(qt, kt, vt, causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def _ssd_inputs(b, l, h, p, g, n, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bb = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    cc = jax.random.normal(ks[4], (b, l, g, n)) * 0.5
+    return x, dt, a, bb, cc
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,chunk", [
+    (2, 128, 4, 16, 1, 16, 32), (1, 256, 6, 32, 2, 8, 64),
+    (1, 64, 2, 8, 1, 4, 16)])
+def test_ssd_kernel_full_scan(b, l, h, p, g, n, chunk):
+    x, dt, a, bb, cc = _ssd_inputs(b, l, h, p, g, n)
+    y_k, s_k = ssd_chunked_pallas(x, dt, a, bb, cc, chunk)
+    y_r, s_r = ssd_chunked(x, dt, a, bb, cc, chunk)
+    np.testing.assert_allclose(y_k, y_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_intra_kernel_vs_oracle():
+    b, nc, q, h, p, n = 1, 2, 32, 3, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (b, nc, q, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, q, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, nc, q, h, n)) * 0.5
+    cc = jax.random.normal(ks[4], (b, nc, q, h, n)) * 0.5
+    y_k, s_k = ssd_intra_chunk_pallas(x, dt, a, bb, cc)
+    y_r, s_r = reference_intra_chunk(x, dt, a, bb, cc)
+    np.testing.assert_allclose(y_k, y_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(s_k, s_r, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_chunk_invariance():
+    """The chunked algorithm must be exact: result independent of chunk."""
+    x, dt, a, bb, cc = _ssd_inputs(1, 128, 2, 8, 1, 8)
+    y32, s32 = ssd_chunked(x, dt, a, bb, cc, 32)
+    y64, s64 = ssd_chunked(x, dt, a, bb, cc, 64)
+    np.testing.assert_allclose(y32, y64, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s32), np.asarray(s64),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# NoC flit kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("g,w", [(1, 16), (2, 4), (4, 4)])
+def test_noc_kernel_vs_oracle(g, w):
+    nm, drain, buf, _ = build_topology(g, w)
+    n = nm.shape[0]
+    arr = (jax.random.uniform(jax.random.PRNGKey(g), (512, n)) <
+           0.03).astype(jnp.float32) * 8
+    rk, ok, dk = noc_run_pallas(arr, jnp.asarray(nm), jnp.asarray(drain),
+                                jnp.asarray(buf), t_chunk=128)
+    rr, orr, dr = reference_noc_run(arr, jnp.asarray(nm),
+                                    jnp.asarray(drain), jnp.asarray(buf))
+    np.testing.assert_allclose(rk, rr, atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(dk, dr, atol=1e-2, rtol=1e-4)
+
+
+def test_noc_flit_conservation():
+    """Flits are conserved: injected = drained + still-queued."""
+    nm, drain, buf, _ = build_topology(2, 4)
+    n = nm.shape[0]
+    arr = (jax.random.uniform(jax.random.PRNGKey(9), (1024, n)) <
+           0.02).astype(jnp.float32) * 8
+    resid, occ, drained = reference_noc_run(
+        arr, jnp.asarray(nm), jnp.asarray(drain), jnp.asarray(buf))
+    injected = float(jnp.sum(arr))
+    assert float(jnp.sum(drained) + jnp.sum(occ)) == pytest.approx(
+        injected, rel=1e-5)

@@ -1,0 +1,93 @@
+"""Optimizer tests: AdamW reference math, Adafactor state shapes/footprint,
+clipping, schedules, guarded step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optim
+
+
+def test_adamw_first_step_matches_reference():
+    cfg = optim.AdamWConfig(lr=1e-2, warmup=1, total_steps=100,
+                            weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5])}
+    state = optim.adamw_init(params)
+    new_p, new_s, stats = optim.adamw_update(grads, state, params, cfg)
+    # step 1: m_hat = g, v_hat = g^2 => update = g/|g| = sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(params["w"]) - 1e-2 * 1.0,
+                               rtol=1e-4)
+
+
+def test_adamw_converges_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1, warmup=5, total_steps=200,
+                            weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = optim.adamw_init(params)
+    for _ in range(150):
+        grads = {"w": params["w"]}        # d/dw of w^2/2
+        params, state, _ = optim.adamw_update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.2
+
+
+def test_adafactor_factored_state_small():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((7,))}
+    state = optim.adafactor_init(params)
+    assert state["stats"]["w"]["row"].shape == (64,)
+    assert state["stats"]["w"]["col"].shape == (32,)
+    assert state["stats"]["b"]["v"].shape == (7,)
+    # factored footprint << adamw footprint
+    af = 64 + 32
+    adamw = 2 * 64 * 32
+    assert af < adamw / 10
+
+
+def test_adafactor_converges():
+    cfg = optim.AdafactorConfig(lr=0.3, warmup=5, total_steps=300)
+    params = {"w": jnp.full((8, 4), 3.0)}
+    state = optim.adafactor_init(params)
+    for _ in range(200):
+        grads = {"w": params["w"]}
+        params, state, _ = optim.adafactor_update(grads, state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0, 4.0])}     # norm 5
+    clipped, norm = optim.clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = optim.cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert float(lr(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(lr(jnp.int32(55))) < 1.0
+
+
+def test_guarded_train_step_skips_nonfinite():
+    """The in-jit guard must freeze params on a NaN batch (donation-safe
+    SDC protection)."""
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.train.train_step import init_train_state, make_train_step
+    cfg = get_smoke_config("stablelm-3b")
+    model = get_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    # simulate silent data corruption: poison one embedding row with NaN
+    emb = state["params"]["embed"]["embedding"]
+    state["params"]["embed"]["embedding"] = emb.at[0].set(jnp.nan)
+    step = jax.jit(make_train_step(model, guard=True))
+    bad = {"tokens": jnp.zeros((2, 16), jnp.int32),
+           "labels": jnp.ones((2, 16), jnp.int32)}
+    w_before = state["params"]["ln_f"]["scale"]
+    new_state, metrics = step(state, bad)
+    assert int(metrics["skipped"]) == 1
+    np.testing.assert_array_equal(
+        np.asarray(new_state["params"]["ln_f"]["scale"]),
+        np.asarray(w_before))

@@ -1,0 +1,95 @@
+"""Photonic device model tests: Eqs. 1-4, power gating, non-volatility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import photonics
+from repro.core.constants import PHOTONIC_POWER
+
+
+def test_pcmc_coupling_ratio_eq1():
+    k = photonics.pcmc_coupling_ratio(jnp.float32(2.0), jnp.float32(4.0))
+    assert float(k) == pytest.approx(0.5)
+    # clipped to physical range
+    assert float(photonics.pcmc_coupling_ratio(
+        jnp.float32(9.0), jnp.float32(3.0))) == 1.0
+
+
+def test_pcmc_split_eqs2_3():
+    pc, pb = photonics.pcmc_split(jnp.float32(10.0), jnp.float32(0.3))
+    assert float(pc) == pytest.approx(3.0)
+    assert float(pb) == pytest.approx(7.0)
+
+
+def test_pcmc_split_three_states_fig5():
+    # crystalline: all to Bar; amorphous: all to Cross; partial: split
+    pc, pb = photonics.pcmc_split(jnp.float32(1.0), jnp.float32(0.0))
+    assert float(pc) == 0.0 and float(pb) == 1.0
+    pc, pb = photonics.pcmc_split(jnp.float32(1.0), jnp.float32(1.0))
+    assert float(pc) == 1.0 and float(pb) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.booleans(), min_size=2, max_size=18))
+def test_equal_power_share_eq4(active_list):
+    """Eq. 4's defining property: every active gateway receives P/GT and
+    idle gateways receive zero, for ANY activity pattern."""
+    active = jnp.asarray(active_list, bool)
+    p_in = jnp.float32(120.0)
+    recv = photonics.power_division(active, p_in)
+    gt = int(np.sum(active_list))
+    if gt == 0:
+        np.testing.assert_allclose(np.asarray(recv), 0.0, atol=1e-4)
+        return
+    expect = 120.0 / gt
+    for i, a in enumerate(active_list):
+        if a:
+            assert float(recv[i]) == pytest.approx(expect, rel=1e-4)
+        else:
+            assert float(recv[i]) == pytest.approx(0.0, abs=1e-4)
+
+
+def test_kappa_schedule_matches_paper_index_form():
+    # all active: kappa_i = 1/(GT - i), i = # active upstream
+    active = jnp.ones((6,), bool)
+    kappa = photonics.kappa_schedule(active)
+    np.testing.assert_allclose(
+        np.asarray(kappa), [1 / 6, 1 / 5, 1 / 4, 1 / 3, 1 / 2],
+        rtol=1e-6)
+
+
+def test_reconfig_energy_nonvolatile():
+    """PCM retains state at zero power: unchanged activity = zero energy."""
+    a = jnp.asarray([1, 0, 1, 1, 0, 1], bool)
+    assert float(photonics.reconfig_energy_nj(a, a)) == 0.0
+    b = jnp.asarray([1, 1, 1, 1, 0, 1], bool)
+    assert float(photonics.reconfig_energy_nj(a, b)) > 0.0
+
+
+def test_power_modes_ordering():
+    """PCM gating at low activity must beat the wdm design with all
+    gateways lit, and laser power must scale with the loss budget."""
+    n = 18
+    low = jnp.zeros((n,), bool).at[:6].set(True)
+    pcm = photonics.interposer_power_mw(low, 4.0, n_gateways=n, mode="pcm")
+    wdm = photonics.interposer_power_mw(jnp.ones((6,), bool),
+                                        jnp.full((6,), 16.0),
+                                        n_gateways=6, mode="wdm")
+    assert float(pcm["total_mw"]) < float(wdm["total_mw"])
+    lossless = photonics.interposer_power_mw(low, 4.0, n_gateways=n,
+                                             mode="pcm", loss_db=0.0)
+    lossy = photonics.interposer_power_mw(low, 4.0, n_gateways=n,
+                                          mode="pcm", loss_db=1.8)
+    assert float(lossy["laser_mw"]) == pytest.approx(
+        float(lossless["laser_mw"]) * 10 ** 0.18, rel=1e-5)
+
+
+def test_interposer_geometry_counts():
+    g = photonics.InterposerGeometry(n_gateways=6, wavelengths=4)
+    assert g.mrgs == 6
+    assert g.pcmcs == 5
+    assert g.modulators_per_mrg == 4
+    assert g.filters_per_mrg == 20       # (N-1) rows x W
+    assert g.total_mrs == 6 * 24

@@ -1,0 +1,54 @@
+"""Gateway-selection tests: Fig. 8 balanced partition properties."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.constants import NETWORK
+from repro.core.selection import (build_selection_tables, hop_count,
+                                  mean_access_hops, select_dest_gateway,
+                                  select_source_gateway)
+
+TABLES = build_selection_tables()
+
+
+def test_every_router_assigned_every_level():
+    r = NETWORK.routers_per_chiplet
+    for g in range(1, 5):
+        assign = TABLES.src_map[g - 1]
+        assert assign.shape == (r,)
+        assert assign.min() >= 0 and assign.max() < g
+
+
+def test_balanced_partition_rg():
+    """|group| <= ceil(R/g) — the R_g = R/g balance rule of §3.4."""
+    r = NETWORK.routers_per_chiplet
+    for g in range(1, 5):
+        counts = np.bincount(TABLES.src_map[g - 1], minlength=g)
+        assert counts.max() <= -(-r // g)
+        assert counts.sum() == r
+
+
+def test_hops_decrease_with_more_gateways():
+    """Fig. 3's argument: more gateways => shorter router->gateway walks."""
+    hops = TABLES.src_hops
+    assert hops[3] < hops[1] < hops[0]
+    assert hops[3] < hops[2] < hops[0]
+
+
+def test_single_gateway_assigns_all_to_it():
+    assert set(np.unique(TABLES.src_map[0])) == {0}
+
+
+def test_runtime_lookups():
+    t = TABLES.as_jax()
+    gw = select_source_gateway(t, jnp.int32(5), jnp.int32(2))
+    assert int(gw) in (0, 1)
+    gw = select_dest_gateway(t, jnp.int32(15), jnp.int32(4))
+    assert 0 <= int(gw) < 4
+    h = mean_access_hops(t, jnp.asarray([1, 4]))
+    assert float(h[1]) < float(h[0])
+
+
+def test_hop_count_is_manhattan():
+    a = np.array([0, 0])
+    b = np.array([3, 2])
+    assert hop_count(a, b) == 5

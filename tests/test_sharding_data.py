@@ -1,0 +1,123 @@
+"""Sharding rules, data pipeline, and reconfig-runtime tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core import reconfig_runtime as lanes
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.configs import get_smoke_config
+from repro.sharding.rules import DEFAULT_RULES, Rules
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    """Mesh stand-in with named axis sizes (no devices needed)."""
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        import numpy as _np
+        self.devices = _np.empty(tuple(sizes.values()))
+        self.size = int(self.devices.size)
+
+
+def test_spec_resolution_and_dedup():
+    rules = Rules(FakeMesh({"data": 16, "model": 16}))
+    assert rules.spec("batch", None) == P("data", None)
+    assert rules.spec("batch", "heads") == P("data", "model")
+    # an axis may be used once per spec: second consumer degrades to None
+    assert rules.spec("heads", "ff") == P("model", None)
+
+
+def test_spec_for_shape_divisibility_guard():
+    rules = Rules(FakeMesh({"data": 16, "model": 16}))
+    # 24 heads % 16 != 0 -> replicated; 32 % 16 == 0 -> sharded
+    assert rules.spec_for_shape((10, 24), None, "heads") == P(None, None)
+    assert rules.spec_for_shape((10, 32), None, "heads") == P(None, "model")
+    # multi-axis product check: batch -> (pod, data) = 32
+    r3 = Rules(FakeMesh({"pod": 2, "data": 16, "model": 16}))
+    assert r3.spec_for_shape((256, 4), "batch", None)[0] == ("pod", "data")
+    assert r3.spec_for_shape((8, 4), "batch", None)[0] is None
+
+
+def test_fsdp_rule_active():
+    assert DEFAULT_RULES["model_d"] == ("data",)
+    assert DEFAULT_RULES["kv_seq"] == ("model",)
+
+
+def test_data_determinism_and_restart():
+    cfg = get_smoke_config("stablelm-3b")
+    data = SyntheticLM(cfg, DataConfig(global_batch=4, seq_len=32, seed=3))
+    a = data.host_slice(step=17)
+    b = data.host_slice(step=17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = data.host_slice(step=18)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].max() < cfg.real_vocab
+    # next-token alignment: labels are tokens shifted by one
+    full_a = np.concatenate([a["tokens"], a["labels"][:, -1:]], axis=1)
+    np.testing.assert_array_equal(full_a[:, 1:], a["labels"])
+
+
+def test_data_learnable_structure():
+    cfg = get_smoke_config("stablelm-3b")
+    data = SyntheticLM(cfg, DataConfig(global_batch=8, seq_len=256,
+                                       repeat_p=0.3))
+    b = data.host_slice(0)
+    rep = np.mean(b["labels"][:, 1:] == b["labels"][:, :-1])
+    assert rep > 0.2   # repetition signal present
+
+
+# ---------------------------------------------------------------------------
+# Level-2 lane controller
+# ---------------------------------------------------------------------------
+
+def test_lane_controller_widens_and_narrows():
+    cfg = lanes.LaneConfig(max_lanes=4, l_m=0.5,
+                           lane_bytes_per_step=1e6)
+    st_ = lanes.LaneState.init(cfg)
+    # heavy traffic: load per lane > l_m at 4 lanes -> stays/widens (capped)
+    for _ in range(10):
+        st_ = lanes.meter_step(st_, jnp.float32(4e6))
+    st_, rec = lanes.epoch_update(st_, cfg)
+    assert int(rec["lanes_after"]) == 4
+    # light traffic: narrows one step per epoch
+    for _ in range(3):
+        for _ in range(10):
+            st_ = lanes.meter_step(st_, jnp.float32(1e4))
+        st_, rec = lanes.epoch_update(st_, cfg)
+    assert int(rec["lanes_after"]) == 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 12))
+def test_chunk_pytree_partition(lanes_n, n_leaves):
+    key = jax.random.PRNGKey(n_leaves)
+    tree = {f"w{i}": jnp.ones((i + 1, 7)) for i in range(n_leaves)}
+    bins = lanes.chunk_pytree(tree, lanes_n)
+    assert len(bins) == lanes_n
+    total = sum(len(b) for b in bins)
+    assert total == n_leaves
+    merged = lanes.merge_chunks(bins, tree)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), tree, merged)
+
+
+def test_laned_psum_single_lane_identity():
+    tree = {"g": jnp.arange(6.0)}
+    out = lanes.laned_psum(tree, None, 1)       # lanes=1: plain psum path
+    # psum with axis None outside pmap is identity-ish; just check structure
+    assert set(out) == {"g"}
+
+
+def test_collective_bytes_estimate():
+    tree = {"w": jnp.zeros((1000,), jnp.float32)}
+    b = float(lanes.collective_bytes_of(tree, axis_size=2))
+    assert b == pytest.approx(2 * 0.5 * 4000)
+
+
+def test_nearest_compiled_width():
+    assert lanes.nearest_compiled_width(3) in (2, 4)
+    assert lanes.nearest_compiled_width(1) == 1
+    assert lanes.nearest_compiled_width(4) == 4

@@ -1,0 +1,93 @@
+"""Network-simulator tests: qualitative invariants + paper-claim bands."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.noc import NocModel
+from repro.core.simulator import Arch, SimConfig, simulate, \
+    simulate_all_archs
+
+
+@pytest.fixture(scope="module")
+def dedup_trace():
+    return traffic.generate_trace("dedup", 40, jax.random.PRNGKey(0))
+
+
+def test_latency_monotone_in_load():
+    noc = NocModel()
+    loads = jnp.asarray([0.001, 0.01, 0.02, 0.04])
+    lat = noc.inter_chiplet_latency(loads, 4.0, jnp.float32(1.5),
+                                    jnp.float32(1.5))
+    assert np.all(np.diff(np.asarray(lat)) > 0)
+
+
+def test_port_limit_caps_wavelength_benefit():
+    """Beyond ~3 wavelengths the electronic port binds: 16 lambdas must not
+    be materially faster than 4 (the Fig. 3 design-A failure mode)."""
+    noc = NocModel()
+    l4 = float(noc.gateway_latency(jnp.float32(0.03), 4.0))
+    l16 = float(noc.gateway_latency(jnp.float32(0.03), 16.0))
+    assert l16 >= 0.95 * l4
+
+
+def test_resipi_beats_prowaves_on_heavy_traffic():
+    tr = traffic.generate_trace("blackscholes", 40, jax.random.PRNGKey(1))
+    out = simulate_all_archs(tr)
+    assert out["resipi"]["mean_latency"] < out["prowaves"]["mean_latency"]
+    assert out["resipi"]["mean_power_mw"] < out["prowaves"]["mean_power_mw"]
+
+
+def test_resipi_saves_power_vs_all_gateways(dedup_trace):
+    out = simulate_all_archs(dedup_trace)
+    assert out["resipi"]["mean_power_mw"] < \
+        out["resipi_all"]["mean_power_mw"]
+    # and pays only a small latency premium for it (Fig. 11.a)
+    assert out["resipi"]["mean_latency"] < \
+        1.6 * out["resipi_all"]["mean_latency"]
+
+
+def test_awgr_slowest_at_high_load():
+    tr = traffic.generate_trace("canneal", 40, jax.random.PRNGKey(2))
+    out = simulate_all_archs(tr)
+    assert out["awgr"]["mean_latency"] > out["resipi"]["mean_latency"]
+
+
+def test_gateway_counts_track_load(dedup_trace):
+    heavy = traffic.generate_trace("blackscholes", 40, jax.random.PRNGKey(3))
+    light = traffic.generate_trace("facesim", 40, jax.random.PRNGKey(3))
+    sim = SimConfig().with_arch(Arch.RESIPI)
+    g_heavy = float(simulate(heavy, sim)["summary"]["mean_gateways"])
+    g_light = float(simulate(light, sim)["summary"]["mean_gateways"])
+    assert g_heavy > g_light
+
+
+def test_reconfig_energy_only_on_changes(dedup_trace):
+    sim = SimConfig().with_arch(Arch.RESIPI_ALL)      # static: no changes
+    out = simulate(dedup_trace, sim)["summary"]
+    assert float(out["total_reconfig_nj"]) == 0.0
+
+
+def test_paper_claim_bands():
+    """Average over all 8 apps must land near the paper's -37/-25/-53
+    (tolerance: +-15 points — the simulator is epoch-scale, not Noxim)."""
+    import numpy as np
+    rows = {}
+    for app in traffic.APP_NAMES:
+        tr = traffic.generate_trace(app, 60, jax.random.PRNGKey(1))
+        rows[app] = simulate_all_archs(tr)
+    lat = np.mean([1 - float(rows[a]["resipi"]["mean_latency"])
+                   / float(rows[a]["prowaves"]["mean_latency"])
+                   for a in rows])
+    pw = np.mean([1 - float(rows[a]["resipi"]["mean_power_mw"])
+                  / float(rows[a]["prowaves"]["mean_power_mw"])
+                  for a in rows])
+    en = np.mean([1 - float(rows[a]["resipi"]["mean_energy"])
+                  / float(rows[a]["prowaves"]["mean_energy"])
+                  for a in rows])
+    assert 0.22 <= lat <= 0.52, lat     # paper: 0.37
+    assert 0.10 <= pw <= 0.40, pw       # paper: 0.25
+    assert 0.38 <= en <= 0.68, en       # paper: 0.53

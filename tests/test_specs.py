@@ -1,0 +1,59 @@
+"""Dry-run spec machinery: abstract inputs + pspecs for every cell build
+without touching jax device state (shapes only)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, cell_applicable, get_config
+from repro.launch import specs as S
+from repro.sharding.rules import Rules
+
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.axis_names = tuple(sizes)
+        import numpy as np
+        self.devices = np.empty(tuple(sizes.values()))
+        self.size = int(self.devices.size)
+
+
+RULES = Rules(FakeMesh({"data": 16, "model": 16}))
+RULES3 = Rules(FakeMesh({"pod": 2, "data": 16, "model": 16}))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("cellname", [s.name for s in SHAPES])
+@pytest.mark.parametrize("rules", [RULES, RULES3], ids=["1pod", "2pod"])
+def test_cell_specs_build(arch, cellname, rules):
+    cfg = get_config(arch)
+    cell = next(s for s in SHAPES if s.name == cellname)
+    ok, _ = cell_applicable(cfg, cell)
+    if not ok:
+        pytest.skip("cell not applicable")
+    if cell.kind in ("train", "prefill"):
+        batch, pspecs = S.batch_specs(cfg, cell, rules)
+        assert set(batch) == set(pspecs)
+        for k, v in batch.items():
+            assert isinstance(v, jax.ShapeDtypeStruct)
+            assert v.shape[0] == cell.global_batch
+    else:
+        toks, tspec = S.decode_tokens_specs(cfg, cell, rules)
+        assert toks.shape == (cell.global_batch, 1)
+        caches, cspecs = S.decode_cache_specs(cfg, cell, rules)
+        # structures must match exactly (pjit requirement)
+        jax.tree.structure(caches) == jax.tree.structure(
+            cspecs, is_leaf=lambda x: x is None)
+
+
+def test_vlm_text_length_accounts_for_patches():
+    cfg = get_config("pixtral-12b")
+    cell = next(s for s in SHAPES if s.name == "train_4k")
+    batch, _ = S.batch_specs(cfg, cell, RULES)
+    assert batch["tokens"].shape[1] + cfg.frontend_embeds == cell.seq_len
+
+
+def test_long_500k_only_subquadratic():
+    cell = next(s for s in SHAPES if s.name == "long_500k")
+    runnable = [a for a in ARCH_NAMES
+                if cell_applicable(get_config(a), cell)[0]]
+    assert sorted(runnable) == ["mamba2-130m", "zamba2-7b"]
