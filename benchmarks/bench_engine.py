@@ -1,0 +1,114 @@
+"""Engine benchmark: cold-compile vs warm-call vs batched throughput.
+
+Times the Fig. 10 design-space exploration three ways:
+
+  * seed loop   — `simulate_eager`: the pre-engine path that rebuilds the
+                  selection tables and re-traces the scan on every one of the
+                  app x gateway-count calls (8 x 4 = 32 calls).
+  * engine cold — `sweep_batch`: the whole apps x gateway-counts grid as
+                  ONE compiled call, including jit compilation (caches
+                  cleared first).
+  * engine warm — the same call against a hot compile cache: the
+                  steady-state cost of every subsequent DSE.
+
+plus single-call jit latency and a 64-point `sweep` over L_m. Results land
+in benchmarks/results/BENCH_engine.json so later PRs have a perf trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import traffic
+from repro.core.simulator import (clear_engine_caches, simulate,
+                                  simulate_eager, stack_traces, sweep)
+from benchmarks.common import fixed_gateway_config, save_json
+from benchmarks.fig10_lm_dse import GATEWAY_COUNTS, dse_grid
+
+
+def _timed(fn) -> float:
+    t0 = time.time()
+    jax.block_until_ready(fn())
+    return time.time() - t0
+
+
+def _dse_seed_loop(traces: dict) -> float:
+    def go():
+        outs = []
+        for tr in traces.values():
+            for g in GATEWAY_COUNTS:
+                outs.append(simulate_eager(tr, fixed_gateway_config(g))
+                            ["summary"]["mean_latency"])
+        return outs
+    return _timed(go)
+
+
+def _dse_engine(batch: dict) -> float:
+    return _timed(lambda: dse_grid(batch)["summary"]["mean_latency"])
+
+
+def run(n_intervals: int = 60, seed: int = 7) -> dict:
+    traces = traffic.all_app_traces(n_intervals, seed=seed)
+    apps = list(traces)
+    batch = stack_traces([traces[a] for a in apps])
+    n_sims = len(apps) * len(GATEWAY_COUNTS)
+    sim0 = fixed_gateway_config(2)
+    tr0 = traces[apps[0]]
+
+    # -- seed-parity baseline (per-call retrace loop) -----------------------
+    seed_loop_s = _dse_seed_loop(traces)
+
+    # -- engine: cold (compile) then warm (cache hit) -----------------------
+    clear_engine_caches()
+    engine_cold_s = _dse_engine(batch)
+    engine_warm_s = _dse_engine(batch)
+
+    # -- single-call latency ------------------------------------------------
+    clear_engine_caches()
+    single_cold_s = _timed(lambda: simulate(tr0, sim0)["summary"])
+    single_warm_s = _timed(lambda: simulate(tr0, sim0)["summary"])
+
+    # -- vmapped parameter sweep (64-point L_m grid) ------------------------
+    lm_grid = jnp.linspace(0.004, 0.032, 64)
+    sweep_cold_s = _timed(
+        lambda: sweep(tr0, sim0, l_m=lm_grid)["summary"]["mean_latency"])
+    sweep_warm_s = _timed(
+        lambda: sweep(tr0, sim0, l_m=lm_grid)["summary"]["mean_latency"])
+
+    result = {
+        "backend": jax.default_backend(),
+        "n_intervals": n_intervals,
+        "n_apps": len(apps),
+        "fig10_dse": {
+            "n_simulations": n_sims,
+            "seed_loop_s": seed_loop_s,
+            "engine_cold_s": engine_cold_s,
+            "engine_warm_s": engine_warm_s,
+            "speedup_cold": seed_loop_s / engine_cold_s,
+            "speedup_warm": seed_loop_s / engine_warm_s,
+            "warm_intervals_per_sec": n_sims * n_intervals / engine_warm_s,
+        },
+        "single_call": {
+            "cold_s": single_cold_s,
+            "warm_s": single_warm_s,
+            "warm_intervals_per_sec": n_intervals / single_warm_s,
+        },
+        "lm_sweep_64": {
+            "cold_s": sweep_cold_s,
+            "warm_s": sweep_warm_s,
+            "warm_intervals_per_sec": 64 * n_intervals / sweep_warm_s,
+        },
+    }
+    save_json("BENCH_engine.json", result)
+    return result
+
+
+if __name__ == "__main__":
+    r = run()
+    d = r["fig10_dse"]
+    print(f"fig10 DSE ({d['n_simulations']} sims): seed loop "
+          f"{d['seed_loop_s']:.2f}s -> engine warm {d['engine_warm_s']:.3f}s "
+          f"({d['speedup_warm']:.1f}x, cold {d['speedup_cold']:.1f}x); "
+          f"{d['warm_intervals_per_sec']:.0f} intervals/s")

@@ -19,10 +19,21 @@ def _run(name, fn, derived_fn):
 
 
 def main() -> None:
-    from benchmarks import (fig10_lm_dse, fig11_main, fig12_adaptivity,
-                            fig13_residency, table2_overhead, lane_schedule)
+    from benchmarks import (bench_engine, fig10_lm_dse, fig11_main,
+                            fig12_adaptivity, fig13_residency,
+                            table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
+    eng = _run("bench_engine", bench_engine.run,
+               lambda r: (f"warm_speedup="
+                          f"{r['fig10_dse']['speedup_warm']:.0f}x,"
+                          f"{r['fig10_dse']['warm_intervals_per_sec']:.0f}"
+                          f"intervals/s"))
+    d = eng["fig10_dse"]
+    print(f"# engine: fig10 DSE warm-call {d['speedup_warm']:.0f}x faster "
+          f"than the unbatched per-call loop "
+          f"({d['seed_loop_s']:.2f}s -> {d['engine_warm_s']:.3f}s)",
+          flush=True)
     _run("fig10_lm_dse", fig10_lm_dse.run,
          lambda r: f"L_m={r['l_m_selected']:.4f}(paper 0.0152)")
     _run("fig11_main", fig11_main.run,

@@ -20,6 +20,7 @@ simulator and differentiable-free.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import numpy as np
@@ -108,6 +109,21 @@ class SelectionTables:
 
 
 def build_selection_tables(cfg: NetworkConfig = NETWORK) -> SelectionTables:
+    """Build (and memoize) the design-time tables for one topology.
+
+    `NetworkConfig` is a frozen dataclass, so equal configs hash equally and
+    the greedy numpy construction runs at most once per distinct topology —
+    table lookups inside jit-compiled sweeps are free after the first call.
+    The default is normalized *before* the cache so `build_selection_tables()`
+    and `build_selection_tables(NETWORK)` share one entry. The returned
+    `SelectionTables` (and its arrays) must be treated as immutable by
+    callers.
+    """
+    return _build_selection_tables_cached(cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_selection_tables_cached(cfg: NetworkConfig) -> SelectionTables:
     routers = _router_coords(cfg)
     gw_pos = default_gateway_positions(cfg)
     n_r = len(routers)
@@ -131,6 +147,30 @@ def build_selection_tables(cfg: NetworkConfig = NETWORK) -> SelectionTables:
     return SelectionTables(src_map=src_map, dst_map=dst_map,
                            src_hops=src_hops, dst_hops=dst_hops,
                            gw_pos=gw_pos)
+
+
+# Cache-management handles for instrumentation (simulator.engine_stats) and
+# baselines (simulator.SelectionTables_rebuild): same surface lru_cache
+# would have put on the public name.
+build_selection_tables.cache_info = _build_selection_tables_cached.cache_info
+build_selection_tables.cache_clear = \
+    _build_selection_tables_cached.cache_clear
+build_selection_tables.__wrapped__ = \
+    _build_selection_tables_cached.__wrapped__
+
+
+def selection_tables_jax(cfg: NetworkConfig = NETWORK) -> dict:
+    """Memoized device-resident view of the tables for `cfg`.
+
+    Returns the *same* dict (same jax arrays) for equal configs, so repeated
+    `simulate` calls ship identical buffers to jit and never re-upload.
+    """
+    return _selection_tables_jax_cached(cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _selection_tables_jax_cached(cfg: NetworkConfig) -> dict:
+    return build_selection_tables(cfg).as_jax()
 
 
 def select_source_gateway(tables: dict, router: jnp.ndarray,

@@ -13,12 +13,29 @@ Each step: traffic -> per-gateway load (selection tables) -> latency
 Energy is reported as power x mean-packet-latency (per-packet service-energy
 proxy; see EXPERIMENTS.md §Fig11 note) — consistent with the paper where the
 -53% energy claim is the product of the -37% latency and -25% power claims.
+
+Engine model (compile-once, batch-everywhere):
+
+  * `SimConfig` (and the nested `NetworkConfig` / `ControllerConfig` /
+    `NocModel`) are frozen dataclasses, hence hashable, and are passed to
+    `jax.jit` as *static* arguments: equal configs hit the compile cache,
+    distinct configs get their own executable.
+  * `simulate`       — single trace, jit-cached on (trace shape, config).
+  * `simulate_batch` — N stacked traces, one vmapped scan per config.
+  * `sweep`          — vmap over *runtime* scalar overrides (`l_m`,
+    `buffer_sat`, `wavelengths`, `prowaves_rho_hi/lo`) so a DSE over K
+    parameter values is one compilation, not K.
+  * `engine_stats()` — trace/compile counters used by tests and benches.
+
+`simulate_eager` preserves the pre-engine per-call retrace path for
+benchmark baselines (benchmarks/bench_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Tuple
+import functools
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +49,8 @@ from repro.core.constants import (AWGR_WAVELENGTHS, NETWORK,
 from repro.core.gateway_controller import (ControllerConfig, ControllerState,
                                            epoch_step)
 from repro.core.noc import NocModel, uniform_mesh_mean_hops
-from repro.core.selection import build_selection_tables, mean_access_hops
+from repro.core.selection import (build_selection_tables, mean_access_hops,
+                                  selection_tables_jax)
 
 
 class Arch(enum.Enum):
@@ -115,7 +133,7 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     intra_lat = noc.mesh_latency(jnp.float32(mesh_hops), link_load)    # [C]
 
     # Traffic-weighted average packet latency across chiplets + memory.
-    w_ext = ext_load * (1.0 - jnp.mean(mem_load) * 0.0)
+    w_ext = ext_load
     tot_ext = jnp.sum(w_ext) + 1e-9
     tot_int = jnp.sum(int_load) + 1e-9
     tot_mem = mem_load + 1e-9
@@ -224,9 +242,83 @@ def make_step(sim: SimConfig, tables: dict):
     return step
 
 
-def simulate(trace: dict, sim: SimConfig) -> dict:
-    """Run a full trace; returns per-interval records + summary scalars."""
-    tables = build_selection_tables(sim.cfg).as_jax()
+# ---------------------------------------------------------------------------
+# Engine core
+# ---------------------------------------------------------------------------
+
+# Trace-time counters: bumped every time jax actually traces a simulation
+# body. A warm jit cache leaves these untouched — tests/benches assert on it.
+_STATS = {"traces": 0}
+
+# Config fields that `sweep` may override with runtime (traced) scalars.
+# All are scalar knobs that feed jnp comparisons/arithmetic — nothing that
+# changes array shapes (max_gateways/min_gateways clamp the controller; the
+# gateway-slot axis is still sized by the static max_gateways_per_chiplet).
+SWEEPABLE_FIELDS = ("l_m", "buffer_sat", "wavelengths",
+                    "prowaves_rho_hi", "prowaves_rho_lo",
+                    "max_gateways", "min_gateways")
+
+
+def engine_stats() -> dict:
+    """Engine instrumentation: scan-body trace count + table-cache stats."""
+    info = build_selection_tables.cache_info()
+    return {"simulate_traces": _STATS["traces"],
+            "selection_table_builds": info.misses,
+            "selection_table_hits": info.hits}
+
+
+def reset_engine_stats() -> None:
+    _STATS["traces"] = 0
+
+
+def clear_engine_caches() -> None:
+    """Drop every jit executable the engine holds (cold-start measurement).
+
+    The single place that knows all jitted entry points — benches must use
+    this instead of reaching for the private wrappers, so adding an entry
+    point can't silently leave a warm cache in a 'cold' measurement.
+    """
+    for f in (_simulate_jit, _simulate_batch_jit, _sweep_jit,
+              _sweep_batch_jit):
+        f.clear_cache()
+
+
+def _apply_overrides(sim: SimConfig, ov: Optional[Dict[str, jax.Array]]
+                     ) -> SimConfig:
+    """Graft runtime override scalars into a (traced) config copy.
+
+    The returned SimConfig holds tracers and must never be hashed / used as
+    a static jit argument — it only flows through the scan body.
+    """
+    if not ov:
+        return sim
+    unknown = set(ov) - set(SWEEPABLE_FIELDS)
+    if unknown:
+        raise ValueError(f"non-sweepable fields: {sorted(unknown)} "
+                         f"(sweepable: {SWEEPABLE_FIELDS})")
+    ctl_over = {k: ov[k] for k in ("l_m", "max_gateways", "min_gateways")
+                if k in ov}
+    if ctl_over:
+        sim = dataclasses.replace(sim, ctl=dataclasses.replace(
+            sim.ctl, **ctl_over))
+    if "buffer_sat" in ov:
+        sim = dataclasses.replace(sim, noc=dataclasses.replace(
+            sim.noc, buffer_sat=ov["buffer_sat"]))
+    if "wavelengths" in ov:
+        sim = dataclasses.replace(sim, wavelengths=ov["wavelengths"])
+    if "prowaves_rho_hi" in ov:
+        sim = dataclasses.replace(sim, prowaves_rho_hi=ov["prowaves_rho_hi"])
+    if "prowaves_rho_lo" in ov:
+        sim = dataclasses.replace(sim, prowaves_rho_lo=ov["prowaves_rho_lo"])
+    return sim
+
+
+def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
+                   ext_frac: jax.Array, sim: SimConfig, tables: dict,
+                   ov: Optional[Dict[str, jax.Array]] = None) -> dict:
+    """Scan body shared by every entry point (single / batch / sweep)."""
+    _STATS["traces"] += 1
+    sim = _apply_overrides(sim, ov)
     cfg = sim.cfg
     state0 = SimState(
         ctl=ControllerState.init(cfg.n_chiplets, sim.ctl),
@@ -237,8 +329,7 @@ def simulate(trace: dict, sim: SimConfig) -> dict:
             jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
                      jnp.int32), sim))
 
-    xs = (trace["ext_load"], trace["mem_load"], trace["int_load"],
-          jnp.broadcast_to(trace["ext_frac"], trace["mem_load"].shape))
+    xs = (ext, mem, intra, jnp.broadcast_to(ext_frac, mem.shape))
     step = make_step(sim, tables)
     _, recs = jax.lax.scan(step, state0, xs)
 
@@ -252,6 +343,138 @@ def simulate(trace: dict, sim: SimConfig) -> dict:
         "total_reconfig_nj": jnp.sum(recs["reconfig_nj"]),
     }
     return {"records": recs, "summary": summary}
+
+
+def _trace_arrays(trace: dict) -> Tuple[jax.Array, ...]:
+    return (trace["ext_load"], trace["mem_load"], trace["int_load"],
+            jnp.asarray(trace["ext_frac"]))
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _simulate_jit(ext, mem, intra, ext_frac, tables, *, sim: SimConfig):
+    return _simulate_impl(ext, mem, intra, ext_frac, sim, tables)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _simulate_batch_jit(ext, mem, intra, ext_frac, tables, *,
+                        sim: SimConfig):
+    return jax.vmap(
+        lambda e, m, i, f: _simulate_impl(e, m, i, f, sim, tables)
+    )(ext, mem, intra, ext_frac)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _sweep_jit(ext, mem, intra, ext_frac, tables, ov, *, sim: SimConfig):
+    return jax.vmap(
+        lambda o: _simulate_impl(ext, mem, intra, ext_frac, sim, tables, o)
+    )(ov)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _sweep_batch_jit(ext, mem, intra, ext_frac, tables, ov, *,
+                     sim: SimConfig):
+    def one_trace(e, m, i, f):
+        return jax.vmap(
+            lambda o: _simulate_impl(e, m, i, f, sim, tables, o))(ov)
+    return jax.vmap(one_trace)(ext, mem, intra, ext_frac)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def simulate(trace: dict, sim: SimConfig) -> dict:
+    """Run a full trace; returns per-interval records + summary scalars.
+
+    Compile-once: `sim` is a static jit argument, so a second call with an
+    equal config and trace shape re-traces nothing (engine_stats() shows the
+    counter), and the selection tables are memoized per NetworkConfig.
+    """
+    ext, mem, intra, ext_frac = _trace_arrays(trace)
+    return _simulate_jit(ext, mem, intra, ext_frac,
+                         selection_tables_jax(sim.cfg), sim=sim)
+
+
+def simulate_eager(trace: dict, sim: SimConfig) -> dict:
+    """Seed-parity path: rebuild tables and re-trace the scan every call.
+
+    Kept as the benchmark baseline (bench_engine.py) — do not use in sweeps.
+    """
+    tables = SelectionTables_rebuild(sim.cfg)
+    ext, mem, intra, ext_frac = _trace_arrays(trace)
+    return _simulate_impl(ext, mem, intra, ext_frac, sim, tables)
+
+
+def SelectionTables_rebuild(cfg: NetworkConfig) -> dict:
+    """Uncached table build (bypasses both lru_caches) for baselines."""
+    return build_selection_tables.__wrapped__(cfg).as_jax()
+
+
+def stack_traces(traces: List[dict]) -> dict:
+    """Stack N same-shape traces along a new leading batch axis."""
+    out = {k: jnp.stack([jnp.asarray(tr[k]) for tr in traces])
+           for k in ("ext_load", "mem_load", "int_load", "ext_frac")}
+    out["app"] = [tr.get("app", "?") for tr in traces]
+    return out
+
+
+def simulate_batch(traces, sim: SimConfig) -> dict:
+    """Batched simulate: one vmapped, jit-cached scan over N traces.
+
+    `traces` is either a list of trace dicts (stacked here) or an
+    already-stacked dict with a leading batch axis (from `stack_traces`).
+    Records and summary values gain that leading [N] axis.
+    """
+    batch = stack_traces(traces) if isinstance(traces, (list, tuple)) \
+        else traces
+    ext, mem, intra, ext_frac = _trace_arrays(batch)
+    return _simulate_batch_jit(ext, mem, intra, ext_frac,
+                               selection_tables_jax(sim.cfg), sim=sim)
+
+
+def sweep(trace: dict, sim: SimConfig, **fields) -> dict:
+    """Vmapped DSE over scalar config fields, e.g.::
+
+        sweep(tr, sim, l_m=jnp.linspace(0.005, 0.03, 64))
+
+    Every swept field (see SWEEPABLE_FIELDS) gets a 1-D array of values; all
+    arrays must share one length K. The K simulations run as a single
+    compiled vmapped scan — results carry a leading [K] axis. Compilation is
+    cached on (trace shape, config, set of swept fields, grid length K),
+    not on the grid *values*, so re-sweeping a same-sized grid elsewhere in
+    the space is compile-free.
+    """
+    ov = _check_sweep_fields(fields)
+    ext, mem, intra, ext_frac = _trace_arrays(trace)
+    return _sweep_jit(ext, mem, intra, ext_frac,
+                      selection_tables_jax(sim.cfg), ov, sim=sim)
+
+
+def _check_sweep_fields(fields) -> Dict[str, jax.Array]:
+    if not fields:
+        raise ValueError("sweep() needs at least one field=values pair")
+    ov = {k: jnp.asarray(v) for k, v in fields.items()}
+    lengths = {k: a.shape for k, a in ov.items()}
+    if any(len(s) != 1 for s in lengths.values()) \
+            or len({s[0] for s in lengths.values()}) != 1:
+        raise ValueError(f"swept fields must be 1-D of equal length, "
+                         f"got {lengths}")
+    return ov
+
+
+def sweep_batch(traces, sim: SimConfig, **fields) -> dict:
+    """Full DSE grid in ONE compiled call: N traces x K parameter values.
+
+    Combines `simulate_batch` and `sweep`: results carry leading [N, K]
+    axes (trace-major). fig10's app x gateway-count exploration is a single
+    call of this with `max_gateways`/`min_gateways` pinned per grid point.
+    """
+    batch = stack_traces(traces) if isinstance(traces, (list, tuple)) \
+        else traces
+    ov = _check_sweep_fields(fields)
+    ext, mem, intra, ext_frac = _trace_arrays(batch)
+    return _sweep_batch_jit(ext, mem, intra, ext_frac,
+                            selection_tables_jax(sim.cfg), ov, sim=sim)
 
 
 def simulate_all_archs(trace: dict, base: SimConfig = SimConfig()) -> dict:

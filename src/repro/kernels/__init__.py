@@ -6,5 +6,27 @@ noc_step        — flit-level NoC router sim (Fig. 13 residency)
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes with
-assert_allclose. Kernels run interpret=True on CPU, compiled on TPU.
+assert_allclose.
+
+Backend policy: every kernel entry point takes `interpret=None`, resolved by
+`resolve_interpret` — compiled on TPU, interpret mode everywhere else. These
+kernels use TPU-specific constructs (`pltpu.VMEM` scratch), so GPU gets the
+interpreter too, not a Triton lowering. Pass an explicit bool to force
+either path.
 """
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Backend-aware default for the Pallas `interpret` flag.
+
+    None -> compiled on TPU, interpreter elsewhere (CPU has no Mosaic
+    lowering; the kernels' pltpu scratch shapes don't lower on GPU).
+    Explicit booleans pass through untouched (tests force interpret=True
+    for oracle runs).
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -85,13 +87,14 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                            *, causal: bool = True,
                            block_q: int = 128, block_kv: int = 256,
                            scale: float | None = None,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """q,k,v: [B, H, S, d] (kv already repeated to H). Returns [B, H, S, d].
 
     S must divide by the block sizes (the ops.py wrapper pads). `scale`
     defaults to 1/sqrt(d) of the *given* d — the wrapper passes the
     pre-padding head dim.
     """
+    interpret = resolve_interpret(interpret)
     b, h, s_q, d = q.shape
     s_kv = k.shape[2]
     assert s_q % block_q == 0 and s_kv % block_kv == 0, (s_q, s_kv)

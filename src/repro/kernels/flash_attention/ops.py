@@ -2,7 +2,7 @@
 
 `flash_attention` accepts the model's [B, S, H, d] layout, pads S to the
 block grid and d to the 128-lane MXU width, runs the Pallas kernel
-(interpret mode on CPU; compiled on TPU), and unpads.
+(interpret=None -> compiled on TPU, interpret mode elsewhere), and unpads.
 """
 from __future__ import annotations
 
@@ -18,7 +18,7 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
                                              "block_kv", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     *, causal: bool = True, block_q: int = 128,
-                    block_kv: int = 256, interpret: bool = True
+                    block_kv: int = 256, interpret: bool | None = None
                     ) -> jax.Array:
     """q,k,v: [B, S, H, d] (kv repeated to H heads). Returns [B, S, H, d]."""
     b, s, h, d = q.shape

@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
+LANES = 128   # TPU lane width: the router axis pads to this for compilation
+
 
 def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref,
                 resid_ref, occ_final_ref, drained_ref,
@@ -85,7 +89,8 @@ def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref,
 def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
                    drain_rate: jax.Array, buf_cap: jax.Array,
                    *, t_chunk: int = 256, link_rate: float = 1.0,
-                   interpret: bool = True):
+                   interpret: bool | None = None,
+                   pad_lanes: bool | None = None):
     """Run T cycles of the flit model.
 
     Args:
@@ -93,10 +98,25 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
       next_mat: [R, R] one-hot routing matrix (rows: source; sinks all-zero).
       drain_rate: [R] flits/cycle sunk at gateway nodes (0 elsewhere).
       buf_cap: [R] buffer capacity in flits.
+      interpret: None = backend-aware (compiled on TPU), or explicit bool.
+      pad_lanes: pad the router axis up to the 128-lane boundary. Defaults
+        to on whenever the kernel compiles (Mosaic requires lane-aligned
+        blocks); pad nodes have zero routing rows/columns, zero arrivals and
+        zero buffers, so they never send, receive, or accumulate residency.
 
     Returns (residency_integral [R], final_occupancy [R], drained [R]).
     """
-    t, r = arrivals.shape
+    interpret = resolve_interpret(interpret)
+    if pad_lanes is None:
+        pad_lanes = not interpret
+    t, r_in = arrivals.shape
+    pad = (-r_in) % LANES if pad_lanes else 0
+    if pad:
+        arrivals = jnp.pad(arrivals, ((0, 0), (0, pad)))
+        next_mat = jnp.pad(next_mat, ((0, pad), (0, pad)))
+        drain_rate = jnp.pad(drain_rate, (0, pad))
+        buf_cap = jnp.pad(buf_cap, (0, pad))
+    r = r_in + pad
     assert t % t_chunk == 0
     n_steps = t // t_chunk
     kernel = functools.partial(_noc_kernel, t_chunk=t_chunk,
@@ -119,4 +139,4 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         scratch_shapes=[pltpu.VMEM((1, r), jnp.float32)] * 3,
         interpret=interpret,
     )(arrivals, next_mat, drain_rate[None, :], buf_cap[None, :])
-    return resid[0], occ[0], drained[0]
+    return resid[0, :r_in], occ[0, :r_in], drained[0, :r_in]

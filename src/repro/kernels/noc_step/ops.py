@@ -64,7 +64,8 @@ def build_topology(g_active: int, wavelengths: int,
 
 def simulate_residency(ext_load: float, g_active: int, wavelengths: int,
                        cycles: int = 4096, seed: int = 0,
-                       cfg: NetworkConfig = NETWORK, interpret: bool = True):
+                       cfg: NetworkConfig = NETWORK,
+                       interpret: bool | None = None):
     """Returns (mean residency per router [4,4], drained flits).
 
     ext_load: chiplet-level inter-chiplet packet rate (pkts/cycle); packets

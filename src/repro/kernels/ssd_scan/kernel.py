@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import resolve_interpret
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
                 y_ref, s_ref, *, chunk: int):
@@ -57,7 +59,7 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
 
 def ssd_intra_chunk_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
                            b_in: jax.Array, c_in: jax.Array,
-                           *, interpret: bool = True):
+                           *, interpret: bool | None = None):
     """Per-chunk SSD compute.
 
     Args:
@@ -71,6 +73,7 @@ def ssd_intra_chunk_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
       y_intra: [B, NC, Q, H, P] f32
       s_chunk: [B, NC, H, P, N] f32
     """
+    interpret = resolve_interpret(interpret)
     bsz, nc, q, h, p = x.shape
     n = b_in.shape[-1]
 

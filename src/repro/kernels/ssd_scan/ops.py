@@ -15,7 +15,7 @@ from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_pallas
 def ssd_chunked_pallas(x: jax.Array, dt: jax.Array, a: jax.Array,
                        b_in: jax.Array, c_in: jax.Array, chunk: int,
                        initial_state: Optional[jax.Array] = None,
-                       interpret: bool = True
+                       interpret: bool | None = None
                        ) -> Tuple[jax.Array, jax.Array]:
     """Same contract as models.ssm.ssd_chunked ([B,L,H,P] io)."""
     bsz, l, h, p = x.shape

@@ -44,7 +44,9 @@ def make_laned_train_step(model, mesh: Mesh, lanes: int,
         loss, grads = jax.value_and_grad(loss_fn)(state["params"])
         # THE lane choice: k chunk-streams of the gradient all-reduce.
         grads = laned_psum(grads, axis, lanes)
-        inv = 1.0 / jax.lax.axis_size(axis)
+        # mesh.shape is static here; jax.lax.axis_size only exists on
+        # newer jax, so don't depend on it.
+        inv = 1.0 / mesh.shape[axis]
         grads = jax.tree.map(lambda g: g * inv, grads)
         loss = jax.lax.pmean(loss, axis)
         new_params, new_opt, opt_stats = opt_update(

@@ -1,0 +1,88 @@
+"""Deterministic stand-in for `hypothesis` in minimal containers.
+
+The real package is preferred everywhere (test modules import it first and
+fall back here only on ImportError). The shim re-runs each @given test body
+over a fixed number of seeded pseudo-random samples, drawing boundary values
+first — no shrinking or failure database, but the property tests stay
+executable instead of erroring at collection when hypothesis is absent.
+"""
+from __future__ import annotations
+
+import functools
+import random
+
+_DEFAULT_MAX_EXAMPLES = 12
+
+
+class _Strategy:
+    """A draw function plus boundary examples emitted before random ones."""
+
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self.edges = list(edges)
+
+    def example(self, rng: random.Random, i: int):
+        if i < len(self.edges):
+            return self.edges[i]
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         edges=(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               allow_nan: bool = False, allow_infinity: bool = False,
+               **_ignored) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         edges=(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5, edges=(False, True))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq), edges=seq[:2])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements.example(rng, len(elements.edges) + 1)
+                    for _ in range(size)]
+        edge = [elements.example(random.Random(0), i % max(
+            len(elements.edges), 1)) for i in range(min_size)]
+        return _Strategy(draw, edges=(edge,))
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for i in range(n):
+                args = [s.example(rng, i) for s in arg_strats]
+                kwargs = {k: s.example(rng, i) for k, s in kw_strats.items()}
+                fn(*args, **kwargs)
+        # No functools.wraps: pytest must see a zero-arg signature, or it
+        # would try to inject the strategy parameters as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

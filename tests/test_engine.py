@@ -1,0 +1,158 @@
+"""Compile-once engine tests: jit caching, batching, sweeps, padded kernel."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.constants import NetworkConfig
+from repro.core.gateway_controller import ControllerConfig
+from repro.core.selection import build_selection_tables, selection_tables_jax
+from repro.core.simulator import (Arch, SimConfig, engine_stats, simulate,
+                                  simulate_batch, stack_traces, sweep,
+                                  sweep_batch)
+from repro.kernels.noc_step.kernel import noc_run_pallas
+from repro.kernels.noc_step.ops import build_topology
+from repro.kernels.noc_step.ref import reference_noc_run
+
+
+@pytest.fixture(scope="module")
+def traces():
+    apps = ["dedup", "canneal", "facesim"]
+    return [traffic.generate_trace(a, 24, jax.random.PRNGKey(i))
+            for i, a in enumerate(apps)]
+
+
+def test_simulate_batch_matches_individual(traces):
+    sim = SimConfig().with_arch(Arch.RESIPI)
+    batched = simulate_batch(traces, sim)
+    for i, tr in enumerate(traces):
+        single = simulate(tr, sim)
+        for k, v in single["summary"].items():
+            np.testing.assert_allclose(
+                np.asarray(batched["summary"][k][i]), np.asarray(v),
+                rtol=1e-5, atol=1e-5, err_msg=f"summary[{k}] trace {i}")
+        for k, v in single["records"].items():
+            np.testing.assert_allclose(
+                np.asarray(batched["records"][k][i], np.float32),
+                np.asarray(v, np.float32),
+                rtol=1e-5, atol=1e-5, err_msg=f"records[{k}] trace {i}")
+
+
+def test_simulate_batch_accepts_stacked_dict(traces):
+    sim = SimConfig().with_arch(Arch.PROWAVES)
+    a = simulate_batch(traces, sim)["summary"]["mean_latency"]
+    b = simulate_batch(stack_traces(traces), sim)["summary"]["mean_latency"]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_second_call_does_not_retrace(traces):
+    # a config value no other test uses, so the first call must compile
+    sim = dataclasses.replace(SimConfig().with_arch(Arch.RESIPI),
+                              ctl=ControllerConfig(l_m=0.0107))
+    simulate(traces[0], sim)
+    before = engine_stats()["simulate_traces"]
+    out = simulate(traces[0], sim)
+    jax.block_until_ready(out["summary"]["mean_latency"])
+    # an *equal but not identical* config must also hit the cache
+    sim2 = dataclasses.replace(SimConfig().with_arch(Arch.RESIPI),
+                               ctl=ControllerConfig(l_m=0.0107))
+    assert sim2 is not sim
+    simulate(traces[0], sim2)
+    assert engine_stats()["simulate_traces"] == before
+
+
+def test_selection_tables_built_once_per_config():
+    cfg1 = NetworkConfig()
+    cfg2 = dataclasses.replace(NetworkConfig())
+    assert cfg2 is not cfg1
+    t1 = build_selection_tables(cfg1)
+    t2 = build_selection_tables(cfg2)
+    assert t1 is t2                      # memoized on config value
+    j1 = selection_tables_jax(cfg1)
+    j2 = selection_tables_jax(cfg2)
+    assert j1 is j2                      # device tables shared too
+    # a genuinely different topology gets its own tables
+    big = dataclasses.replace(NetworkConfig(), mesh_x=6, mesh_y=6)
+    t3 = build_selection_tables(big)
+    assert t3 is not t1
+    assert t3.src_map.shape[1] == 36
+
+
+def test_sweep_matches_individual_configs(traces):
+    tr = traces[1]
+    base = SimConfig().with_arch(Arch.RESIPI)
+    lms = [0.005, 0.0152, 0.03]
+    swept = sweep(tr, base, l_m=jnp.asarray(lms))["summary"]
+    for i, lm in enumerate(lms):
+        sim_i = dataclasses.replace(base, ctl=dataclasses.replace(
+            base.ctl, l_m=lm))
+        single = simulate(tr, sim_i)["summary"]
+        for k in ("mean_latency", "mean_power_mw", "mean_gateways"):
+            np.testing.assert_allclose(
+                np.asarray(swept[k][i]), np.asarray(single[k]),
+                rtol=1e-5, atol=1e-5, err_msg=f"{k} @ l_m={lm}")
+
+
+def test_sweep_multi_field_and_validation(traces):
+    tr = traces[0]
+    sim = SimConfig().with_arch(Arch.RESIPI)
+    out = sweep(tr, sim, l_m=jnp.asarray([0.01, 0.02]),
+                buffer_sat=jnp.asarray([0.45, 0.65]))
+    assert out["summary"]["mean_latency"].shape == (2,)
+    with pytest.raises(ValueError):
+        sweep(tr, sim, n_chiplets=jnp.asarray([4, 8]))   # shape-changing
+    with pytest.raises(ValueError):
+        sweep(tr, sim, l_m=jnp.asarray([0.01, 0.02]),
+              buffer_sat=jnp.asarray([0.45]))            # length mismatch
+    with pytest.raises(ValueError):
+        sweep(tr, sim)                                   # nothing swept
+
+
+def test_sweep_batch_gateway_grid_matches_fixed_configs(traces):
+    """One [N traces x K gateway-counts] call == per-config simulate calls.
+
+    The fig10 DSE path: pinning the controller via runtime max/min gateway
+    overrides must equal pinning it statically in ControllerConfig.
+    """
+    base = SimConfig().with_arch(Arch.RESIPI)
+    gs = [1, 3]
+    out = sweep_batch(traces, base, max_gateways=jnp.asarray(gs),
+                      min_gateways=jnp.asarray(gs))
+    for i, tr in enumerate(traces):
+        for gi, g in enumerate(gs):
+            pinned = dataclasses.replace(base, ctl=ControllerConfig(
+                l_m=base.ctl.l_m, max_gateways=g, min_gateways=g))
+            single = simulate(tr, pinned)["summary"]
+            for k in ("mean_latency", "mean_power_mw", "mean_gateways"):
+                np.testing.assert_allclose(
+                    np.asarray(out["summary"][k][i, gi]),
+                    np.asarray(single[k]), rtol=1e-5, atol=1e-5,
+                    err_msg=f"{k} trace {i} g={g}")
+
+
+def test_sweep_wavelengths_monotone_power(traces):
+    """More wavelengths on the static datapath -> more laser power."""
+    out = sweep(traces[0], SimConfig().with_arch(Arch.RESIPI_ALL),
+                wavelengths=jnp.asarray([2, 4, 8]))
+    pw = np.asarray(out["summary"]["mean_power_mw"])
+    assert np.all(np.diff(pw) > 0)
+
+
+def test_noc_padded_path_matches_reference():
+    """Lane-padded kernel (the compiled-path layout) == unpadded oracle."""
+    nm, drain, buf, _ = build_topology(2, 4)
+    n = nm.shape[0]
+    arr = (jax.random.uniform(jax.random.PRNGKey(11), (512, n)) <
+           0.03).astype(jnp.float32) * 8
+    rk, ok, dk = noc_run_pallas(arr, jnp.asarray(nm), jnp.asarray(drain),
+                                jnp.asarray(buf), t_chunk=128,
+                                interpret=True, pad_lanes=True)
+    rr, orr, dr = reference_noc_run(arr, jnp.asarray(nm), jnp.asarray(drain),
+                                    jnp.asarray(buf))
+    assert rk.shape == (n,)
+    np.testing.assert_allclose(rk, rr, atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(ok, orr, atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(dk, dr, atol=1e-2, rtol=1e-4)

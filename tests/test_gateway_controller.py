@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal container: use shim
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.gateway_controller import (ControllerConfig,
                                            ControllerState,

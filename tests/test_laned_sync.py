@@ -12,14 +12,18 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np, re
-from jax.sharding import AxisType
+try:
+    from jax.sharding import AxisType
+    mesh_kw = {"axis_types": (AxisType.Auto,)}
+except ImportError:          # older jax: axes are implicitly Auto
+    mesh_kw = {}
 from repro.configs import get_smoke_config
 from repro.models import get_model
 from repro.train.train_step import init_train_state
 from repro.train.laned_sync import make_laned_train_step
 from repro.data.pipeline import DataConfig, SyntheticLM
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("data",), **mesh_kw)
 cfg = get_smoke_config("stablelm-3b")
 model = get_model(cfg)
 state = init_train_state(model, jax.random.PRNGKey(0))

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal container: use shim
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import get_smoke_config
 from repro.models.moe import build_dispatch, moe_block, route_topk

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal container: use shim
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import photonics
 from repro.core.constants import PHOTONIC_POWER
