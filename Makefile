@@ -1,0 +1,19 @@
+# Developer entry points. PYTHONPATH=src is the repo's import convention
+# (ROADMAP.md tier-1 verify line).
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: verify test smoke bench
+
+# Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
+verify:
+	$(PY) benchmarks/smoke.py
+
+test:
+	$(PY) -m pytest -x -q
+
+# Just the ~5 s compiled padded-path smoke (no pytest).
+smoke:
+	$(PY) benchmarks/smoke.py --smoke-only
+
+bench:
+	$(PY) benchmarks/run.py

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core import traffic
 from repro.core.simulator import (clear_engine_caches, simulate,
                                   simulate_eager, stack_traces, sweep)
-from benchmarks.common import fixed_gateway_config, save_json
+from benchmarks.common import fixed_gateway_config, save_json_history
 from benchmarks.fig10_lm_dse import GATEWAY_COUNTS, dse_grid
 
 
@@ -101,7 +101,7 @@ def run(n_intervals: int = 60, seed: int = 7) -> dict:
             "warm_intervals_per_sec": 64 * n_intervals / sweep_warm_s,
         },
     }
-    save_json("BENCH_engine.json", result)
+    save_json_history("BENCH_engine.json", result)
     return result
 
 

@@ -1,0 +1,121 @@
+"""Topology-DSE benchmark: per-topology compile farm vs ONE padded compile.
+
+The scaling studies ReSiPI-class papers live on (HexaMesh-style
+hundreds-of-chiplet scans, PlaceIT-style topology DSE) sweep *shape-changing*
+axes: chiplet count, gateways per chiplet, mesh radix. Without padded
+batching every topology is its own jit executable — a compile farm. This
+benchmark times a 4..64-chiplet x gateway-clamp grid both ways:
+
+  * compile farm — one `simulate` jit per topology (caches cleared first):
+                   every grid point pays trace + compile + run.
+  * padded cold  — the whole grid as ONE `sweep_topology` executable,
+                   including its single compilation.
+  * padded warm  — the same call against a hot cache: steady-state DSE cost.
+
+Also measures the sharded path (shard_sweep) on whatever devices exist.
+Results land in benchmarks/results/BENCH_topology.json with an appended
+`history` entry per run (the cross-PR perf trajectory).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import traffic
+from repro.core.constants import NETWORK
+from repro.core.simulator import (Arch, SimConfig, clear_engine_caches,
+                                  engine_stats, reset_engine_stats, simulate,
+                                  shard_sweep, sweep_topology,
+                                  topology_point_config)
+from benchmarks.common import save_json_history
+
+CHIPLET_COUNTS = (4, 8, 9, 16, 25, 36, 49, 64)
+GATEWAY_CLAMPS = (2, 4)
+
+
+def topology_grid():
+    """The flattened 16-point (chiplets x gateways) grid, zip-style lists."""
+    cs = [c for c in CHIPLET_COUNTS for _ in GATEWAY_CLAMPS]
+    gs = [g for _ in CHIPLET_COUNTS for g in GATEWAY_CLAMPS]
+    return cs, gs
+
+
+def _timed(fn) -> float:
+    t0 = time.time()
+    jax.block_until_ready(fn())
+    return time.time() - t0
+
+
+def _farm(trace: dict, base: SimConfig, cs, gs) -> float:
+    """Per-topology compile farm: distinct shapes/configs, one jit each."""
+    def go():
+        outs = []
+        for c, g in zip(cs, gs):
+            sim = topology_point_config(base, n_chiplets=c,
+                                        gateways_per_chiplet=g)
+            outs.append(simulate(traffic.slice_trace(trace, c), sim)
+                        ["summary"]["mean_latency"])
+        return outs
+    return _timed(go)
+
+
+def run(n_intervals: int = 40, seed: int = 7) -> dict:
+    c_max = max(CHIPLET_COUNTS)
+    cfg = NETWORK.with_topology(n_chiplets=c_max)
+    trace = traffic.generate_trace("dedup", n_intervals,
+                                   jax.random.PRNGKey(seed), cfg)
+    cs, gs = topology_grid()
+    base = SimConfig().with_arch(Arch.RESIPI)
+    n_topo = len(cs)
+
+    # -- compile farm baseline (one executable per topology) ----------------
+    clear_engine_caches()
+    farm_s = _timed(lambda: _farm(trace, base, cs, gs))
+
+    # -- padded engine: cold (single compile) then warm ---------------------
+    clear_engine_caches()
+    reset_engine_stats()
+    padded = lambda: sweep_topology(trace, base, n_chiplets=cs,
+                                    gateways_per_chiplet=gs)[
+                                        "summary"]["mean_latency"]
+    padded_cold_s = _timed(padded)
+    scan_body_traces = engine_stats()["simulate_traces"]
+    padded_warm_s = _timed(padded)
+
+    # -- sharded path (graceful single-device fallback) ---------------------
+    devices = jax.devices()
+    shard = lambda: shard_sweep(trace, base, n_chiplets=cs,
+                                gateways_per_chiplet=gs)[
+                                    "summary"]["mean_latency"]
+    shard(); sharded_warm_s = _timed(shard)
+
+    result = {
+        "backend": jax.default_backend(),
+        "n_devices": len(devices),
+        "n_intervals": n_intervals,
+        "n_topologies": n_topo,
+        "chiplet_counts": list(CHIPLET_COUNTS),
+        "gateway_clamps": list(GATEWAY_CLAMPS),
+        "max_chiplets": c_max,
+        "scan_body_traces": scan_body_traces,
+        "farm_s": farm_s,
+        "padded_cold_s": padded_cold_s,
+        "padded_warm_s": padded_warm_s,
+        "sharded_warm_s": sharded_warm_s,
+        "speedup_cold": farm_s / padded_cold_s,
+        "speedup_warm": farm_s / padded_warm_s,
+        "warm_intervals_per_sec": n_topo * n_intervals / padded_warm_s,
+    }
+    save_json_history("BENCH_topology.json", result)
+    return result
+
+
+if __name__ == "__main__":
+    r = run()
+    print(f"topology DSE ({r['n_topologies']} topologies, 4..{r['max_chiplets']}"
+          f" chiplets): compile farm {r['farm_s']:.2f}s -> one padded "
+          f"executable cold {r['padded_cold_s']:.2f}s "
+          f"({r['speedup_cold']:.1f}x), warm {r['padded_warm_s']:.3f}s "
+          f"({r['speedup_warm']:.1f}x); {r['scan_body_traces']} scan-body "
+          f"trace(s); {r['warm_intervals_per_sec']:.0f} intervals/s")

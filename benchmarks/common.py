@@ -36,3 +36,29 @@ def save_json(name: str, data) -> Path:
     path = RESULTS / name
     path.write_text(json.dumps(data, indent=1, default=float))
     return path
+
+
+def save_json_history(name: str, data: dict) -> Path:
+    """Write `data` but APPEND this run to the file's `history` list.
+
+    The BENCH_*.json files are the cross-PR perf trajectory: the top-level
+    keys always reflect the latest run, while `history` accumulates one
+    timestamped entry per run (latest last), surviving overwrites. Corrupt
+    or legacy files without a history list start a fresh one.
+    """
+    import datetime
+
+    path = RESULTS / name
+    history = []
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            history = list(prior.get("history", []))
+        except (json.JSONDecodeError, AttributeError):
+            history = []
+    entry = {k: v for k, v in data.items() if k != "history"}
+    entry["timestamp"] = datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds")
+    out = dict(data)
+    out["history"] = history + [entry]
+    return save_json(name, out)

@@ -19,8 +19,8 @@ def _run(name, fn, derived_fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_engine, fig10_lm_dse, fig11_main,
-                            fig12_adaptivity, fig13_residency,
+    from benchmarks import (bench_engine, bench_topology, fig10_lm_dse,
+                            fig11_main, fig12_adaptivity, fig13_residency,
                             table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
@@ -33,6 +33,16 @@ def main() -> None:
     print(f"# engine: fig10 DSE warm-call {d['speedup_warm']:.0f}x faster "
           f"than the unbatched per-call loop "
           f"({d['seed_loop_s']:.2f}s -> {d['engine_warm_s']:.3f}s)",
+          flush=True)
+    topo = _run("bench_topology", bench_topology.run,
+                lambda r: (f"cold_speedup={r['speedup_cold']:.1f}x,"
+                           f"{r['scan_body_traces']}trace/"
+                           f"{r['n_topologies']}topologies"))
+    print(f"# topology: {topo['n_topologies']}-point 4..{topo['max_chiplets']}"
+          f"-chiplet DSE is ONE padded executable "
+          f"({topo['scan_body_traces']} scan-body trace): compile farm "
+          f"{topo['farm_s']:.2f}s -> cold {topo['padded_cold_s']:.2f}s "
+          f"({topo['speedup_cold']:.1f}x), warm {topo['padded_warm_s']:.3f}s",
           flush=True)
     _run("fig10_lm_dse", fig10_lm_dse.run,
          lambda r: f"L_m={r['l_m_selected']:.4f}(paper 0.0152)")

@@ -1,0 +1,82 @@
+"""CPU verification gate: tier-1 pytest + a fast padded-sweep smoke.
+
+`make verify` (or `python benchmarks/smoke.py`) is the pre-merge check:
+
+  1. the repo's tier-1 test suite (ROADMAP.md) via pytest, and
+  2. a ~5 s compiled padded-topology-sweep smoke that asserts the engine's
+     two load-bearing invariants on CPU — the whole topology grid runs as
+     ONE scan-body trace, and padded results match unpadded `simulate` —
+     so regressions in the compiled padded path are caught without a TPU.
+
+`--smoke-only` skips the pytest stage (used by CI wrappers that already
+ran the suite, and for quick local iteration).
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO / "src") not in sys.path:        # standalone-invocation bootstrap
+    sys.path.insert(0, str(REPO / "src"))
+
+
+def padded_sweep_smoke() -> None:
+    import jax
+    import numpy as np
+
+    from repro.core import traffic
+    from repro.core.constants import NETWORK
+    from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                      reset_engine_stats, simulate,
+                                      sweep_topology, topology_point_config)
+
+    t0 = time.time()
+    grid_c, grid_g = [4, 9, 16, 25], [4, 2, 4, 2]
+    cfg = NETWORK.with_topology(n_chiplets=max(grid_c))
+    tr = traffic.generate_trace("dedup", 16, jax.random.PRNGKey(0), cfg)
+    base = SimConfig().with_arch(Arch.RESIPI)
+
+    reset_engine_stats()
+    out = sweep_topology(tr, base, n_chiplets=grid_c,
+                         gateways_per_chiplet=grid_g)
+    lat = np.asarray(out["summary"]["mean_latency"])
+    traces = engine_stats()["simulate_traces"]
+    assert lat.shape == (len(grid_c),) and np.all(np.isfinite(lat)), lat
+    assert traces == 1, f"expected ONE scan-body trace, got {traces}"
+
+    # padded-vs-unpadded parity on one mid-grid point
+    c, g, i = grid_c[1], grid_g[1], 1
+    ref = simulate(traffic.slice_trace(tr, c),
+                   topology_point_config(base, n_chiplets=c,
+                                         gateways_per_chiplet=g))["summary"]
+    for k in ("mean_latency", "mean_power_mw", "mean_gateways"):
+        np.testing.assert_allclose(
+            np.asarray(out["summary"][k][i]), np.asarray(ref[k]),
+            rtol=1e-4, atol=1e-4,
+            err_msg=f"padded grid point (c={c}, g={g}) diverged on {k}")
+
+    # warm re-call must not re-trace
+    before = engine_stats()["simulate_traces"]
+    sweep_topology(tr, base, n_chiplets=grid_c, gateways_per_chiplet=grid_g)
+    assert engine_stats()["simulate_traces"] == before, "warm call re-traced"
+    print(f"padded-sweep smoke OK in {time.time() - t0:.1f}s "
+          f"({len(grid_c)} topologies, 1 trace, parity holds)")
+
+
+def main(argv) -> int:
+    if "--smoke-only" not in argv:
+        rc = subprocess.call(
+            [sys.executable, "-m", "pytest", "-x", "-q"], cwd=REPO)
+        if rc != 0:
+            print("tier-1 pytest FAILED", file=sys.stderr)
+            return rc
+    padded_sweep_smoke()
+    print("verify OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -62,6 +62,25 @@ class NetworkConfig:
         return (self.n_chiplets * self.max_gateways_per_chiplet
                 + self.memory_gateways)
 
+    def with_topology(self, *, n_chiplets: int | None = None,
+                      gateways_per_chiplet: int | None = None,
+                      mesh_radix: int | None = None) -> "NetworkConfig":
+        """Topology-DSE variant: one grid point of a `sweep_topology` scan.
+
+        `mesh_radix` sets a square r x r intra-chiplet mesh. These are the
+        three shape-defining topology axes (TOPOLOGY_SWEEPABLE_FIELDS in
+        repro.core.simulator); everything else is inherited.
+        """
+        kw = {}
+        if n_chiplets is not None:
+            kw["n_chiplets"] = int(n_chiplets)
+        if gateways_per_chiplet is not None:
+            kw["max_gateways_per_chiplet"] = int(gateways_per_chiplet)
+        if mesh_radix is not None:
+            kw["mesh_x"] = int(mesh_radix)
+            kw["mesh_y"] = int(mesh_radix)
+        return dataclasses.replace(self, **kw)
+
     def gateway_service_cycles(self, wavelengths: int) -> float:
         """Cycles to serialize one packet through a gateway with W wavelengths.
 

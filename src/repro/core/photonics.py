@@ -133,7 +133,9 @@ def interposer_power_mw(active: jax.Array,
                         n_gateways: int,
                         power: PhotonicPower = PHOTONIC_POWER,
                         loss_db: float = 0.0,
-                        mode: str = "pcm") -> dict:
+                        mode: str = "pcm",
+                        gateway_count=None,
+                        n_chiplets=None) -> dict:
     """Total photonic interposer power for a given activity state.
 
     Thermal tuning is the power that pulls an MR onto resonance; a ring with
@@ -156,12 +158,21 @@ def interposer_power_mw(active: jax.Array,
                    so the single gateway per chiplet never powers down.
         "static" — AWGR: everything provisioned is always on (fixed lasers,
                    passive AWGR routing, per-port receiver rings tuned).
+      gateway_count: optional (possibly traced) *actual* gateway count when
+        the [N] axis is padded for topology batching — replaces the static
+        `n_gateways` in the count-dependent "static" terms so padded slots
+        contribute zero. Defaults to `n_gateways` (unpadded behavior).
+      n_chiplets: optional (possibly traced) chiplet count for the Table 2
+        controller term (172 uW per chiplet + interposer controller).
+        Defaults to the Table 1 system (NETWORK.n_chiplets).
 
     Returns dict with laser/tuning/driver/tia/total mW (jnp scalars).
     """
     active_f = active.astype(jnp.float32)
     w = jnp.broadcast_to(jnp.asarray(wavelengths, jnp.float32), (n_gateways,))
     loss_scale = 10.0 ** (loss_db / 10.0)
+    gw_n = (jnp.float32(n_gateways) if gateway_count is None
+            else jnp.asarray(gateway_count, jnp.float32))
 
     if mode == "pcm":
         lit_w = jnp.sum(active_f * w)
@@ -179,21 +190,24 @@ def interposer_power_mw(active: jax.Array,
         mods = lit_w
         # AWGR outputs keep a full receiver ring bank on-resonance (any of
         # N wavelengths can arrive at any output port).
-        filters = jnp.float32(n_gateways * n_gateways)
+        filters = gw_n * gw_n
     else:
         raise ValueError(f"unknown power mode: {mode}")
 
-    tia = filters if mode != "static" else jnp.float32(n_gateways)
+    tia = filters if mode != "static" else gw_n
     tia = tia * power.tia_mw
     tuning = (mods + filters) * power.tuning_mw_per_mr
     driver = mods * power.driver_mw
 
     laser = laser * loss_scale
-    controller = (power.controller_lgc_uw * NETWORK.n_chiplets
+    chips = (NETWORK.n_chiplets if n_chiplets is None
+             else jnp.asarray(n_chiplets, jnp.float32))
+    controller = (power.controller_lgc_uw * chips
                   + power.controller_inc_uw) / 1000.0
     total = laser + tia + tuning + driver + controller
     return {"laser_mw": laser, "tia_mw": tia, "tuning_mw": tuning,
-            "driver_mw": driver, "controller_mw": jnp.float32(controller),
+            "driver_mw": driver,
+            "controller_mw": jnp.asarray(controller, jnp.float32),
             "total_mw": total}
 
 

@@ -58,30 +58,45 @@ def hop_count(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     return np.abs(a[..., 0] - b[..., 0]) + np.abs(a[..., 1] - b[..., 1])
 
 
-def _balanced_assignment(routers: np.ndarray, gw_pos: np.ndarray,
-                         capacity: int) -> np.ndarray:
-    """Greedy balanced nearest-gateway partition.
+def _balanced_assignment_from_dist(dist: np.ndarray,
+                                   capacity: int) -> np.ndarray:
+    """Greedy balanced nearest-gateway partition from a [R, G] hop matrix.
 
-    Sorts (router, gateway) pairs by hop distance and assigns greedily under a
-    per-gateway capacity of ceil(R/g) — the R_g = R/g_c balance rule of §3.4.
-    Deterministic; ties broken by (distance, router id, gateway id).
+    Processes (router, gateway) pairs in (distance, router id, gateway id)
+    order and assigns greedily under a per-gateway capacity of ceil(R/g) —
+    the R_g = R/g_c balance rule of §3.4. The pair ordering is a single
+    vectorized `np.lexsort` (the O(R*G log RG) part); only the inherently
+    sequential capacity-constrained walk remains a Python loop, with an
+    early exit once every router is assigned.
     """
-    n_r, n_g = len(routers), len(gw_pos)
-    dist = hop_count(routers[:, None, :], gw_pos[None, :, :])  # [R, G]
-    order = sorted(((dist[r, g], r, g) for r in range(n_r) for g in range(n_g)))
+    n_r, n_g = dist.shape
+    rr, gg = np.divmod(np.arange(n_r * n_g), n_g)
+    order = np.lexsort((gg, rr, dist.ravel()))     # primary: distance
     assign = np.full((n_r,), -1, dtype=np.int32)
     load = np.zeros((n_g,), dtype=np.int32)
-    for d, r, g in order:
+    remaining = n_r
+    for idx in order:
+        r, g = rr[idx], gg[idx]
         if assign[r] == -1 and load[g] < capacity:
             assign[r] = g
             load[g] += 1
+            remaining -= 1
+            if remaining == 0:
+                break
     # Any leftovers (capacity exhausted by ties) -> least-loaded gateway.
-    for r in range(n_r):
-        if assign[r] == -1:
-            g = int(np.argmin(load))
-            assign[r] = g
-            load[g] += 1
+    left = np.flatnonzero(assign == -1)
+    for r in left:
+        g = int(np.argmin(load))
+        assign[r] = g
+        load[g] += 1
     return assign
+
+
+def _balanced_assignment(routers: np.ndarray, gw_pos: np.ndarray,
+                         capacity: int) -> np.ndarray:
+    """Greedy balanced nearest-gateway partition (see `..._from_dist`)."""
+    dist = hop_count(routers[:, None, :], gw_pos[None, :, :])  # [R, G]
+    return _balanced_assignment_from_dist(dist, capacity)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,22 +144,22 @@ def _build_selection_tables_cached(cfg: NetworkConfig) -> SelectionTables:
     n_r = len(routers)
     g_max = cfg.max_gateways_per_chiplet
 
-    src_map = np.zeros((g_max, n_r), dtype=np.int32)
-    dst_map = np.zeros((g_max, n_r), dtype=np.int32)
-    src_hops = np.zeros((g_max,), dtype=np.float32)
-    dst_hops = np.zeros((g_max,), dtype=np.float32)
+    # One vectorized [R, Gmax] hop matrix feeds every activation level; the
+    # per-level work is the greedy capacity walk plus fancy-indexed means.
+    dist = hop_count(routers[:, None, :], gw_pos[None, :, :])   # [R, Gmax]
+    levels = np.arange(1, g_max + 1)
+    caps = -(-n_r // levels)                                    # ceil(R/g)
 
-    for g in range(1, g_max + 1):
-        cap = int(np.ceil(n_r / g))
-        active_pos = gw_pos[:g]
-        assign = _balanced_assignment(routers, active_pos, cap)
-        src_map[g - 1] = assign
-        dst_map[g - 1] = assign      # step-3 tables share the balance rule
-        d = hop_count(routers, active_pos[assign])
-        src_hops[g - 1] = float(d.mean())
-        dst_hops[g - 1] = float(d.mean())
+    src_map = np.stack([
+        _balanced_assignment_from_dist(dist[:, :g], int(cap))
+        for g, cap in zip(levels, caps)])                       # [Gmax, R]
+    dst_map = src_map.copy()        # step-3 tables share the balance rule
+    hops = np.take_along_axis(dist, src_map.T, axis=1)          # [R, Gmax]
+    src_hops = hops.mean(axis=0).astype(np.float32)
+    dst_hops = src_hops.copy()
 
-    return SelectionTables(src_map=src_map, dst_map=dst_map,
+    return SelectionTables(src_map=src_map.astype(np.int32),
+                           dst_map=dst_map.astype(np.int32),
                            src_hops=src_hops, dst_hops=dst_hops,
                            gw_pos=gw_pos)
 
@@ -157,6 +172,110 @@ build_selection_tables.cache_clear = \
     _build_selection_tables_cached.cache_clear
 build_selection_tables.__wrapped__ = \
     _build_selection_tables_cached.__wrapped__
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedSelectionTables:
+    """Stacked, zero-padded tables for K topologies sharing ONE shape.
+
+    All per-topology tables are padded to (g_pad activation levels, r_pad
+    routers) so a topology sweep can vmap over the leading K axis inside a
+    single compiled executable. Padded entries are zero and carry validity
+    masks; the masking invariant is that a consumer which multiplies by the
+    masks sees provably zero contribution from every padded slot.
+
+    src_map/dst_map: [K, g_pad, r_pad] int   — padded with gateway 0.
+    src_hops/dst_hops: [K, g_pad] float      — padded with 0.0 hops.
+    gw_mask:     [K, g_pad] float — 1 where the activation level exists.
+    router_mask: [K, r_pad] float — 1 where the router exists.
+    n_gateways:  [K] int — real max gateways per chiplet per topology.
+    n_routers:   [K] int — real router count per topology.
+    """
+    src_map: np.ndarray
+    dst_map: np.ndarray
+    src_hops: np.ndarray
+    dst_hops: np.ndarray
+    gw_mask: np.ndarray
+    router_mask: np.ndarray
+    n_gateways: np.ndarray
+    n_routers: np.ndarray
+
+    def as_jax(self) -> dict:
+        return {k: jnp.asarray(getattr(self, k))
+                for k in ("src_map", "dst_map", "src_hops", "dst_hops",
+                          "gw_mask", "router_mask", "n_gateways",
+                          "n_routers")}
+
+
+def build_selection_tables_padded(
+        cfgs, pad_to: Tuple[int, int] | None = None) -> PaddedSelectionTables:
+    """Build stacked zero-masked tables for a tuple of topologies.
+
+    `pad_to = (g_pad, r_pad)` fixes the padded activation-level and router
+    axes; None pads to the max over `cfgs`. Memoized per (cfgs, pad_to) —
+    the per-topology builds themselves reuse the per-config lru_cache, and
+    topologies that differ only in `n_chiplets` share one underlying build
+    (selection tables are a per-chiplet-mesh structure).
+    """
+    cfgs = tuple(cfgs)
+    if pad_to is None:
+        pad_to = (max(c.max_gateways_per_chiplet for c in cfgs),
+                  max(c.routers_per_chiplet for c in cfgs))
+    return _build_selection_tables_padded_cached(cfgs, tuple(pad_to))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_selection_tables_padded_cached(
+        cfgs: Tuple[NetworkConfig, ...],
+        pad_to: Tuple[int, int]) -> PaddedSelectionTables:
+    g_pad, r_pad = pad_to
+    k = len(cfgs)
+    src_map = np.zeros((k, g_pad, r_pad), np.int32)
+    dst_map = np.zeros((k, g_pad, r_pad), np.int32)
+    src_hops = np.zeros((k, g_pad), np.float32)
+    dst_hops = np.zeros((k, g_pad), np.float32)
+    gw_mask = np.zeros((k, g_pad), np.float32)
+    router_mask = np.zeros((k, r_pad), np.float32)
+    n_gw = np.zeros((k,), np.int32)
+    n_rt = np.zeros((k,), np.int32)
+
+    for i, cfg in enumerate(cfgs):
+        # n_chiplets does not enter the per-chiplet tables: canonicalize so
+        # e.g. a 4..64-chiplet scan over one mesh builds tables exactly once.
+        key_cfg = dataclasses.replace(cfg, n_chiplets=1)
+        t = build_selection_tables(key_cfg)
+        g, r = t.src_map.shape
+        if g > g_pad or r > r_pad:
+            raise ValueError(f"pad_to {pad_to} smaller than topology "
+                             f"{i} tables {(g, r)}")
+        src_map[i, :g, :r] = t.src_map
+        dst_map[i, :g, :r] = t.dst_map
+        src_hops[i, :g] = t.src_hops
+        dst_hops[i, :g] = t.dst_hops
+        gw_mask[i, :g] = 1.0
+        router_mask[i, :r] = 1.0
+        n_gw[i], n_rt[i] = g, r
+
+    return PaddedSelectionTables(
+        src_map=src_map, dst_map=dst_map, src_hops=src_hops,
+        dst_hops=dst_hops, gw_mask=gw_mask, router_mask=router_mask,
+        n_gateways=n_gw, n_routers=n_rt)
+
+
+@functools.lru_cache(maxsize=None)
+def _padded_tables_jax_cached(cfgs, pad_to) -> dict:
+    return _build_selection_tables_padded_cached(cfgs, pad_to).as_jax()
+
+
+def padded_selection_tables_jax(
+        cfgs, pad_to: Tuple[int, int] | None = None) -> dict:
+    """Memoized device-resident view of the padded tables (see
+    `selection_tables_jax` for the single-topology analogue)."""
+    cfgs = tuple(cfgs)
+    if pad_to is None:
+        pad_to = (max(c.max_gateways_per_chiplet for c in cfgs),
+                  max(c.routers_per_chiplet for c in cfgs))
+    return _padded_tables_jax_cached(cfgs, tuple(pad_to))
 
 
 def selection_tables_jax(cfg: NetworkConfig = NETWORK) -> dict:

@@ -25,6 +25,13 @@ Engine model (compile-once, batch-everywhere):
   * `sweep`          — vmap over *runtime* scalar overrides (`l_m`,
     `buffer_sat`, `wavelengths`, `prowaves_rho_hi/lo`) so a DSE over K
     parameter values is one compilation, not K.
+  * `sweep_topology` / `sweep_topology_batch` — vmap over *shape-changing*
+    topology axes (`n_chiplets`, `gateways_per_chiplet`, `mesh_radix`) via
+    pad-to-max batching with validity masks: a hundreds-of-chiplets scan
+    is ONE compiled executable, and padded slots provably contribute zero
+    load/latency/power (see ROADMAP.md "Topology-sweep API").
+  * `shard_sweep`    — the same padded grid with its topology axis sharded
+    across devices (NamedSharding/GSPMD), single-device fallback.
   * `engine_stats()` — trace/compile counters used by tests and benches.
 
 `simulate_eager` preserves the pre-engine per-call retrace path for
@@ -41,8 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import photonics
-from repro.core.constants import (AWGR_WAVELENGTHS, NETWORK,
-                                  PROWAVES_MAX_WAVELENGTHS,
+from repro.core.constants import (NETWORK, PROWAVES_MAX_WAVELENGTHS,
                                   PROWAVES_MIN_WAVELENGTHS,
                                   RESIPI_WAVELENGTHS, NetworkConfig,
                                   PHOTONIC_POWER)
@@ -50,6 +56,7 @@ from repro.core.gateway_controller import (ControllerConfig, ControllerState,
                                            epoch_step)
 from repro.core.noc import NocModel, uniform_mesh_mean_hops
 from repro.core.selection import (build_selection_tables, mean_access_hops,
+                                  padded_selection_tables_jax,
                                   selection_tables_jax)
 
 
@@ -108,8 +115,15 @@ def _activity_mask(g: jax.Array, sim: SimConfig) -> jax.Array:
 def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
                       ext_load: jax.Array, mem_load: jax.Array,
                       int_load: jax.Array, ext_frac: jax.Array,
-                      sim: SimConfig, tables: dict) -> dict:
-    """Latency/load metrics for one interval given activity (g, lambda)."""
+                      sim: SimConfig, tables: dict,
+                      topo: Optional[dict] = None) -> dict:
+    """Latency/load metrics for one interval given activity (g, lambda).
+
+    With `topo` (the padded topology-sweep path) the chiplet axis is padded
+    to the grid maximum: every reduction is mask-weighted so padded chiplet
+    lanes contribute exactly zero load/latency, and the per-topology hop
+    tables/mesh scalars come from `topo` instead of the static config.
+    """
     noc = sim.noc
     # Per-gateway load after the Fig. 8 balanced selection. ext traffic of a
     # chiplet spreads over its g active gateways; memory traffic over the 2
@@ -117,22 +131,46 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     gw_load = ext_load / jnp.maximum(g.astype(jnp.float32), 1.0)       # [C]
     mem_gw_load = mem_load / sim.cfg.memory_gateways
 
-    src_hops = mean_access_hops(tables, g)                             # [C]
+    if topo is None:
+        chip_mask = None
+        src_hops = mean_access_hops(tables, g)                         # [C]
+        mean_src_hops = jnp.mean(src_hops)
+        lam = wavelengths
+        lam_mem = wavelengths if wavelengths.ndim == 0 \
+            else jnp.mean(wavelengths)
+        mesh_hops = jnp.float32(uniform_mesh_mean_hops(sim.cfg))
+        mesh_feed = 2.0 * sim.cfg.mesh_x
+    else:
+        chip_mask = topo["chip_mask"]                                  # [C]
+        src_hops = topo["src_hops"][jnp.maximum(g, 1) - 1]             # [C]
+        nreal = jnp.maximum(jnp.sum(chip_mask), 1.0)
+        mean_src_hops = jnp.sum(src_hops * chip_mask) / nreal
+        # Padded chiplet lanes carry lambda=0; clamp inside the latency math
+        # only (their latencies are masked to zero below) so serialization
+        # never divides by zero.
+        lam = wavelengths if wavelengths.ndim == 0 \
+            else jnp.where(chip_mask > 0, wavelengths, 1.0)
+        lam_mem = wavelengths if wavelengths.ndim == 0 \
+            else jnp.sum(wavelengths * chip_mask) / nreal
+        mesh_hops = topo["mesh_hops"]
+        mesh_feed = 2.0 * topo["mesh_x"]
+
     # Destination side: packets land on a uniformly random other chiplet;
     # the destination hop count mixes the other chiplets' activation levels.
-    dst_hops = jnp.mean(src_hops) * jnp.ones_like(src_hops)
+    dst_hops = mean_src_hops * jnp.ones_like(src_hops)
 
-    inter_lat = noc.inter_chiplet_latency(gw_load, wavelengths,
+    inter_lat = noc.inter_chiplet_latency(gw_load, lam,
                                           src_hops, dst_hops)          # [C]
-    mem_lat = noc.inter_chiplet_latency(mem_gw_load, wavelengths
-                                        if wavelengths.ndim == 0
-                                        else jnp.mean(wavelengths),
-                                        jnp.mean(src_hops), 1.0)
-    mesh_hops = uniform_mesh_mean_hops(sim.cfg)
-    link_load = int_load * sim.cfg.packet_flits / (2.0 * sim.cfg.mesh_x)
-    intra_lat = noc.mesh_latency(jnp.float32(mesh_hops), link_load)    # [C]
+    if chip_mask is not None:
+        inter_lat = jnp.where(chip_mask > 0, inter_lat, 0.0)
+    mem_lat = noc.inter_chiplet_latency(mem_gw_load, lam_mem,
+                                        mean_src_hops, 1.0)
+    link_load = int_load * sim.cfg.packet_flits / mesh_feed
+    intra_lat = noc.mesh_latency(mesh_hops, link_load)                 # [C]
 
     # Traffic-weighted average packet latency across chiplets + memory.
+    # (In the padded path ext/int loads of padded chiplets are zero, so
+    # every weighted term below is mask-correct by construction.)
     w_ext = ext_load
     tot_ext = jnp.sum(w_ext) + 1e-9
     tot_int = jnp.sum(int_load) + 1e-9
@@ -142,7 +180,7 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     return {"latency": lat, "gw_load": gw_load,
             "inter_latency": inter_lat,
             "mean_inter_latency": jnp.sum(inter_lat * w_ext) / tot_ext,
-            "saturated": jnp.any(noc.saturated(gw_load, wavelengths))}
+            "saturated": jnp.any(noc.saturated(gw_load, lam))}
 
 
 def _prowaves_update(lam: jax.Array, inter_latency: jax.Array,
@@ -169,11 +207,24 @@ def _prowaves_update(lam: jax.Array, inter_latency: jax.Array,
     return jnp.where(hot, lam_up, jnp.where(cold, lam_dn, lam))
 
 
-def make_step(sim: SimConfig, tables: dict):
-    """Build the per-interval scan body for the chosen architecture."""
+def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
+    """Build the per-interval scan body for the chosen architecture.
+
+    `topo` switches on the padded topology-sweep path: the chiplet/gateway
+    axes are padded to the grid maximum, `topo["chip_mask"]` marks the real
+    chiplets, and the per-topology scalars (actual gateway totals, mesh
+    geometry, hop tables) are traced values. Padded chiplet lanes hold g=0
+    and lambda=0 throughout, so activity masks, power sums, and reconfig
+    energy see them as permanently dark gateways.
+    """
     cfg, ctl_cfg = sim.cfg, sim.ctl
     interval = float(cfg.reconfig_interval_cycles)
     n_total = cfg.total_gateways
+    chip_mask = None if topo is None else topo["chip_mask"]
+    # Actual (traced) counts for count-dependent power terms; None selects
+    # the static-config behavior on the unpadded path.
+    gw_count = None if topo is None else topo["total_gateways"]
+    n_chips = cfg.n_chiplets if topo is None else topo["n_chiplets"]
 
     def step(state: SimState, tr) -> Tuple[SimState, dict]:
         ext, mem, intra, ext_frac = tr
@@ -181,36 +232,50 @@ def make_step(sim: SimConfig, tables: dict):
             g = state.ctl.g
             lam = jnp.float32(sim.wavelengths)
         elif sim.arch == Arch.PROWAVES:
-            g = jnp.ones((cfg.n_chiplets,), jnp.int32)
+            g = jnp.ones((cfg.n_chiplets,), jnp.int32) if topo is None \
+                else (chip_mask > 0).astype(jnp.int32)
             lam = state.wavelengths.astype(jnp.float32)
         else:  # AWGR: all gateways, 1 lambda per port
             g = jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
-                         jnp.int32)
+                         jnp.int32) if topo is None \
+                else jnp.where(chip_mask > 0,
+                               topo["g_max"].astype(jnp.int32), 0)
             lam = jnp.float32(1.0)
 
-        m = _interval_metrics(g, lam, ext, mem, intra, ext_frac, sim, tables)
+        m = _interval_metrics(g, lam, ext, mem, intra, ext_frac, sim,
+                              tables, topo)
 
         # --- power ---------------------------------------------------------
         active = _activity_mask(g, sim)
         if sim.arch == Arch.PROWAVES:
-            # 6 lit gateways (1/chiplet + 2 memory), per-chiplet lambdas.
+            # 1 lit gateway per chiplet + memory gateways, per-chiplet
+            # lambdas. Padded chiplet lanes carry lambda=0, so the "wdm"
+            # power sums are mask-correct without further masking.
             n_pw = cfg.n_chiplets + cfg.memory_gateways
-            lam_mem = jnp.full((cfg.memory_gateways,),
-                               jnp.mean(state.wavelengths.astype(jnp.float32)))
-            per_gw_lam = jnp.concatenate(
-                [state.wavelengths.astype(jnp.float32), lam_mem])
+            w = state.wavelengths.astype(jnp.float32)
+            if topo is None:
+                lam_mem_val = jnp.mean(w)
+            else:
+                lam_mem_val = jnp.sum(w) / jnp.maximum(
+                    jnp.sum(chip_mask), 1.0)
+            lam_mem = jnp.full((cfg.memory_gateways,), lam_mem_val)
+            per_gw_lam = jnp.concatenate([w, lam_mem])
             pw = photonics.interposer_power_mw(
                 jnp.ones((n_pw,), bool), per_gw_lam,
-                n_gateways=n_pw, mode="wdm")
+                n_gateways=n_pw, mode="wdm", n_chiplets=n_chips)
         elif sim.arch == Arch.AWGR:
+            # One wavelength per provisioned port (18 total in Table 1);
+            # padded lanes are inactive, so summing the activity mask keeps
+            # the laser/filter counts at the topology's real port count.
             pw = photonics.interposer_power_mw(
-                active, jnp.float32(AWGR_WAVELENGTHS) / n_total,
+                active, active.astype(jnp.float32),
                 n_gateways=n_total,
-                loss_db=PHOTONIC_POWER.awgr_loss_db, mode="static")
+                loss_db=PHOTONIC_POWER.awgr_loss_db, mode="static",
+                gateway_count=gw_count, n_chiplets=n_chips)
         else:
             pw = photonics.interposer_power_mw(
                 active, jnp.float32(sim.wavelengths),
-                n_gateways=n_total, mode="pcm")
+                n_gateways=n_total, mode="pcm", n_chiplets=n_chips)
 
         # --- controller update ----------------------------------------------
         reconf_nj = jnp.float32(0.0)
@@ -232,10 +297,12 @@ def make_step(sim: SimConfig, tables: dict):
 
         # energy proxy: mW * cycles-per-packet -> pJ-scale unit (model units)
         energy = pw["total_mw"] * m["latency"]
+        lam_rec = lam * jnp.ones((cfg.n_chiplets,)) if topo is None \
+            else lam * chip_mask
         rec = {"latency": m["latency"], "power_mw": pw["total_mw"],
                "laser_mw": pw["laser_mw"], "energy": energy,
                "reconfig_nj": reconf_nj,
-               "g": g, "wavelengths": lam * jnp.ones((cfg.n_chiplets,)),
+               "g": g, "wavelengths": lam_rec,
                "gw_load": m["gw_load"], "saturated": m["saturated"]}
         return new_state, rec
 
@@ -258,6 +325,12 @@ SWEEPABLE_FIELDS = ("l_m", "buffer_sat", "wavelengths",
                     "prowaves_rho_hi", "prowaves_rho_lo",
                     "max_gateways", "min_gateways")
 
+# Shape-defining topology axes that `sweep_topology` batches via pad-to-max:
+# every grid point is padded to the grid maxima (chiplets, gateway slots,
+# routers) and carried through ONE compiled executable with validity masks.
+TOPOLOGY_SWEEPABLE_FIELDS = ("n_chiplets", "gateways_per_chiplet",
+                             "mesh_radix")
+
 
 def engine_stats() -> dict:
     """Engine instrumentation: scan-body trace count + table-cache stats."""
@@ -279,7 +352,8 @@ def clear_engine_caches() -> None:
     point can't silently leave a warm cache in a 'cold' measurement.
     """
     for f in (_simulate_jit, _simulate_batch_jit, _sweep_jit,
-              _sweep_batch_jit):
+              _sweep_batch_jit, _sweep_topology_jit,
+              _sweep_topology_batch_jit):
         f.clear_cache()
 
 
@@ -315,30 +389,66 @@ def _apply_overrides(sim: SimConfig, ov: Optional[Dict[str, jax.Array]]
 
 def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
                    ext_frac: jax.Array, sim: SimConfig, tables: dict,
-                   ov: Optional[Dict[str, jax.Array]] = None) -> dict:
-    """Scan body shared by every entry point (single / batch / sweep)."""
+                   ov: Optional[Dict[str, jax.Array]] = None,
+                   topo: Optional[dict] = None) -> dict:
+    """Scan body shared by every entry point (single / batch / sweep).
+
+    With `topo` the trace/state is padded on the chiplet axis: `sim.cfg`
+    describes the *padded* shape (grid maxima) and `topo` carries the
+    per-topology actuals. Padded chiplets start with g=0 and lambda=0,
+    inject zero traffic, and — because the controller thresholds can only
+    raise g on positive load — stay dark for the whole scan.
+    """
     _STATS["traces"] += 1
     sim = _apply_overrides(sim, ov)
     cfg = sim.cfg
-    state0 = SimState(
-        ctl=ControllerState.init(cfg.n_chiplets, sim.ctl),
-        wavelengths=jnp.full((cfg.n_chiplets,), PROWAVES_MAX_WAVELENGTHS
-                             if sim.arch == Arch.PROWAVES else
-                             sim.wavelengths, jnp.int32),
-        prev_active=_activity_mask(
-            jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
-                     jnp.int32), sim))
+    if topo is None:
+        state0 = SimState(
+            ctl=ControllerState.init(cfg.n_chiplets, sim.ctl),
+            wavelengths=jnp.full((cfg.n_chiplets,), PROWAVES_MAX_WAVELENGTHS
+                                 if sim.arch == Arch.PROWAVES else
+                                 sim.wavelengths, jnp.int32),
+            prev_active=_activity_mask(
+                jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
+                         jnp.int32), sim))
+    else:
+        valid = jnp.arange(cfg.n_chiplets) < topo["n_chiplets"]
+        chip_mask = valid.astype(jnp.float32)
+        topo = dict(topo, chip_mask=chip_mask)
+        ext = ext * chip_mask
+        intra = intra * chip_mask
+        g0 = jnp.where(valid,
+                       jnp.asarray(sim.ctl.max_gateways).astype(jnp.int32),
+                       0)
+        w0 = PROWAVES_MAX_WAVELENGTHS if sim.arch == Arch.PROWAVES \
+            else sim.wavelengths
+        state0 = SimState(
+            ctl=ControllerState(
+                g=g0,
+                packets_seen=jnp.zeros((cfg.n_chiplets,), jnp.float32),
+                epoch=jnp.int32(0)),
+            wavelengths=jnp.where(valid,
+                                  jnp.asarray(w0).astype(jnp.int32), 0),
+            prev_active=jnp.zeros((cfg.total_gateways,), bool))
 
     xs = (ext, mem, intra, jnp.broadcast_to(ext_frac, mem.shape))
-    step = make_step(sim, tables)
+    step = make_step(sim, tables, topo)
     _, recs = jax.lax.scan(step, state0, xs)
 
+    if topo is None:
+        mean_wavelengths = jnp.mean(recs["wavelengths"])
+    else:
+        # Masked mean: padded chiplet lanes record lambda=0 and must not
+        # dilute the per-chiplet average.
+        n_lam = recs["wavelengths"].shape[0] * jnp.maximum(
+            jnp.sum(topo["chip_mask"]), 1.0)
+        mean_wavelengths = jnp.sum(recs["wavelengths"]) / n_lam
     summary = {
         "mean_latency": jnp.mean(recs["latency"]),
         "mean_power_mw": jnp.mean(recs["power_mw"]),
         "mean_energy": jnp.mean(recs["energy"]),
         "mean_gateways": jnp.mean(jnp.sum(recs["g"], axis=1)),
-        "mean_wavelengths": jnp.mean(recs["wavelengths"]),
+        "mean_wavelengths": mean_wavelengths,
         "saturated_frac": jnp.mean(recs["saturated"].astype(jnp.float32)),
         "total_reconfig_nj": jnp.sum(recs["reconfig_nj"]),
     }
@@ -376,6 +486,24 @@ def _sweep_batch_jit(ext, mem, intra, ext_frac, tables, ov, *,
     def one_trace(e, m, i, f):
         return jax.vmap(
             lambda o: _simulate_impl(e, m, i, f, sim, tables, o))(ov)
+    return jax.vmap(one_trace)(ext, mem, intra, ext_frac)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _sweep_topology_jit(ext, mem, intra, ext_frac, topo, ov, *,
+                        sim: SimConfig):
+    return jax.vmap(
+        lambda tp, o: _simulate_impl(ext, mem, intra, ext_frac, sim, None,
+                                     o, topo=tp))(topo, ov)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _sweep_topology_batch_jit(ext, mem, intra, ext_frac, topo, ov, *,
+                              sim: SimConfig):
+    def one_trace(e, m, i, f):
+        return jax.vmap(
+            lambda tp, o: _simulate_impl(e, m, i, f, sim, None,
+                                         o, topo=tp))(topo, ov)
     return jax.vmap(one_trace)(ext, mem, intra, ext_frac)
 
 
@@ -475,6 +603,218 @@ def sweep_batch(traces, sim: SimConfig, **fields) -> dict:
     ext, mem, intra, ext_frac = _trace_arrays(batch)
     return _sweep_batch_jit(ext, mem, intra, ext_frac,
                             selection_tables_jax(sim.cfg), ov, sim=sim)
+
+
+# ---------------------------------------------------------------------------
+# Topology-polymorphic padded sweeps
+# ---------------------------------------------------------------------------
+
+def topology_point_config(sim: SimConfig, *, n_chiplets: int = None,
+                          gateways_per_chiplet: int = None,
+                          mesh_radix: int = None) -> SimConfig:
+    """Unpadded SimConfig equivalent to one `sweep_topology` grid point.
+
+    The controller's gateway bounds are clamped to the topology's per-chiplet
+    gateway count, matching the padded engine's semantics. Used by parity
+    tests and the compile-farm benchmark baseline.
+    """
+    cfg = sim.cfg.with_topology(n_chiplets=n_chiplets,
+                                gateways_per_chiplet=gateways_per_chiplet,
+                                mesh_radix=mesh_radix)
+    g = cfg.max_gateways_per_chiplet
+    ctl = dataclasses.replace(
+        sim.ctl, max_gateways=min(sim.ctl.max_gateways, g),
+        min_gateways=min(sim.ctl.min_gateways, g))
+    return dataclasses.replace(sim, cfg=cfg, ctl=ctl)
+
+
+def _prepare_topology_sweep(sim: SimConfig, grids: dict):
+    """Split grids into topology axes + runtime overrides; build the padded
+    static config, per-topology traced arrays, and controller clamps.
+
+    Returns (sim_padded, topo, ov, c_max) where `sim_padded.cfg` describes
+    the PADDED shapes (grid maxima — the one compiled executable's shape)
+    and `topo` holds the per-grid-point actual topology as traced arrays.
+    """
+    if not grids:
+        raise ValueError("sweep_topology() needs at least one field=values "
+                         f"pair from {TOPOLOGY_SWEEPABLE_FIELDS}")
+    topo_grids = {k: list(v) for k, v in grids.items()
+                  if k in TOPOLOGY_SWEEPABLE_FIELDS}
+    other = {k: v for k, v in grids.items()
+             if k not in TOPOLOGY_SWEEPABLE_FIELDS}
+    unknown = set(other) - set(SWEEPABLE_FIELDS)
+    if unknown:
+        raise ValueError(
+            f"non-sweepable fields: {sorted(unknown)} (topology: "
+            f"{TOPOLOGY_SWEEPABLE_FIELDS}, runtime: {SWEEPABLE_FIELDS})")
+    if not topo_grids:
+        raise ValueError("no topology fields swept — use sweep() for "
+                         "runtime-only grids")
+    lengths = {k: len(jnp.asarray(v)) for k, v in grids.items()}
+    if len(set(lengths.values())) != 1:
+        raise ValueError(f"swept fields must share one length, "
+                         f"got {lengths}")
+    k = next(iter(lengths.values()))
+
+    cfg = sim.cfg
+    cs = [int(x) for x in topo_grids.get("n_chiplets",
+                                         [cfg.n_chiplets] * k)]
+    gs = [int(x) for x in topo_grids.get(
+        "gateways_per_chiplet", [cfg.max_gateways_per_chiplet] * k)]
+    rs = [int(x) for x in topo_grids.get("mesh_radix", [cfg.mesh_x] * k)]
+    if min(cs) < 1 or min(gs) < 1 or min(rs) < 2:
+        raise ValueError(f"invalid topology grid: n_chiplets {cs}, "
+                         f"gateways {gs}, radix {rs}")
+    if max(gs) > 4:
+        raise ValueError("gateways_per_chiplet > 4 needs more placed "
+                         "gateway positions (selection.default_gateway_"
+                         "positions defines 4 edge slots)")
+
+    cfgs = tuple(cfg.with_topology(n_chiplets=c, gateways_per_chiplet=g,
+                                   mesh_radix=r)
+                 for c, g, r in zip(cs, gs, rs))
+    c_max, g_max, r_max = max(cs), max(gs), max(rs)
+    ptab = padded_selection_tables_jax(cfgs, (g_max, r_max * r_max))
+    topo = {
+        "n_chiplets": jnp.asarray(cs, jnp.int32),
+        "g_max": jnp.asarray(gs, jnp.int32),
+        "src_hops": ptab["src_hops"],                       # [K, g_max]
+        "mesh_hops": jnp.asarray(
+            [uniform_mesh_mean_hops(c) for c in cfgs], jnp.float32),
+        "mesh_x": jnp.asarray(rs, jnp.float32),
+        "total_gateways": jnp.asarray(
+            [c.total_gateways for c in cfgs], jnp.float32),
+    }
+
+    # Controller gateway bounds ride the existing runtime-override path,
+    # clamped per grid point to the topology's gateway count.
+    ov = {f: jnp.asarray(v) for f, v in other.items()}
+    user_max = ov.pop("max_gateways", jnp.int32(sim.ctl.max_gateways))
+    user_min = ov.pop("min_gateways", jnp.int32(sim.ctl.min_gateways))
+    maxg = jnp.minimum(jnp.broadcast_to(jnp.asarray(user_max, jnp.int32),
+                                        (k,)), topo["g_max"])
+    ming = jnp.minimum(jnp.broadcast_to(jnp.asarray(user_min, jnp.int32),
+                                        (k,)), maxg)
+    ov["max_gateways"] = maxg
+    ov["min_gateways"] = ming
+
+    sim_padded = dataclasses.replace(sim, cfg=dataclasses.replace(
+        cfg, n_chiplets=c_max, max_gateways_per_chiplet=g_max,
+        mesh_x=r_max, mesh_y=r_max))
+    return sim_padded, topo, ov, c_max
+
+
+def _topo_trace_arrays(trace_or_batch, c_max: int):
+    ext, mem, intra, ext_frac = _trace_arrays(trace_or_batch)
+    if ext.shape[-1] < c_max:
+        raise ValueError(
+            f"trace covers {ext.shape[-1]} chiplets but the grid needs "
+            f"{c_max}; generate it with cfg.with_topology(n_chiplets="
+            f"{c_max}) (see traffic.generate_trace)")
+    return ext[..., :c_max], mem, intra[..., :c_max], ext_frac
+
+
+def sweep_topology(trace: dict, sim: SimConfig, **grids) -> dict:
+    """Topology DSE over shape-changing axes in ONE compiled executable.
+
+    ::
+
+        sweep_topology(tr, sim, n_chiplets=[4, 16, 64],
+                       gateways_per_chiplet=[4, 4, 2])
+
+    Every topology field (TOPOLOGY_SWEEPABLE_FIELDS) gets a 1-D grid; all
+    grids (topology + any runtime SWEEPABLE_FIELDS) share one length K and
+    are zipped into K grid points. Instead of compiling one executable per
+    topology shape, every per-topology array is padded to the grid maxima
+    with a validity mask, and the K masked scans run as a single vmapped,
+    jit-cached call (engine_stats() shows one scan-body trace per grid
+    *shape*, not per topology).
+
+    Masking invariant: padded chiplet/gateway slots hold zero load, g=0 and
+    lambda=0 for the whole scan, so they contribute exactly zero to every
+    latency/power/energy reduction — `sweep_topology` at pad==actual size
+    matches unpadded `simulate` to float tolerance (tested).
+
+    The trace must cover max(n_chiplets) chiplets; each grid point uses its
+    first n_chiplets columns (traffic.slice_trace view). Results carry a
+    leading [K] axis; per-chiplet records are padded to the grid maximum.
+    Controller gateway bounds are clamped per point to the topology's
+    gateway count (see `topology_point_config`).
+    """
+    sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
+    ext, mem, intra, ext_frac = _topo_trace_arrays(trace, c_max)
+    return _sweep_topology_jit(ext, mem, intra, ext_frac, topo, ov,
+                               sim=sim_p)
+
+
+def sweep_topology_batch(traces, sim: SimConfig, **grids) -> dict:
+    """N traces x K topologies in ONE compiled call ([N, K] results).
+
+    The topology analogue of `sweep_batch`: `traces` is a list of same-shape
+    trace dicts or an already-stacked dict from `stack_traces`.
+    """
+    batch = stack_traces(traces) if isinstance(traces, (list, tuple)) \
+        else traces
+    sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
+    ext, mem, intra, ext_frac = _topo_trace_arrays(batch, c_max)
+    return _sweep_topology_batch_jit(ext, mem, intra, ext_frac, topo, ov,
+                                     sim=sim_p)
+
+
+def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
+    """Multi-device topology sweep: the [N x K] grid sharded over devices.
+
+    The K (topology) axis of the padded grid is device_put with a 1-D
+    `NamedSharding`, so the SAME compiled executable partitions the vmapped
+    scans across all available devices (GSPMD); N-trace batches replicate
+    the trace and shard the topology axis. K is padded to a multiple of the
+    device count by repeating the last grid point (sliced off the results).
+    Degrades gracefully to the single-device `sweep_topology` path when one
+    device is present or sharding fails.
+
+    Accepts a single trace dict or a list/stacked batch (leading [N] axis
+    in the results, as `sweep_topology_batch`).
+    """
+    batched = not (isinstance(traces, dict)
+                   and jnp.ndim(traces["ext_load"]) == 2)
+    single_call = sweep_topology_batch if batched else sweep_topology
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) <= 1:
+        return single_call(traces, sim, **grids)
+
+    try:
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        import numpy as _np
+
+        sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
+        batch = stack_traces(traces) \
+            if isinstance(traces, (list, tuple)) else traces
+        ext, mem, intra, ext_frac = _topo_trace_arrays(batch, c_max)
+
+        k = int(topo["n_chiplets"].shape[0])
+        pad = (-k) % len(devices)
+        if pad:
+            def _pad(a):
+                return jnp.concatenate(
+                    [a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
+            topo = jax.tree.map(_pad, topo)
+            ov = jax.tree.map(_pad, ov)
+        mesh = Mesh(_np.array(devices), ("sweep",))
+        sharding = NamedSharding(mesh, PartitionSpec("sweep"))
+        topo = jax.tree.map(lambda a: jax.device_put(a, sharding), topo)
+        ov = jax.tree.map(lambda a: jax.device_put(a, sharding), ov)
+        fn = _sweep_topology_batch_jit if batched else _sweep_topology_jit
+        out = fn(ext, mem, intra, ext_frac, topo, ov, sim=sim_p)
+        if pad:
+            out = jax.tree.map(
+                lambda a: a[:, :k] if batched else a[:k], out)
+        return out
+    except Exception as e:  # pragma: no cover - depends on device layout
+        import warnings
+        warnings.warn(f"sharded sweep failed ({e!r}); falling back to "
+                      f"single-device path")
+        return single_call(traces, sim, **grids)
 
 
 def simulate_all_archs(trace: dict, base: SimConfig = SimConfig()) -> dict:

@@ -83,6 +83,21 @@ def generate_trace(app: str, n_intervals: int, key: jax.Array,
             "ext_frac": jnp.float32(prof.ext_frac), "app": app}
 
 
+def slice_trace(trace: dict, n_chiplets: int) -> dict:
+    """Restrict a trace to its first `n_chiplets` chiplet columns.
+
+    The per-topology view used by topology sweeps: a trace generated at the
+    grid's maximum chiplet count is narrowed per grid point. `mem_load` and
+    `ext_frac` are chiplet-count-free and shared across grid points.
+    """
+    c = trace["ext_load"].shape[-1]
+    if n_chiplets > c:
+        raise ValueError(f"trace has {c} chiplets, needs >= {n_chiplets}")
+    return dict(trace,
+                ext_load=trace["ext_load"][..., :n_chiplets],
+                int_load=trace["int_load"][..., :n_chiplets])
+
+
 def concat_traces(traces: list) -> dict:
     """Stitch application traces back-to-back (Fig. 12 adaptivity runs)."""
     out = {k: jnp.concatenate([tr[k] for tr in traces], axis=0)

@@ -29,7 +29,7 @@ from repro.kernels import resolve_interpret
 LANES = 128   # TPU lane width: the router axis pads to this for compilation
 
 
-def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref,
+def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref, mask_ref,
                 resid_ref, occ_final_ref, drained_ref,
                 occ_scratch, resid_scratch, drained_scratch,
                 *, t_chunk: int, link_rate: float, n_steps: int):
@@ -44,11 +44,14 @@ def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref,
     nmat = next_mat_ref[...].astype(jnp.float32)      # [R, R] one-hot
     drain = drain_ref[...].astype(jnp.float32)        # [1, R] sink rates
     buf = buf_ref[...].astype(jnp.float32)            # [1, R] capacities
+    mask = mask_ref[...].astype(jnp.float32)          # [1, R] valid lanes
 
     def cycle(t, carry):
         occ, resid, drained = carry
         arr = arrivals_ref[t, :][None, :].astype(jnp.float32)   # [1, R]
-        occ = occ + arr
+        # Dead-lane enforcement: invalid (padded) lanes can never hold or
+        # emit flits, whatever the caller put in their arrival/buffer slots.
+        occ = (occ + arr) * mask
         send = jnp.minimum(occ, link_rate) * jnp.sign(
             jnp.sum(nmat, axis=1))[None, :]                     # routers only
         # desired inflow at each destination: send @ nmat  ([1,R]@[R,R])
@@ -88,7 +91,8 @@ def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref,
 
 def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
                    drain_rate: jax.Array, buf_cap: jax.Array,
-                   *, t_chunk: int = 256, link_rate: float = 1.0,
+                   *, valid_mask: jax.Array | None = None,
+                   t_chunk: int = 256, link_rate: float = 1.0,
                    interpret: bool | None = None,
                    pad_lanes: bool | None = None):
     """Run T cycles of the flit model.
@@ -98,11 +102,16 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
       next_mat: [R, R] one-hot routing matrix (rows: source; sinks all-zero).
       drain_rate: [R] flits/cycle sunk at gateway nodes (0 elsewhere).
       buf_cap: [R] buffer capacity in flits.
+      valid_mask: [R] 1/0 lane-validity mask (None = all valid). Invalid
+        lanes are DEAD: occupancy is forced to zero every cycle, so they
+        never send, receive, or accumulate residency even when a padded
+        batch layout leaves garbage in their arrival/buffer slots. This is
+        the topology-batching contract — padded router lanes are dead
+        lanes, not zero-traffic routers.
       interpret: None = backend-aware (compiled on TPU), or explicit bool.
       pad_lanes: pad the router axis up to the 128-lane boundary. Defaults
         to on whenever the kernel compiles (Mosaic requires lane-aligned
-        blocks); pad nodes have zero routing rows/columns, zero arrivals and
-        zero buffers, so they never send, receive, or accumulate residency.
+        blocks); lane-pad nodes extend the validity mask with zeros.
 
     Returns (residency_integral [R], final_occupancy [R], drained [R]).
     """
@@ -110,12 +119,16 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
     if pad_lanes is None:
         pad_lanes = not interpret
     t, r_in = arrivals.shape
+    if valid_mask is None:
+        valid_mask = jnp.ones((r_in,), jnp.float32)
+    valid_mask = valid_mask.astype(jnp.float32)
     pad = (-r_in) % LANES if pad_lanes else 0
     if pad:
         arrivals = jnp.pad(arrivals, ((0, 0), (0, pad)))
         next_mat = jnp.pad(next_mat, ((0, pad), (0, pad)))
         drain_rate = jnp.pad(drain_rate, (0, pad))
         buf_cap = jnp.pad(buf_cap, (0, pad))
+        valid_mask = jnp.pad(valid_mask, (0, pad))
     r = r_in + pad
     assert t % t_chunk == 0
     n_steps = t // t_chunk
@@ -129,6 +142,7 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
             pl.BlockSpec((r, r), lambda i: (0, 0)),
             pl.BlockSpec((1, r), lambda i: (0, 0)),
             pl.BlockSpec((1, r), lambda i: (0, 0)),
+            pl.BlockSpec((1, r), lambda i: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, r), lambda i: (0, 0)),
@@ -138,5 +152,6 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((1, r), jnp.float32)] * 3,
         scratch_shapes=[pltpu.VMEM((1, r), jnp.float32)] * 3,
         interpret=interpret,
-    )(arrivals, next_mat, drain_rate[None, :], buf_cap[None, :])
+    )(arrivals, next_mat, drain_rate[None, :], buf_cap[None, :],
+      valid_mask[None, :])
     return resid[0, :r_in], occ[0, :r_in], drained[0, :r_in]

@@ -62,6 +62,30 @@ def build_topology(g_active: int, wavelengths: int,
     return next_mat, drain, buf, gw_idx
 
 
+def build_topology_padded(g_active: int, wavelengths: int,
+                          cfg: NetworkConfig = NETWORK, *, pad_to: int
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray]:
+    """`build_topology` padded to `pad_to` nodes with a lane-validity mask.
+
+    Padded node lanes get zero routing rows/columns, zero drain/buffers and
+    a zero validity mask — with `noc_run_pallas(..., valid_mask=mask)` they
+    are dead lanes, so one kernel shape serves every (mesh, g) topology in
+    a batch. Returns (next_mat [P, P], drain [P], buf [P], valid_mask [P]).
+    """
+    next_mat, drain, buf, _ = build_topology(g_active, wavelengths, cfg)
+    n = next_mat.shape[0]
+    if pad_to < n:
+        raise ValueError(f"pad_to {pad_to} < topology nodes {n}")
+    p = pad_to - n
+    next_mat = np.pad(next_mat, ((0, p), (0, p)))
+    drain = np.pad(drain, (0, p))
+    buf = np.pad(buf, (0, p))
+    mask = np.zeros((pad_to,), np.float32)
+    mask[:n] = 1.0
+    return next_mat, drain, buf, mask
+
+
 def simulate_residency(ext_load: float, g_active: int, wavelengths: int,
                        cycles: int = 4096, seed: int = 0,
                        cfg: NetworkConfig = NETWORK,
@@ -82,7 +106,8 @@ def simulate_residency(ext_load: float, g_active: int, wavelengths: int,
         [arr, jnp.zeros((cycles, n - r), jnp.float32)], axis=1)
     resid, occ, drained = noc_run_pallas(
         arrivals, jnp.asarray(next_mat), jnp.asarray(drain),
-        jnp.asarray(buf), interpret=interpret)
+        jnp.asarray(buf), valid_mask=jnp.ones((n,), jnp.float32),
+        interpret=interpret)
     mean_resid = resid[:r] / cycles
     return (np.asarray(mean_resid).reshape(cfg.mesh_x, cfg.mesh_y),
             float(jnp.sum(drained)))

@@ -7,17 +7,20 @@ import jax.numpy as jnp
 
 def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
                       drain_rate: jax.Array, buf_cap: jax.Array,
-                      *, link_rate: float = 1.0):
-    """Same contract as noc_run_pallas."""
+                      *, valid_mask: jax.Array | None = None,
+                      link_rate: float = 1.0):
+    """Same contract as noc_run_pallas (incl. the dead-lane valid_mask)."""
     r = arrivals.shape[1]
     nmat = next_mat.astype(jnp.float32)
     is_router = jnp.sign(jnp.sum(nmat, axis=1))
     drain = drain_rate.astype(jnp.float32)
     buf = buf_cap.astype(jnp.float32)
+    mask = jnp.ones((r,), jnp.float32) if valid_mask is None \
+        else valid_mask.astype(jnp.float32)
 
     def cycle(carry, arr):
         occ, resid, drained = carry
-        occ = occ + arr.astype(jnp.float32)
+        occ = (occ + arr.astype(jnp.float32)) * mask
         send = jnp.minimum(occ, link_rate) * is_router
         inflow_want = send @ nmat
         space = jnp.maximum(buf - occ, 0.0)

@@ -1,0 +1,259 @@
+"""Padded topology-sweep engine tests.
+
+Covers the topology-polymorphic batching layer: padded-vs-unpadded
+equivalence (the masking invariant), single-compile behavior for whole
+topology grids, the sharded entry point, padded selection tables, the
+dead-lane kernel mask, and eager/compiled parity across architectures.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.constants import NETWORK, NetworkConfig
+from repro.core.selection import (build_selection_tables,
+                                  build_selection_tables_padded)
+from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                  reset_engine_stats, shard_sweep, simulate,
+                                  simulate_eager, sweep_topology,
+                                  sweep_topology_batch,
+                                  topology_point_config)
+from repro.kernels.noc_step.kernel import noc_run_pallas
+from repro.kernels.noc_step.ops import build_topology, build_topology_padded
+from repro.kernels.noc_step.ref import reference_noc_run
+
+SUMMARY_KEYS = ("mean_latency", "mean_power_mw", "mean_energy",
+                "mean_gateways", "mean_wavelengths", "saturated_frac",
+                "total_reconfig_nj")
+
+GRID_C = [4, 6, 9]
+GRID_G = [4, 2, 3]
+
+
+@pytest.fixture(scope="module")
+def wide_trace():
+    cfg = NETWORK.with_topology(n_chiplets=max(GRID_C))
+    return traffic.generate_trace("dedup", 14, jax.random.PRNGKey(0), cfg)
+
+
+def _assert_point_matches(out, i, trace, sim_point, rtol=1e-4, atol=1e-4):
+    c = sim_point.cfg.n_chiplets
+    single = simulate(traffic.slice_trace(trace, c), sim_point)
+    for k in SUMMARY_KEYS:
+        np.testing.assert_allclose(
+            np.asarray(out["summary"][k][i]),
+            np.asarray(single["summary"][k]), rtol=rtol, atol=atol,
+            err_msg=f"summary[{k}] grid point {i}")
+    # per-chiplet records: real columns match, padded columns are zero
+    g_pad = np.asarray(out["records"]["g"][i], np.float32)
+    g_ref = np.asarray(single["records"]["g"], np.float32)
+    np.testing.assert_allclose(g_pad[:, :c], g_ref, err_msg=f"g point {i}")
+    assert np.all(g_pad[:, c:] == 0), "padded chiplet lanes lit gateways"
+    gl_pad = np.asarray(out["records"]["gw_load"][i])
+    assert np.all(gl_pad[:, c:] == 0), "padded chiplet lanes carried load"
+
+
+@pytest.mark.parametrize("arch", list(Arch))
+def test_padded_matches_unpadded_per_arch(wide_trace, arch):
+    """sweep_topology == per-topology simulate for every architecture."""
+    base = SimConfig().with_arch(arch)
+    out = sweep_topology(wide_trace, base, n_chiplets=GRID_C,
+                         gateways_per_chiplet=GRID_G)
+    for i, (c, g) in enumerate(zip(GRID_C, GRID_G)):
+        _assert_point_matches(
+            out, i, wide_trace,
+            topology_point_config(base, n_chiplets=c,
+                                  gateways_per_chiplet=g))
+
+
+def test_pad_to_actual_size_bit_matches(wide_trace):
+    """A grid whose maxima equal one topology = all-ones masks: the padded
+    scan must reproduce unpadded `simulate` to tight float tolerance."""
+    base = SimConfig().with_arch(Arch.RESIPI)
+    out = sweep_topology(wide_trace, base, n_chiplets=[max(GRID_C)])
+    _assert_point_matches(
+        out, 0, wide_trace,
+        topology_point_config(base, n_chiplets=max(GRID_C)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_mesh_radix_sweep_matches(wide_trace):
+    base = SimConfig().with_arch(Arch.RESIPI)
+    radii = [4, 6]
+    out = sweep_topology(wide_trace, base, n_chiplets=[4, 4],
+                         mesh_radix=radii)
+    for i, r in enumerate(radii):
+        _assert_point_matches(
+            out, i, wide_trace,
+            topology_point_config(base, n_chiplets=4, mesh_radix=r))
+
+
+def test_whole_grid_is_one_compile(wide_trace):
+    """The acceptance invariant: K topologies, ONE scan-body trace, and a
+    warm re-call (even with different grid values) re-traces nothing."""
+    # a config no other test uses, so this test owns its compile
+    base = dataclasses.replace(SimConfig().with_arch(Arch.RESIPI),
+                               prowaves_rho_lo=0.311)
+    reset_engine_stats()
+    sweep_topology(wide_trace, base, n_chiplets=GRID_C,
+                   gateways_per_chiplet=GRID_G)
+    assert engine_stats()["simulate_traces"] == 1
+    sweep_topology(wide_trace, base, n_chiplets=GRID_C,
+                   gateways_per_chiplet=GRID_G)
+    assert engine_stats()["simulate_traces"] == 1
+    # same shapes/maxima, different grid point values: still no re-trace
+    sweep_topology(wide_trace, base, n_chiplets=[3, 5, 9],
+                   gateways_per_chiplet=[2, 1, 4])
+    assert engine_stats()["simulate_traces"] == 1
+
+
+def test_sweep_topology_batch_shape_and_parity(wide_trace):
+    cfg = NETWORK.with_topology(n_chiplets=max(GRID_C))
+    tr2 = traffic.generate_trace("canneal", 14, jax.random.PRNGKey(5), cfg)
+    base = SimConfig().with_arch(Arch.RESIPI)
+    out = sweep_topology_batch([wide_trace, tr2], base, n_chiplets=GRID_C,
+                               gateways_per_chiplet=GRID_G)
+    assert out["summary"]["mean_latency"].shape == (2, len(GRID_C))
+    single = sweep_topology(tr2, base, n_chiplets=GRID_C,
+                            gateways_per_chiplet=GRID_G)
+    np.testing.assert_allclose(
+        np.asarray(out["summary"]["mean_latency"][1]),
+        np.asarray(single["summary"]["mean_latency"]), rtol=1e-5)
+
+
+def test_shard_sweep_matches_single_device(wide_trace):
+    """On whatever device layout exists, shard_sweep == sweep_topology."""
+    base = SimConfig().with_arch(Arch.RESIPI)
+    a = shard_sweep(wide_trace, base, n_chiplets=GRID_C)
+    b = sweep_topology(wide_trace, base, n_chiplets=GRID_C)
+    np.testing.assert_allclose(
+        np.asarray(a["summary"]["mean_latency"]),
+        np.asarray(b["summary"]["mean_latency"]), rtol=1e-5)
+
+
+def test_validation_errors(wide_trace):
+    base = SimConfig().with_arch(Arch.RESIPI)
+    with pytest.raises(ValueError):
+        sweep_topology(wide_trace, base)                     # nothing swept
+    with pytest.raises(ValueError):
+        sweep_topology(wide_trace, base, bogus_field=[1, 2])
+    with pytest.raises(ValueError):
+        sweep_topology(wide_trace, base, n_chiplets=[4, 8],
+                       gateways_per_chiplet=[2])             # length mismatch
+    with pytest.raises(ValueError):
+        sweep_topology(wide_trace, base, gateways_per_chiplet=[6])
+    with pytest.raises(ValueError):                          # trace too narrow
+        sweep_topology(wide_trace, base, n_chiplets=[max(GRID_C) + 8])
+    with pytest.raises(ValueError):                          # runtime-only
+        sweep_topology(wide_trace, base, l_m=jnp.asarray([0.01]))
+
+
+def test_topology_with_runtime_field_combined(wide_trace):
+    """Topology axes zip with runtime SWEEPABLE_FIELDS in one grid."""
+    base = SimConfig().with_arch(Arch.RESIPI)
+    lms = [0.008, 0.02]
+    out = sweep_topology(wide_trace, base, n_chiplets=[4, 9],
+                         l_m=jnp.asarray(lms))
+    for i, (c, lm) in enumerate(zip([4, 9], lms)):
+        point = topology_point_config(base, n_chiplets=c)
+        point = dataclasses.replace(
+            point, ctl=dataclasses.replace(point.ctl, l_m=lm))
+        single = simulate(traffic.slice_trace(wide_trace, c), point)
+        np.testing.assert_allclose(
+            np.asarray(out["summary"]["mean_latency"][i]),
+            np.asarray(single["summary"]["mean_latency"]),
+            rtol=1e-4, err_msg=f"point {i}")
+
+
+# ---------------------------------------------------------------------------
+# Padded selection tables
+# ---------------------------------------------------------------------------
+
+def test_padded_selection_tables():
+    cfgs = tuple(NetworkConfig().with_topology(n_chiplets=c,
+                                               gateways_per_chiplet=g,
+                                               mesh_radix=r)
+                 for c, g, r in [(4, 4, 4), (16, 2, 4), (64, 4, 6)])
+    p = build_selection_tables_padded(cfgs)
+    g_pad, r_pad = 4, 36
+    assert p.src_map.shape == (3, g_pad, r_pad)
+    assert p.src_hops.shape == (3, g_pad)
+    # validity masks + zero padding
+    np.testing.assert_array_equal(p.gw_mask[1], [1, 1, 0, 0])
+    assert np.all(p.src_hops[1, 2:] == 0)
+    np.testing.assert_array_equal(p.router_mask[0],
+                                  [1] * 16 + [0] * 20)
+    assert np.all(p.src_map[0, :, 16:] == 0)
+    # real slices equal the unpadded per-config tables
+    t = build_selection_tables(dataclasses.replace(cfgs[0], n_chiplets=1))
+    np.testing.assert_array_equal(p.src_map[0, :, :16], t.src_map)
+    np.testing.assert_allclose(p.src_hops[0], t.src_hops)
+    # memoized per (cfgs, pad_to)
+    assert build_selection_tables_padded(cfgs) is p
+    assert build_selection_tables_padded(cfgs, (4, 64)) is not p
+
+
+def test_padded_tables_reject_too_small_pad():
+    with pytest.raises(ValueError):
+        build_selection_tables_padded((NetworkConfig(),), (2, 16))
+
+
+# ---------------------------------------------------------------------------
+# Dead-lane kernel mask
+# ---------------------------------------------------------------------------
+
+def test_noc_kernel_valid_mask_kills_padded_lanes():
+    """Garbage arrivals/buffers in masked lanes must not leak anywhere."""
+    nm, drain, buf, mask = build_topology_padded(2, 4, pad_to=32)
+    n_real = build_topology(2, 4)[0].shape[0]
+    key = jax.random.PRNGKey(7)
+    arr = (jax.random.uniform(key, (256, 32)) < 0.05
+           ).astype(jnp.float32) * 8              # nonzero in dead lanes too
+    buf_garbage = buf.copy()
+    buf_garbage[n_real:] = 64.0                   # dead lanes offer space
+    rk, ok, dk = noc_run_pallas(
+        arr, jnp.asarray(nm), jnp.asarray(drain), jnp.asarray(buf_garbage),
+        valid_mask=jnp.asarray(mask), t_chunk=64, interpret=True,
+        pad_lanes=True)
+    rr, orr, dr = reference_noc_run(
+        arr[:, :n_real], jnp.asarray(nm[:n_real, :n_real]),
+        jnp.asarray(drain[:n_real]), jnp.asarray(buf[:n_real]))
+    assert np.all(np.asarray(rk[n_real:]) == 0)
+    assert np.all(np.asarray(ok[n_real:]) == 0)
+    assert np.all(np.asarray(dk[n_real:]) == 0)
+    np.testing.assert_allclose(rk[:n_real], rr, atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(dk[:n_real], dr, atol=1e-2, rtol=1e-4)
+
+
+def test_noc_ref_valid_mask_matches_kernel():
+    nm, drain, buf, mask = build_topology_padded(3, 4, pad_to=24)
+    arr = (jax.random.uniform(jax.random.PRNGKey(9), (128, 24)) < 0.04
+           ).astype(jnp.float32) * 8
+    rk, ok, dk = noc_run_pallas(
+        arr, jnp.asarray(nm), jnp.asarray(drain), jnp.asarray(buf),
+        valid_mask=jnp.asarray(mask), t_chunk=64, interpret=True)
+    rr, orr, dr = reference_noc_run(
+        arr, jnp.asarray(nm), jnp.asarray(drain), jnp.asarray(buf),
+        valid_mask=jnp.asarray(mask))
+    np.testing.assert_allclose(rk, rr, atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(ok, orr, atol=1e-2, rtol=1e-4)
+    np.testing.assert_allclose(dk, dr, atol=1e-2, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Eager/compiled parity (seed-baseline path stays honest)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(Arch))
+def test_simulate_eager_matches_simulate(arch):
+    tr = traffic.generate_trace("fluidanimate", 16, jax.random.PRNGKey(3))
+    sim = SimConfig().with_arch(arch)
+    eager = simulate_eager(tr, sim)["summary"]
+    jitted = simulate(tr, sim)["summary"]
+    for k in SUMMARY_KEYS:
+        np.testing.assert_allclose(
+            np.asarray(eager[k]), np.asarray(jitted[k]),
+            rtol=1e-5, atol=1e-5, err_msg=f"{arch} summary[{k}]")
