@@ -1,8 +1,9 @@
 # Developer entry points. PYTHONPATH=src is the repo's import convention
-# (ROADMAP.md tier-1 verify line).
-PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+# (ROADMAP.md tier-1 verify line); the repo root rides along so the
+# `benchmarks` namespace package resolves when a bench runs standalone.
+PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench
+.PHONY: verify test smoke bench bench-placement
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -17,3 +18,7 @@ smoke:
 
 bench:
 	$(PY) benchmarks/run.py
+
+# Just the compiled placement-search benchmark (-> BENCH_placement.json).
+bench-placement:
+	$(PY) benchmarks/bench_placement.py

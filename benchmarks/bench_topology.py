@@ -71,7 +71,7 @@ def run(n_intervals: int = 40, seed: int = 7) -> dict:
 
     # -- compile farm baseline (one executable per topology) ----------------
     clear_engine_caches()
-    farm_s = _timed(lambda: _farm(trace, base, cs, gs))
+    farm_s = _farm(trace, base, cs, gs)
 
     # -- padded engine: cold (single compile) then warm ---------------------
     clear_engine_caches()

@@ -19,9 +19,9 @@ def _run(name, fn, derived_fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_engine, bench_topology, fig10_lm_dse,
-                            fig11_main, fig12_adaptivity, fig13_residency,
-                            table2_overhead, lane_schedule)
+    from benchmarks import (bench_engine, bench_placement, bench_topology,
+                            fig10_lm_dse, fig11_main, fig12_adaptivity,
+                            fig13_residency, table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
     eng = _run("bench_engine", bench_engine.run,
@@ -44,6 +44,16 @@ def main() -> None:
           f"{topo['farm_s']:.2f}s -> cold {topo['padded_cold_s']:.2f}s "
           f"({topo['speedup_cold']:.1f}x), warm {topo['padded_warm_s']:.3f}s",
           flush=True)
+    plc = _run("bench_placement", bench_placement.run,
+               lambda r: (f"gen_per_s={r['generations_per_sec_warm']:.0f},"
+                          f"inter_lat{r['inter_latency_delta_frac']:+.1%}"
+                          f"vs_default"))
+    print(f"# placement: {plc['generations']}x{plc['population']}-candidate "
+          f"search is ONE executable ({plc['scan_body_traces']} scan-body "
+          f"trace): warm {plc['search_warm_s']:.3f}s "
+          f"({plc['speedup_warm_vs_farm']:.0f}x vs per-placement compiles); "
+          f"best placement {plc['inter_latency_delta_frac']:+.1%} "
+          f"inter-chiplet latency vs default edges", flush=True)
     _run("fig10_lm_dse", fig10_lm_dse.run,
          lambda r: f"L_m={r['l_m_selected']:.4f}(paper 0.0152)")
     _run("fig11_main", fig11_main.run,

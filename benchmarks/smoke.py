@@ -6,7 +6,9 @@
   2. a ~5 s compiled padded-topology-sweep smoke that asserts the engine's
      two load-bearing invariants on CPU — the whole topology grid runs as
      ONE scan-body trace, and padded results match unpadded `simulate` —
-     so regressions in the compiled padded path are caught without a TPU.
+     so regressions in the compiled padded path are caught without a TPU,
+  3. the same pair of invariants for the gateway-placement axis
+     (`sweep_placement`: K placements, one trace, unpadded parity).
 
 `--smoke-only` skips the pytest stage (used by CI wrappers that already
 ran the suite, and for quick local iteration).
@@ -66,6 +68,36 @@ def padded_sweep_smoke() -> None:
           f"({len(grid_c)} topologies, 1 trace, parity holds)")
 
 
+def placement_sweep_smoke() -> None:
+    """Compiled placement path: K placements, one trace, unpadded parity."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core import traffic
+    from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                      reset_engine_stats, simulate,
+                                      sweep_placement)
+
+    t0 = time.time()
+    tr = traffic.generate_trace("dedup", 12, jax.random.PRNGKey(1))
+    base = SimConfig().with_arch(Arch.RESIPI)
+    center = ((1, 1), (2, 2), (1, 2), (2, 1))
+
+    reset_engine_stats()
+    out = sweep_placement(tr, base, [None, center])
+    assert engine_stats()["simulate_traces"] == 1, "placement sweep re-traced"
+    ref = simulate(tr, dataclasses.replace(
+        base, cfg=base.cfg.with_placement(center)))["summary"]
+    np.testing.assert_allclose(
+        np.asarray(out["summary"]["mean_latency"][1]),
+        np.asarray(ref["mean_latency"]), rtol=1e-6,
+        err_msg="placement lane diverged from unpadded simulate")
+    print(f"placement-sweep smoke OK in {time.time() - t0:.1f}s "
+          f"(2 placements, 1 trace, parity holds)")
+
+
 def main(argv) -> int:
     if "--smoke-only" not in argv:
         rc = subprocess.call(
@@ -74,6 +106,7 @@ def main(argv) -> int:
             print("tier-1 pytest FAILED", file=sys.stderr)
             return rc
     padded_sweep_smoke()
+    placement_sweep_smoke()
     print("verify OK")
     return 0
 

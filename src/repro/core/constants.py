@@ -7,6 +7,7 @@ by the roofline analysis (§Roofline in EXPERIMENTS.md).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -27,6 +28,11 @@ class PhotonicPower:
     awgr_loss_db: float = 1.8               # AWGR insertion loss (§4.4)
     controller_lgc_uw: float = 172.0        # Table 2, per-chiplet local ctl
     controller_inc_uw: float = 787.0        # Table 2, interposer controller
+    # Access-waveguide propagation loss from a gateway's TSV/coupler down to
+    # the interposer waveguide: ~3 dB/cm for standard SOI strip waveguides.
+    # An edge-placed gateway pays ~0; an interior placement pays its distance
+    # to the nearest chiplet edge — the placement latency/power trade-off.
+    waveguide_db_per_mm: float = 0.3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +53,25 @@ class NetworkConfig:
     reconfig_interval_cycles: int = 1_000_000
     sim_cycles: int = 100_000_000
     warmup_cycles: int = 10_000
+    # Gateway-attached router coordinates on the chiplet mesh, in activation
+    # order (row k lights up at activation level k+1). None selects the
+    # edge-distributed default scheme (selection.default_gateway_positions);
+    # an explicit value is a tuple of (x, y) pairs — kept hashable so the
+    # config stays a valid static jit key and an lru_cache key, which is what
+    # makes placement a compile-free DSE axis (sweep_placement).
+    gateway_positions: Optional[Tuple[Tuple[int, int], ...]] = None
+    router_pitch_mm: float = 1.0            # mesh tile pitch (waveguide mm/hop)
+
+    def __post_init__(self):
+        if self.gateway_positions is not None:
+            try:
+                norm = tuple((int(x), int(y))
+                             for x, y in self.gateway_positions)
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    "gateway_positions must be a sequence of (x, y) pairs, "
+                    f"got {self.gateway_positions!r}") from e
+            object.__setattr__(self, "gateway_positions", norm)
 
     @property
     def routers_per_chiplet(self) -> int:
@@ -68,8 +93,12 @@ class NetworkConfig:
         """Topology-DSE variant: one grid point of a `sweep_topology` scan.
 
         `mesh_radix` sets a square r x r intra-chiplet mesh. These are the
-        three shape-defining topology axes (TOPOLOGY_SWEEPABLE_FIELDS in
-        repro.core.simulator); everything else is inherited.
+        shape-defining topology axes (TOPOLOGY_SWEEPABLE_FIELDS in
+        repro.core.simulator); everything else is inherited. A radix change
+        invalidates any explicit `gateway_positions` (coordinates belong to
+        the old mesh), so it resets them to the default edge scheme — pin a
+        per-radix placement via `with_placement` / the `gateway_positions`
+        sweep axis instead.
         """
         kw = {}
         if n_chiplets is not None:
@@ -79,7 +108,19 @@ class NetworkConfig:
         if mesh_radix is not None:
             kw["mesh_x"] = int(mesh_radix)
             kw["mesh_y"] = int(mesh_radix)
+            kw["gateway_positions"] = None
         return dataclasses.replace(self, **kw)
+
+    def with_placement(self, positions) -> "NetworkConfig":
+        """Placement-DSE variant: pin explicit gateway coordinates.
+
+        `positions` is a sequence of (x, y) router coordinates in activation
+        order (None restores the default edge scheme); normalization to a
+        hashable tuple happens in `__post_init__`. Validation (bounds,
+        collisions, enough slots for `max_gateways_per_chiplet`) happens in
+        `selection.resolve_gateway_positions` when tables are built.
+        """
+        return dataclasses.replace(self, gateway_positions=positions)
 
     def gateway_service_cycles(self, wavelengths: int) -> float:
         """Cycles to serialize one packet through a gateway with W wavelengths.

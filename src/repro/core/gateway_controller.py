@@ -17,8 +17,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.constants import PAPER_L_M
+from repro.core.constants import NETWORK, PAPER_L_M, NetworkConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,6 +27,41 @@ class ControllerConfig:
     l_m: float = PAPER_L_M        # maximum allowable per-gateway load (§4.2)
     max_gateways: int = 4         # G: per-chiplet maximum
     min_gateways: int = 1
+
+
+def activation_order(positions, cfg: NetworkConfig = NETWORK) -> np.ndarray:
+    """Controller activation order for an arbitrary gateway placement.
+
+    The controller raises g one gateway at a time (Fig. 6), and the gateway
+    that lights up at level k+1 is row k of the placement array — so the row
+    *order* decides selection quality at every partial activation level. The
+    default edge scheme hand-orders its 4 slots so consecutive levels stay
+    maximally spread (Fig. 8 a-d); this generalizes that rule to arbitrary
+    placements:
+
+      * level 1 gets the position with the fewest mean hops to the mesh
+        routers (closest to the mesh center — the best solo gateway),
+      * each further level greedily maximizes its minimum Manhattan distance
+        to the already-activated set (ties broken by mean-hop quality, then
+        by original row index, so the order is deterministic).
+
+    Returns a permutation of row indices (design-time numpy; applied by
+    `selection.normalize_placement(..., order="spread")` and the placement
+    search's candidate proposals).
+    """
+    pos = np.asarray(positions, np.int64).reshape(-1, 2)
+    n = len(pos)
+    center = np.array([(cfg.mesh_x - 1) / 2.0, (cfg.mesh_y - 1) / 2.0])
+    centrality = np.abs(pos - center).sum(axis=1)
+    order = [int(np.lexsort((np.arange(n), centrality))[0])]
+    remaining = [i for i in range(n) if i != order[0]]
+    while remaining:
+        dmin = [min(np.abs(pos[i] - pos[j]).sum() for j in order)
+                for i in remaining]
+        best = np.lexsort((remaining, [centrality[i] for i in remaining],
+                           [-d for d in dmin]))[0]
+        order.append(remaining.pop(int(best)))
+    return np.asarray(order, np.int64)
 
 
 def t_p(cfg: ControllerConfig) -> jax.Array:

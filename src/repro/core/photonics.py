@@ -19,8 +19,10 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.constants import PHOTONIC_POWER, NETWORK, PhotonicPower
+from repro.core.constants import (PHOTONIC_POWER, NETWORK, NetworkConfig,
+                                  PhotonicPower)
 
 
 # ---------------------------------------------------------------------------
@@ -93,6 +95,37 @@ def power_division(active: jax.Array, laser_power_mw: jax.Array
     # gateway is idle; guard numerically.
     received = jnp.where(active > 0, received, 0.0)
     return received
+
+
+# ---------------------------------------------------------------------------
+# Placement-dependent access-waveguide loss
+# ---------------------------------------------------------------------------
+
+def gateway_access_loss_db(gw_pos: np.ndarray,
+                           cfg: NetworkConfig = NETWORK,
+                           power: PhotonicPower = PHOTONIC_POWER
+                           ) -> np.ndarray:
+    """Per-gateway optical access loss implied by where the gateway sits.
+
+    A gateway's access waveguide runs from its router tile to the nearest
+    chiplet edge, where it couples down to the interposer SWMR waveguide
+    (Fig. 4). Edge-placed gateways (the default scheme) pay ~0 dB; interior
+    placements pay propagation loss proportional to their Manhattan distance
+    to the closest edge — the physical term that makes gateway *placement* a
+    real latency-vs-power trade-off instead of a free hop-count knob.
+
+    Args:
+      gw_pos: [G, 2] int router coordinates (activation order).
+
+    Returns [G] float32 dB values (design-time numpy constant; consumed by
+    the selection tables as per-activation-level means).
+    """
+    pos = np.asarray(gw_pos, np.int32).reshape(-1, 2)
+    edge_hops = np.minimum.reduce([
+        pos[:, 0], cfg.mesh_x - 1 - pos[:, 0],
+        pos[:, 1], cfg.mesh_y - 1 - pos[:, 1]])
+    return (edge_hops * cfg.router_pitch_mm
+            * power.waveguide_db_per_mm).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------

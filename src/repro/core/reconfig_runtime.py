@@ -111,6 +111,10 @@ def chunk_pytree(tree: Any, lanes: int) -> list:
     of §3.4 applied to tensors. Returns a list of `lanes` sub-pytrees (dicts
     keyed by flattened path index).
     """
+    if lanes < 1:
+        raise ValueError(f"chunk_pytree needs lanes >= 1, got {lanes} — "
+                         f"snap controller decisions through "
+                         f"nearest_compiled_width first")
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     sizes = [(leaf.size * leaf.dtype.itemsize, i)
              for i, leaf in enumerate(leaves)]

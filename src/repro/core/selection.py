@@ -26,7 +26,37 @@ from typing import Tuple
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import photonics
 from repro.core.constants import NETWORK, NetworkConfig
+from repro.core.gateway_controller import activation_order
+
+
+def _validate_positions(pos: np.ndarray, cfg: NetworkConfig,
+                        what: str) -> None:
+    """Reject out-of-bounds or colliding gateway coordinates loudly.
+
+    Small meshes used to make the default edge formulas (`mx - 2`, `my - 2`)
+    underflow into negative or duplicate coordinates *silently*; every
+    placement now funnels through this check before any table is built.
+    """
+    oob = ((pos[:, 0] < 0) | (pos[:, 0] >= cfg.mesh_x)
+           | (pos[:, 1] < 0) | (pos[:, 1] >= cfg.mesh_y))
+    if oob.any():
+        bad = [tuple(p) for p in pos[oob]]
+        raise ValueError(
+            f"{what}: gateway coordinates {bad} fall outside the "
+            f"{cfg.mesh_x}x{cfg.mesh_y} chiplet mesh")
+    uniq, counts = np.unique(pos, axis=0, return_counts=True)
+    if (counts > 1).any():
+        dup = [tuple(p) for p in uniq[counts > 1]]
+        raise ValueError(
+            f"{what}: gateway coordinates collide at {dup} — each gateway "
+            f"needs its own router on the {cfg.mesh_x}x{cfg.mesh_y} mesh")
+
+
+# Slot count of the default edge-distributed scheme below; placements with
+# more gateways need explicit NetworkConfig.gateway_positions.
+N_DEFAULT_EDGE_SLOTS = 4
 
 
 def default_gateway_positions(cfg: NetworkConfig = NETWORK) -> np.ndarray:
@@ -35,6 +65,8 @@ def default_gateway_positions(cfg: NetworkConfig = NETWORK) -> np.ndarray:
     Placement follows the edge-distributed scheme of [29]/Fig. 8d: gateways
     sit on distinct edges so that consecutive activation levels keep them
     maximally spread. Activation order is the row order of this array.
+    Raises a clear ValueError on meshes too small to host the scheme
+    (the edge formulas need every sliced slot in-bounds and distinct).
     """
     mx, my = cfg.mesh_x, cfg.mesh_y
     pos = np.array([
@@ -43,7 +75,56 @@ def default_gateway_positions(cfg: NetworkConfig = NETWORK) -> np.ndarray:
         [0, my - 2],            # G3: west edge
         [mx - 1, 1],            # G4: east edge
     ], dtype=np.int32)
+    assert len(pos) == N_DEFAULT_EDGE_SLOTS
+    if cfg.max_gateways_per_chiplet > len(pos):
+        raise ValueError(
+            f"default edge scheme defines {len(pos)} gateway slots but "
+            f"max_gateways_per_chiplet={cfg.max_gateways_per_chiplet}; pass "
+            f"explicit NetworkConfig.gateway_positions for denser placements")
+    pos = pos[: cfg.max_gateways_per_chiplet]
+    _validate_positions(
+        pos, cfg, f"default_gateway_positions on a {mx}x{my} mesh")
+    return pos
+
+
+def resolve_gateway_positions(cfg: NetworkConfig = NETWORK) -> np.ndarray:
+    """The placement the config actually means: explicit or default.
+
+    Explicit `cfg.gateway_positions` are validated (bounds, collisions,
+    enough rows for `max_gateways_per_chiplet`) and sliced to the first
+    `max_gateways_per_chiplet` rows (activation order); None falls back to
+    the edge-distributed default scheme. Everything downstream — selection
+    tables, flit-kernel topology building, access-waveguide loss — goes
+    through this single resolution point.
+    """
+    if cfg.gateway_positions is None:
+        return default_gateway_positions(cfg)
+    pos = np.asarray(cfg.gateway_positions, np.int32).reshape(-1, 2)
+    if len(pos) < cfg.max_gateways_per_chiplet:
+        raise ValueError(
+            f"gateway_positions places {len(pos)} gateways but "
+            f"max_gateways_per_chiplet={cfg.max_gateways_per_chiplet}")
+    _validate_positions(pos, cfg, "gateway_positions")
     return pos[: cfg.max_gateways_per_chiplet]
+
+
+def normalize_placement(positions, cfg: NetworkConfig = NETWORK, *,
+                        order: str = "given"):
+    """Canonicalize a placement into the hashable tuple form configs carry.
+
+    `order="spread"` re-rows the placement by the controller's activation
+    order (gateway_controller.activation_order) so partial activation levels
+    stay well-spread; `order="given"` keeps the caller's row order. Returns
+    None unchanged (the default scheme marker).
+    """
+    if positions is None:
+        return None
+    pos = np.asarray(positions, np.int64).reshape(-1, 2)
+    if order == "spread":
+        pos = pos[activation_order(pos, cfg)]
+    elif order != "given":
+        raise ValueError(f"unknown placement order: {order!r}")
+    return tuple((int(x), int(y)) for x, y in pos)
 
 
 def _router_coords(cfg: NetworkConfig) -> np.ndarray:
@@ -108,19 +189,24 @@ class SelectionTables:
     dst_map:  [G, R] int  — destination gateway for each destination router.
     src_hops: [G]  float  — mean router->gateway hops under src_map.
     dst_hops: [G]  float  — mean gateway->router hops under dst_map.
+    gw_loss_db: [G] float — mean access-waveguide loss (dB) over the active
+                            gateways at each level (placement-derived:
+                            photonics.gateway_access_loss_db).
     gw_pos:   [Gmax, 2]   — gateway coordinates (activation order).
     """
     src_map: np.ndarray
     dst_map: np.ndarray
     src_hops: np.ndarray
     dst_hops: np.ndarray
+    gw_loss_db: np.ndarray
     gw_pos: np.ndarray
 
     def as_jax(self) -> dict:
         return {"src_map": jnp.asarray(self.src_map),
                 "dst_map": jnp.asarray(self.dst_map),
                 "src_hops": jnp.asarray(self.src_hops),
-                "dst_hops": jnp.asarray(self.dst_hops)}
+                "dst_hops": jnp.asarray(self.dst_hops),
+                "gw_loss_db": jnp.asarray(self.gw_loss_db)}
 
 
 def build_selection_tables(cfg: NetworkConfig = NETWORK) -> SelectionTables:
@@ -140,7 +226,7 @@ def build_selection_tables(cfg: NetworkConfig = NETWORK) -> SelectionTables:
 @functools.lru_cache(maxsize=None)
 def _build_selection_tables_cached(cfg: NetworkConfig) -> SelectionTables:
     routers = _router_coords(cfg)
-    gw_pos = default_gateway_positions(cfg)
+    gw_pos = resolve_gateway_positions(cfg)
     n_r = len(routers)
     g_max = cfg.max_gateways_per_chiplet
 
@@ -157,11 +243,15 @@ def _build_selection_tables_cached(cfg: NetworkConfig) -> SelectionTables:
     hops = np.take_along_axis(dist, src_map.T, axis=1)          # [R, Gmax]
     src_hops = hops.mean(axis=0).astype(np.float32)
     dst_hops = src_hops.copy()
+    # Level-g mean access loss: running mean over the first g placed
+    # gateways — the laser must overcome the average lit access waveguide.
+    per_gw_db = photonics.gateway_access_loss_db(gw_pos, cfg)
+    gw_loss_db = (np.cumsum(per_gw_db) / levels).astype(np.float32)
 
     return SelectionTables(src_map=src_map.astype(np.int32),
                            dst_map=dst_map.astype(np.int32),
                            src_hops=src_hops, dst_hops=dst_hops,
-                           gw_pos=gw_pos)
+                           gw_loss_db=gw_loss_db, gw_pos=gw_pos)
 
 
 # Cache-management handles for instrumentation (simulator.engine_stats) and
@@ -186,6 +276,7 @@ class PaddedSelectionTables:
 
     src_map/dst_map: [K, g_pad, r_pad] int   — padded with gateway 0.
     src_hops/dst_hops: [K, g_pad] float      — padded with 0.0 hops.
+    gw_loss_db:  [K, g_pad] float — per-level mean access loss, 0-padded.
     gw_mask:     [K, g_pad] float — 1 where the activation level exists.
     router_mask: [K, r_pad] float — 1 where the router exists.
     n_gateways:  [K] int — real max gateways per chiplet per topology.
@@ -195,6 +286,7 @@ class PaddedSelectionTables:
     dst_map: np.ndarray
     src_hops: np.ndarray
     dst_hops: np.ndarray
+    gw_loss_db: np.ndarray
     gw_mask: np.ndarray
     router_mask: np.ndarray
     n_gateways: np.ndarray
@@ -203,8 +295,8 @@ class PaddedSelectionTables:
     def as_jax(self) -> dict:
         return {k: jnp.asarray(getattr(self, k))
                 for k in ("src_map", "dst_map", "src_hops", "dst_hops",
-                          "gw_mask", "router_mask", "n_gateways",
-                          "n_routers")}
+                          "gw_loss_db", "gw_mask", "router_mask",
+                          "n_gateways", "n_routers")}
 
 
 def build_selection_tables_padded(
@@ -234,6 +326,7 @@ def _build_selection_tables_padded_cached(
     dst_map = np.zeros((k, g_pad, r_pad), np.int32)
     src_hops = np.zeros((k, g_pad), np.float32)
     dst_hops = np.zeros((k, g_pad), np.float32)
+    gw_loss_db = np.zeros((k, g_pad), np.float32)
     gw_mask = np.zeros((k, g_pad), np.float32)
     router_mask = np.zeros((k, r_pad), np.float32)
     n_gw = np.zeros((k,), np.int32)
@@ -252,14 +345,15 @@ def _build_selection_tables_padded_cached(
         dst_map[i, :g, :r] = t.dst_map
         src_hops[i, :g] = t.src_hops
         dst_hops[i, :g] = t.dst_hops
+        gw_loss_db[i, :g] = t.gw_loss_db
         gw_mask[i, :g] = 1.0
         router_mask[i, :r] = 1.0
         n_gw[i], n_rt[i] = g, r
 
     return PaddedSelectionTables(
         src_map=src_map, dst_map=dst_map, src_hops=src_hops,
-        dst_hops=dst_hops, gw_mask=gw_mask, router_mask=router_mask,
-        n_gateways=n_gw, n_routers=n_rt)
+        dst_hops=dst_hops, gw_loss_db=gw_loss_db, gw_mask=gw_mask,
+        router_mask=router_mask, n_gateways=n_gw, n_routers=n_rt)
 
 
 @functools.lru_cache(maxsize=None)

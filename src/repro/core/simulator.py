@@ -32,6 +32,13 @@ Engine model (compile-once, batch-everywhere):
     load/latency/power (see ROADMAP.md "Topology-sweep API").
   * `shard_sweep`    — the same padded grid with its topology axis sharded
     across devices (NamedSharding/GSPMD), single-device fallback.
+  * `sweep_placement` / `sweep_placement_batch` — vmap K candidate gateway
+    *placements* (NetworkConfig.gateway_positions) through the same ONE
+    compiled masked scan; placements enter purely as traced hop/loss
+    tables, so a placement DSE never recompiles per candidate.
+  * `search_placement` — PlaceIT-style greedy/annealed placement search:
+    numpy proposals, one `sweep_placement` scoring call per generation,
+    one compiled executable for the entire search.
   * `engine_stats()` — trace/compile counters used by tests and benches.
 
 `simulate_eager` preserves the pre-engine per-call retrace path for
@@ -42,10 +49,12 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
+import math
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import photonics
 from repro.core.constants import (NETWORK, PROWAVES_MAX_WAVELENGTHS,
@@ -55,8 +64,11 @@ from repro.core.constants import (NETWORK, PROWAVES_MAX_WAVELENGTHS,
 from repro.core.gateway_controller import (ControllerConfig, ControllerState,
                                            epoch_step)
 from repro.core.noc import NocModel, uniform_mesh_mean_hops
-from repro.core.selection import (build_selection_tables, mean_access_hops,
+from repro.core.selection import (N_DEFAULT_EDGE_SLOTS,
+                                  build_selection_tables, mean_access_hops,
+                                  normalize_placement,
                                   padded_selection_tables_jax,
+                                  resolve_gateway_positions,
                                   selection_tables_jax)
 
 
@@ -135,6 +147,9 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
         chip_mask = None
         src_hops = mean_access_hops(tables, g)                         # [C]
         mean_src_hops = jnp.mean(src_hops)
+        # Placement-derived optical access loss at each chiplet's current
+        # activation level (0 dB for the default edge scheme).
+        access_db = jnp.mean(tables["gw_loss_db"][jnp.maximum(g, 1) - 1])
         lam = wavelengths
         lam_mem = wavelengths if wavelengths.ndim == 0 \
             else jnp.mean(wavelengths)
@@ -145,6 +160,8 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
         src_hops = topo["src_hops"][jnp.maximum(g, 1) - 1]             # [C]
         nreal = jnp.maximum(jnp.sum(chip_mask), 1.0)
         mean_src_hops = jnp.sum(src_hops * chip_mask) / nreal
+        gdb = topo["gw_loss_db"][jnp.maximum(g, 1) - 1]                # [C]
+        access_db = jnp.sum(gdb * chip_mask) / nreal
         # Padded chiplet lanes carry lambda=0; clamp inside the latency math
         # only (their latencies are masked to zero below) so serialization
         # never divides by zero.
@@ -180,6 +197,7 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     return {"latency": lat, "gw_load": gw_load,
             "inter_latency": inter_lat,
             "mean_inter_latency": jnp.sum(inter_lat * w_ext) / tot_ext,
+            "access_db": access_db,
             "saturated": jnp.any(noc.saturated(gw_load, lam))}
 
 
@@ -262,7 +280,8 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
             per_gw_lam = jnp.concatenate([w, lam_mem])
             pw = photonics.interposer_power_mw(
                 jnp.ones((n_pw,), bool), per_gw_lam,
-                n_gateways=n_pw, mode="wdm", n_chiplets=n_chips)
+                n_gateways=n_pw, mode="wdm", loss_db=m["access_db"],
+                n_chiplets=n_chips)
         elif sim.arch == Arch.AWGR:
             # One wavelength per provisioned port (18 total in Table 1);
             # padded lanes are inactive, so summing the activity mask keeps
@@ -270,12 +289,13 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
             pw = photonics.interposer_power_mw(
                 active, active.astype(jnp.float32),
                 n_gateways=n_total,
-                loss_db=PHOTONIC_POWER.awgr_loss_db, mode="static",
-                gateway_count=gw_count, n_chiplets=n_chips)
+                loss_db=PHOTONIC_POWER.awgr_loss_db + m["access_db"],
+                mode="static", gateway_count=gw_count, n_chiplets=n_chips)
         else:
             pw = photonics.interposer_power_mw(
                 active, jnp.float32(sim.wavelengths),
-                n_gateways=n_total, mode="pcm", n_chiplets=n_chips)
+                n_gateways=n_total, mode="pcm", loss_db=m["access_db"],
+                n_chiplets=n_chips)
 
         # --- controller update ----------------------------------------------
         reconf_nj = jnp.float32(0.0)
@@ -289,6 +309,12 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
         elif sim.arch == Arch.PROWAVES:
             lam_new = _prowaves_update(state.wavelengths,
                                        m["inter_latency"], m["gw_load"], sim)
+            if chip_mask is not None:
+                # Keep padded chiplet lanes at lambda=0 explicitly: the
+                # controller's `cold` branch would otherwise ratchet a dead
+                # lane up to the minimum wavelength floor, and the "wdm"
+                # power sums are unmasked by design.
+                lam_new = jnp.where(chip_mask > 0, lam_new, 0)
             new_state = SimState(ctl=state.ctl, wavelengths=lam_new,
                                  prev_active=active)
         else:
@@ -303,7 +329,9 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
                "laser_mw": pw["laser_mw"], "energy": energy,
                "reconfig_nj": reconf_nj,
                "g": g, "wavelengths": lam_rec,
-               "gw_load": m["gw_load"], "saturated": m["saturated"]}
+               "gw_load": m["gw_load"],
+               "mean_inter_latency": m["mean_inter_latency"],
+               "saturated": m["saturated"]}
         return new_state, rec
 
     return step
@@ -328,8 +356,13 @@ SWEEPABLE_FIELDS = ("l_m", "buffer_sat", "wavelengths",
 # Shape-defining topology axes that `sweep_topology` batches via pad-to-max:
 # every grid point is padded to the grid maxima (chiplets, gateway slots,
 # routers) and carried through ONE compiled executable with validity masks.
+# `gateway_positions` is the placement axis (PlaceIT-style DSE): each grid
+# value is a placement — a tuple of (x, y) router coordinates in activation
+# order, or None for the default edge scheme — and enters the executable
+# purely through traced per-point tables (src_hops / gw_loss_db), so K
+# placements never cost K compiles.
 TOPOLOGY_SWEEPABLE_FIELDS = ("n_chiplets", "gateways_per_chiplet",
-                             "mesh_radix")
+                             "mesh_radix", "gateway_positions")
 
 
 def engine_stats() -> dict:
@@ -528,14 +561,19 @@ def simulate_eager(trace: dict, sim: SimConfig) -> dict:
 
     Kept as the benchmark baseline (bench_engine.py) — do not use in sweeps.
     """
-    tables = SelectionTables_rebuild(sim.cfg)
+    tables = rebuild_selection_tables(sim.cfg)
     ext, mem, intra, ext_frac = _trace_arrays(trace)
     return _simulate_impl(ext, mem, intra, ext_frac, sim, tables)
 
 
-def SelectionTables_rebuild(cfg: NetworkConfig) -> dict:
+def rebuild_selection_tables(cfg: NetworkConfig) -> dict:
     """Uncached table build (bypasses both lru_caches) for baselines."""
     return build_selection_tables.__wrapped__(cfg).as_jax()
+
+
+# Deprecated pre-PEP8 alias (PR 3 rename): kept so bench_engine.py baselines
+# recorded against the old name keep importing/running unchanged.
+SelectionTables_rebuild = rebuild_selection_tables
 
 
 def stack_traces(traces: List[dict]) -> dict:
@@ -611,16 +649,21 @@ def sweep_batch(traces, sim: SimConfig, **fields) -> dict:
 
 def topology_point_config(sim: SimConfig, *, n_chiplets: int = None,
                           gateways_per_chiplet: int = None,
-                          mesh_radix: int = None) -> SimConfig:
+                          mesh_radix: int = None,
+                          gateway_positions=None) -> SimConfig:
     """Unpadded SimConfig equivalent to one `sweep_topology` grid point.
 
     The controller's gateway bounds are clamped to the topology's per-chiplet
     gateway count, matching the padded engine's semantics. Used by parity
-    tests and the compile-farm benchmark baseline.
+    tests and the compile-farm benchmark baseline. `gateway_positions` pins
+    the point's placement (None keeps the base config's placement, which a
+    `mesh_radix` change resets to the default edge scheme).
     """
     cfg = sim.cfg.with_topology(n_chiplets=n_chiplets,
                                 gateways_per_chiplet=gateways_per_chiplet,
                                 mesh_radix=mesh_radix)
+    if gateway_positions is not None:
+        cfg = cfg.with_placement(normalize_placement(gateway_positions))
     g = cfg.max_gateways_per_chiplet
     ctl = dataclasses.replace(
         sim.ctl, max_gateways=min(sim.ctl.max_gateways, g),
@@ -651,7 +694,8 @@ def _prepare_topology_sweep(sim: SimConfig, grids: dict):
     if not topo_grids:
         raise ValueError("no topology fields swept — use sweep() for "
                          "runtime-only grids")
-    lengths = {k: len(jnp.asarray(v)) for k, v in grids.items()}
+    lengths = {k: (len(v) if k == "gateway_positions"
+                   else len(jnp.asarray(v))) for k, v in grids.items()}
     if len(set(lengths.values())) != 1:
         raise ValueError(f"swept fields must share one length, "
                          f"got {lengths}")
@@ -663,23 +707,30 @@ def _prepare_topology_sweep(sim: SimConfig, grids: dict):
     gs = [int(x) for x in topo_grids.get(
         "gateways_per_chiplet", [cfg.max_gateways_per_chiplet] * k)]
     rs = [int(x) for x in topo_grids.get("mesh_radix", [cfg.mesh_x] * k)]
+    ps = [normalize_placement(p) for p in topo_grids.get(
+        "gateway_positions", [cfg.gateway_positions] * k)]
     if min(cs) < 1 or min(gs) < 1 or min(rs) < 2:
         raise ValueError(f"invalid topology grid: n_chiplets {cs}, "
                          f"gateways {gs}, radix {rs}")
-    if max(gs) > 4:
-        raise ValueError("gateways_per_chiplet > 4 needs more placed "
-                         "gateway positions (selection.default_gateway_"
-                         "positions defines 4 edge slots)")
+    for i, (g, p) in enumerate(zip(gs, ps)):
+        avail = N_DEFAULT_EDGE_SLOTS if p is None else len(p)
+        if g > avail:
+            raise ValueError(
+                f"grid point {i}: gateways_per_chiplet={g} exceeds the "
+                f"{avail} placed gateway positions "
+                f"({'default edge scheme' if p is None else p})")
 
-    cfgs = tuple(cfg.with_topology(n_chiplets=c, gateways_per_chiplet=g,
-                                   mesh_radix=r)
-                 for c, g, r in zip(cs, gs, rs))
+    cfgs = tuple(dataclasses.replace(
+        cfg.with_topology(n_chiplets=c, gateways_per_chiplet=g,
+                          mesh_radix=r), gateway_positions=p)
+                 for c, g, r, p in zip(cs, gs, rs, ps))
     c_max, g_max, r_max = max(cs), max(gs), max(rs)
     ptab = padded_selection_tables_jax(cfgs, (g_max, r_max * r_max))
     topo = {
         "n_chiplets": jnp.asarray(cs, jnp.int32),
         "g_max": jnp.asarray(gs, jnp.int32),
         "src_hops": ptab["src_hops"],                       # [K, g_max]
+        "gw_loss_db": ptab["gw_loss_db"],                   # [K, g_max]
         "mesh_hops": jnp.asarray(
             [uniform_mesh_mean_hops(c) for c in cfgs], jnp.float32),
         "mesh_x": jnp.asarray(rs, jnp.float32),
@@ -815,6 +866,173 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
         warnings.warn(f"sharded sweep failed ({e!r}); falling back to "
                       f"single-device path")
         return single_call(traces, sim, **grids)
+
+
+# ---------------------------------------------------------------------------
+# Placement-polymorphic sweeps + compiled placement search (PlaceIT-style)
+# ---------------------------------------------------------------------------
+
+def sweep_placement(trace: dict, sim: SimConfig, placements, **grids) -> dict:
+    """Gateway-placement DSE: K candidate placements, ONE compiled scan.
+
+    ::
+
+        sweep_placement(tr, sim, [None,                      # default edges
+                                  ((1, 1), (2, 2), (1, 2), (2, 1)),
+                                  ((0, 0), (3, 3), (0, 3), (3, 0))])
+
+    Each placement is a tuple of (x, y) router coordinates in activation
+    order (None = the default edge scheme). Placement data reaches the
+    executable purely through traced per-point tables (hop means + access-
+    waveguide loss), so the K placements share one jit cache entry per
+    (shape, config, K) — re-sweeping different candidates of the same
+    population size re-traces nothing, which is what makes the generation
+    loop of `search_placement` compile-free after round one.
+
+    Composes with the other sweep axes: any TOPOLOGY_SWEEPABLE_FIELDS /
+    SWEEPABLE_FIELDS grids of the same length K zip in (`sweep_placement`
+    is sugar for ``sweep_topology(..., gateway_positions=placements)``).
+    Lane k matches unpadded `simulate` with
+    ``NetworkConfig(gateway_positions=placements[k])`` (tested per-arch).
+    """
+    return sweep_topology(trace, sim, gateway_positions=list(placements),
+                          **grids)
+
+
+def sweep_placement_batch(traces, sim: SimConfig, placements,
+                          **grids) -> dict:
+    """N traces x K placements in ONE compiled call ([N, K] results)."""
+    return sweep_topology_batch(traces, sim,
+                                gateway_positions=list(placements), **grids)
+
+
+def _placement_scores(out: dict, objective: str) -> np.ndarray:
+    """Per-lane scalar objective from a sweep_placement result ([K])."""
+    if objective == "inter_latency":
+        # Per-interval traffic-weighted inter-chiplet latency, [K, T] -> [K].
+        return np.asarray(
+            jnp.mean(out["records"]["mean_inter_latency"], axis=-1))
+    key = {"latency": "mean_latency", "power": "mean_power_mw",
+           "energy": "mean_energy"}.get(objective, objective)
+    if key not in out["summary"]:
+        raise ValueError(
+            f"unknown placement objective {objective!r} (use "
+            f"'inter_latency', 'latency', 'power', 'energy' or a summary "
+            f"key: {sorted(out['summary'])})")
+    return np.asarray(out["summary"][key])
+
+
+def search_placement(trace: dict, sim: SimConfig, *,
+                     objective: str = "inter_latency",
+                     generations: int = 10, population: int = 12,
+                     seed: int = 0, init=None, temperature: float = 0.05,
+                     cooling: float = 0.7,
+                     restart_frac: float = 0.25) -> dict:
+    """PlaceIT-style gateway-placement search on the compiled sweep engine.
+
+    Greedy/simulated-annealing hybrid: candidate placements are proposed in
+    numpy (single-gateway moves around the incumbent, spread-reordered by
+    the controller activation rule, plus random restarts) and every
+    generation is scored with ONE `sweep_placement` call of fixed population
+    size — so the whole search shares a single compiled executable
+    (`engine_stats()` shows one scan-body trace across all generations).
+
+    Acceptance is annealed: the incumbent moves to the generation's best
+    candidate when it improves, or with probability exp(-rel_delta/T)
+    otherwise (T decays by `cooling` each round). The returned best is
+    elitist over everything ever scored, and the default edge scheme is
+    always scored in generation 0, so `best_score <= default_score` when
+    `init` is None.
+
+    Returns {best_placement, best_score, best_summary, default_placement,
+    default_score, improvement_frac, history} with one history entry per
+    generation (the latency/power/energy trajectory of the search).
+    """
+    if population < 2:
+        raise ValueError("population must be >= 2 (incumbent + candidates)")
+    if generations < 1:
+        raise ValueError("generations must be >= 1")
+    cfg = sim.cfg
+    gmax = cfg.max_gateways_per_chiplet
+    coords = [(x, y) for x in range(cfg.mesh_x) for y in range(cfg.mesh_y)]
+    rng = np.random.RandomState(seed)
+
+    default_p = normalize_placement(resolve_gateway_positions(cfg), cfg)
+    parent = default_p if init is None \
+        else normalize_placement(init, cfg)
+
+    def random_placement():
+        idx = rng.choice(len(coords), size=gmax, replace=False)
+        return normalize_placement([coords[i] for i in idx], cfg,
+                                   order="spread")
+
+    def mutate(p, moves):
+        pos = list(p)
+        occupied = set(pos)
+        for _ in range(moves):
+            i = int(rng.randint(len(pos)))
+            free = [c for c in coords if c not in occupied]
+            if not free:
+                break
+            occupied.remove(pos[i])
+            pos[i] = free[int(rng.randint(len(free)))]
+            occupied.add(pos[i])
+        return normalize_placement(pos, cfg, order="spread")
+
+    def lane_summary(out, i):
+        return {k: float(np.asarray(v)[i])
+                for k, v in out["summary"].items()}
+
+    best_p, best_s, best_summary = None, np.inf, None
+    default_s = None
+    temp = temperature
+    history = []
+    for gen in range(generations):
+        moves = 2 if gen < max(1, generations // 3) else 1
+        cands = [parent]
+        if gen == 0 and parent != default_p:
+            cands.append(default_p)
+        while len(cands) < population:
+            cands.append(random_placement()
+                         if rng.rand() < restart_frac else
+                         mutate(parent, moves))
+        out = sweep_placement(trace, sim, cands)
+        scores = _placement_scores(out, objective)
+        if gen == 0:
+            default_s = float(scores[cands.index(default_p)]
+                              if default_p in cands else scores[0])
+        ibest = int(np.argmin(scores))
+        if scores[ibest] < best_s:
+            best_p, best_s = cands[ibest], float(scores[ibest])
+            best_summary = lane_summary(out, ibest)
+        # Annealed incumbent move: greedy downhill, probabilistic uphill.
+        delta = float(scores[ibest] - scores[0])
+        rel = delta / max(abs(float(scores[0])), 1e-12)
+        accepted = delta < 0 or (temp > 0
+                                 and rng.rand() < math.exp(-rel / temp))
+        if accepted:
+            parent = cands[ibest]
+        history.append({
+            "generation": gen,
+            "parent_score": float(scores[0]),
+            "best_candidate_score": float(scores[ibest]),
+            "best_score": float(best_s),
+            "accepted": bool(accepted),
+            "latency": float(np.asarray(
+                out["summary"]["mean_latency"])[ibest]),
+            "power_mw": float(np.asarray(
+                out["summary"]["mean_power_mw"])[ibest]),
+            "energy": float(np.asarray(
+                out["summary"]["mean_energy"])[ibest]),
+        })
+        temp *= cooling
+
+    return {"best_placement": best_p, "best_score": best_s,
+            "best_summary": best_summary,
+            "default_placement": default_p, "default_score": default_s,
+            "improvement_frac": 1.0 - best_s / max(default_s, 1e-12),
+            "objective": objective, "generations": generations,
+            "population": population, "history": history}
 
 
 def simulate_all_archs(trace: dict, base: SimConfig = SimConfig()) -> dict:

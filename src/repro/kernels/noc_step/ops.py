@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.core.constants import NETWORK, NetworkConfig
 from repro.core.selection import (build_selection_tables,
-                                  default_gateway_positions, _router_coords)
+                                  resolve_gateway_positions, _router_coords)
 from repro.kernels.noc_step.kernel import noc_run_pallas
 
 
@@ -28,11 +28,13 @@ def build_topology(g_active: int, wavelengths: int,
     Mesh routers 0..R-1 route flits via XY toward their assigned gateway
     (Fig. 8 balanced partition); a gateway sink node is appended per active
     gateway. Sink drain = min(optical serialization, electronic port) rate.
+    Placement-aware: `cfg.gateway_positions` (or the default edge scheme)
+    decides both the balanced partition and where the sinks sit.
     """
     tables = build_selection_tables(cfg)
     assign = tables.src_map[g_active - 1]            # [R] -> gateway id
     routers = _router_coords(cfg)
-    gw_pos = default_gateway_positions(cfg)[:g_active]
+    gw_pos = resolve_gateway_positions(cfg)[:g_active]
     r = len(routers)
     n = r + g_active
     next_mat = np.zeros((n, n), np.float32)

@@ -1,0 +1,282 @@
+"""Placement-polymorphic gateway engine tests (PR 3).
+
+Covers the first-class placement axis end to end: config-level placement
+fields, validated default/explicit position resolution (including the
+small-mesh regression), placement-aware selection tables and access-loss
+columns, `sweep_placement` single-compile + per-arch parity with unpadded
+`simulate`, composition with topology/runtime sweep axes, the flit-kernel
+topology builder, the activation-order rule, and `search_placement` on the
+Table 1 system.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import photonics, traffic
+from repro.core.constants import NETWORK, NetworkConfig
+from repro.core.gateway_controller import activation_order
+from repro.core.selection import (build_selection_tables,
+                                  default_gateway_positions,
+                                  normalize_placement,
+                                  resolve_gateway_positions)
+from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                  rebuild_selection_tables,
+                                  reset_engine_stats, search_placement,
+                                  simulate, sweep_placement,
+                                  sweep_placement_batch, sweep_topology,
+                                  topology_point_config)
+from repro.core.simulator import SelectionTables_rebuild  # deprecated alias
+from repro.kernels.noc_step.ops import build_topology
+
+SUMMARY_KEYS = ("mean_latency", "mean_power_mw", "mean_energy",
+                "mean_gateways", "mean_wavelengths", "saturated_frac",
+                "total_reconfig_nj")
+
+CENTER = ((1, 1), (2, 2), (1, 2), (2, 1))
+CORNERS = ((0, 0), (3, 3), (0, 3), (3, 0))
+PLACEMENTS = [None, CENTER, CORNERS]
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return traffic.generate_trace("dedup", 12, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Config-level placement field
+# ---------------------------------------------------------------------------
+
+def test_gateway_positions_normalized_and_hashable():
+    cfg = NetworkConfig(gateway_positions=[[1, 1], [2, 2], [1, 2], [2, 1]])
+    assert cfg.gateway_positions == CENTER
+    assert hash(cfg) == hash(NetworkConfig(gateway_positions=CENTER))
+    assert NetworkConfig().with_placement(CENTER).gateway_positions == CENTER
+    assert NetworkConfig(gateway_positions=CENTER).with_placement(
+        None).gateway_positions is None
+
+
+def test_gateway_positions_bad_shape_raises():
+    with pytest.raises(ValueError, match="pairs"):
+        NetworkConfig(gateway_positions=(1, 2, 3))
+
+
+def test_mesh_radix_change_resets_explicit_placement():
+    cfg = NetworkConfig(gateway_positions=CENTER)
+    assert cfg.with_topology(mesh_radix=6).gateway_positions is None
+    assert cfg.with_topology(n_chiplets=8).gateway_positions == CENTER
+
+
+# ---------------------------------------------------------------------------
+# Position resolution + validation (incl. small-mesh regression)
+# ---------------------------------------------------------------------------
+
+def test_default_positions_validated_on_small_meshes():
+    # 2x2 still hosts all four distinct edge slots.
+    pos = default_gateway_positions(NetworkConfig(mesh_x=2, mesh_y=2))
+    assert len(np.unique(pos, axis=0)) == 4
+    # 1-wide meshes used to produce out-of-bounds coordinates silently.
+    with pytest.raises(ValueError, match="outside"):
+        default_gateway_positions(NetworkConfig(mesh_x=1, mesh_y=4))
+    # 3x1 with two gateways used to produce a silent collision at [1, 0].
+    with pytest.raises(ValueError, match="collide"):
+        default_gateway_positions(
+            NetworkConfig(mesh_x=3, mesh_y=1, max_gateways_per_chiplet=2))
+    with pytest.raises(ValueError, match="4 gateway slots"):
+        default_gateway_positions(
+            NetworkConfig(max_gateways_per_chiplet=5))
+
+
+def test_explicit_positions_validated():
+    with pytest.raises(ValueError, match="outside"):
+        resolve_gateway_positions(
+            NetworkConfig(gateway_positions=((0, 0), (4, 1), (1, 2), (2, 0))))
+    with pytest.raises(ValueError, match="collide"):
+        resolve_gateway_positions(
+            NetworkConfig(gateway_positions=((1, 1), (1, 1), (0, 2), (2, 0))))
+    with pytest.raises(ValueError, match="places 2 gateways"):
+        resolve_gateway_positions(
+            NetworkConfig(gateway_positions=((1, 1), (2, 2))))
+    # Explicit denser-than-4 placements unlock gateways beyond the default 4.
+    six = ((0, 0), (3, 3), (0, 3), (3, 0), (1, 1), (2, 2))
+    cfg = NetworkConfig(max_gateways_per_chiplet=6, gateway_positions=six)
+    assert resolve_gateway_positions(cfg).shape == (6, 2)
+    assert build_selection_tables(cfg).src_map.shape == (6, 16)
+
+
+def test_tables_follow_placement_and_record_loss():
+    t_default = build_selection_tables(NetworkConfig())
+    t_center = build_selection_tables(NetworkConfig(gateway_positions=CENTER))
+    # A centered solo gateway beats the default edge slot on mean hops...
+    assert t_center.src_hops[0] < t_default.src_hops[0]
+    # ...but pays access-waveguide loss that edge placements avoid.
+    np.testing.assert_allclose(t_default.gw_loss_db, 0.0)
+    assert np.all(t_center.gw_loss_db > 0)
+    np.testing.assert_allclose(
+        t_center.gw_loss_db,
+        np.cumsum(photonics.gateway_access_loss_db(
+            np.asarray(CENTER), NetworkConfig())) / np.arange(1, 5))
+
+
+def test_activation_order_spread_rule():
+    order = activation_order([(0, 0), (1, 1), (3, 3), (0, 3)], NETWORK)
+    np.testing.assert_array_equal(order, [1, 2, 3, 0])
+    assert normalize_placement(
+        [(0, 0), (1, 1), (3, 3), (0, 3)], NETWORK, order="spread") == \
+        ((1, 1), (3, 3), (0, 3), (0, 0))
+    # Deterministic: same input, same order.
+    np.testing.assert_array_equal(
+        order, activation_order([(0, 0), (1, 1), (3, 3), (0, 3)], NETWORK))
+
+
+# ---------------------------------------------------------------------------
+# sweep_placement: one compile, per-arch parity with unpadded simulate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(Arch))
+def test_sweep_placement_matches_simulate_per_arch(trace, arch):
+    """Acceptance: lane k == unpadded simulate with gateway_positions=p[k]."""
+    base = SimConfig().with_arch(arch)
+    out = sweep_placement(trace, base, PLACEMENTS)
+    for k, p in enumerate(PLACEMENTS):
+        sim_k = dataclasses.replace(
+            base, cfg=base.cfg.with_placement(normalize_placement(p)))
+        single = simulate(trace, sim_k)["summary"]
+        for key in SUMMARY_KEYS:
+            np.testing.assert_allclose(
+                np.asarray(out["summary"][key][k]), np.asarray(single[key]),
+                rtol=1e-6, atol=1e-6,
+                err_msg=f"{arch} lane {k} summary[{key}]")
+
+
+def test_sweep_placement_is_one_compile(trace):
+    base = dataclasses.replace(SimConfig().with_arch(Arch.RESIPI),
+                               prowaves_rho_lo=0.307)   # test-owned compile
+    reset_engine_stats()
+    sweep_placement(trace, base, PLACEMENTS)
+    assert engine_stats()["simulate_traces"] == 1
+    # Different candidate placements, same population size: zero re-traces.
+    sweep_placement(trace, base, [CENTER, CORNERS,
+                                  ((1, 0), (2, 3), (0, 2), (3, 1))])
+    assert engine_stats()["simulate_traces"] == 1
+
+
+def test_placement_shifts_latency_power_tradeoff(trace):
+    out = sweep_placement(trace, SimConfig().with_arch(Arch.RESIPI),
+                          [None, CENTER])["summary"]
+    lat = np.asarray(out["mean_latency"])
+    pw = np.asarray(out["mean_power_mw"])
+    assert lat[1] < lat[0], "centered gateways should cut access hops"
+    assert pw[1] > pw[0], "interior gateways should pay waveguide loss"
+
+
+def test_sweep_placement_composes_with_topology_and_runtime(trace):
+    """Placement zips with n_chiplets and runtime l_m in one grid."""
+    cfg = NETWORK.with_topology(n_chiplets=9)
+    wide = traffic.generate_trace("canneal", 10, jax.random.PRNGKey(2), cfg)
+    base = SimConfig().with_arch(Arch.RESIPI)
+    lms = [0.008, 0.02]
+    out = sweep_placement(wide, base, [CENTER, None], n_chiplets=[4, 9],
+                          l_m=jnp.asarray(lms))
+    for i, (p, c, lm) in enumerate(zip([CENTER, None], [4, 9], lms)):
+        point = topology_point_config(base, n_chiplets=c,
+                                      gateway_positions=p)
+        point = dataclasses.replace(
+            point, ctl=dataclasses.replace(point.ctl, l_m=lm))
+        single = simulate(traffic.slice_trace(wide, c), point)
+        np.testing.assert_allclose(
+            np.asarray(out["summary"]["mean_latency"][i]),
+            np.asarray(single["summary"]["mean_latency"]),
+            rtol=1e-4, err_msg=f"point {i}")
+
+
+def test_sweep_placement_batch_shapes(trace):
+    tr2 = traffic.generate_trace("facesim", 12, jax.random.PRNGKey(4))
+    out = sweep_placement_batch([trace, tr2],
+                                SimConfig().with_arch(Arch.RESIPI),
+                                PLACEMENTS)
+    assert out["summary"]["mean_latency"].shape == (2, len(PLACEMENTS))
+
+
+def test_sweep_placement_validation(trace):
+    base = SimConfig().with_arch(Arch.RESIPI)
+    with pytest.raises(ValueError, match="outside"):
+        sweep_placement(trace, base, [((9, 9), (1, 1), (2, 2), (0, 2))])
+    with pytest.raises(ValueError, match="exceeds"):
+        sweep_topology(trace, base, gateways_per_chiplet=[3],
+                       gateway_positions=[((1, 1), (2, 2))])
+    with pytest.raises(ValueError, match="share one length"):
+        sweep_placement(trace, base, [CENTER], n_chiplets=[4, 4])
+
+
+# ---------------------------------------------------------------------------
+# Flit-level kernel topology follows the placement
+# ---------------------------------------------------------------------------
+
+def test_build_topology_respects_placement():
+    cfg = NetworkConfig(gateway_positions=CORNERS)
+    next_mat, drain, buf, gw_idx = build_topology(2, 4, cfg)
+    rid = lambda x, y: x * cfg.mesh_y + y
+    np.testing.assert_array_equal(
+        gw_idx, [rid(*CORNERS[0]), rid(*CORNERS[1])])
+    # The corner router ejects straight into its co-located gateway sink.
+    r = cfg.routers_per_chiplet
+    assert next_mat[rid(*CORNERS[0]), r + 0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# search_placement on the Table 1 system
+# ---------------------------------------------------------------------------
+
+def test_search_placement_beats_or_ties_default(trace):
+    base = SimConfig().with_arch(Arch.RESIPI)
+    reset_engine_stats()
+    res = search_placement(trace, base, generations=4, population=6, seed=1)
+    # The entire generation loop shares ONE compiled executable.
+    assert engine_stats()["simulate_traces"] == 1
+    assert res["best_score"] <= res["default_score"]
+    assert len(res["history"]) == 4
+    assert res["default_placement"] == normalize_placement(
+        default_gateway_positions(base.cfg))
+    # Best placement is a valid, collision-free 4-gateway layout.
+    pos = np.asarray(res["best_placement"])
+    assert pos.shape == (4, 2)
+    assert len(np.unique(pos, axis=0)) == 4
+    assert pos.min() >= 0 and pos.max() < 4
+    # The reported best bit-matches a fresh unpadded run of that placement.
+    single = simulate(trace, dataclasses.replace(
+        base, cfg=base.cfg.with_placement(res["best_placement"])))
+    np.testing.assert_allclose(
+        res["best_summary"]["mean_latency"],
+        float(single["summary"]["mean_latency"]), rtol=1e-6)
+
+
+def test_search_placement_deterministic_by_seed(trace):
+    base = SimConfig().with_arch(Arch.RESIPI)
+    a = search_placement(trace, base, generations=3, population=5, seed=7)
+    b = search_placement(trace, base, generations=3, population=5, seed=7)
+    assert a["best_placement"] == b["best_placement"]
+    assert a["best_score"] == b["best_score"]
+
+
+def test_search_placement_param_validation(trace):
+    base = SimConfig().with_arch(Arch.RESIPI)
+    with pytest.raises(ValueError, match="population"):
+        search_placement(trace, base, population=1)
+    with pytest.raises(ValueError, match="generations"):
+        search_placement(trace, base, generations=0)
+    with pytest.raises(ValueError, match="objective"):
+        search_placement(trace, base, generations=1, population=2,
+                         objective="nope")
+
+
+# ---------------------------------------------------------------------------
+# PEP8 rename keeps the deprecated alias working
+# ---------------------------------------------------------------------------
+
+def test_rebuild_selection_tables_alias(trace):
+    assert SelectionTables_rebuild is rebuild_selection_tables
+    t = rebuild_selection_tables(NETWORK)
+    assert set(t) >= {"src_map", "src_hops", "gw_loss_db"}

@@ -1,0 +1,107 @@
+"""reconfig_runtime edge-case coverage: width snapping + pytree chunking.
+
+Satellite coverage for the Level-2 lane runtime: `nearest_compiled_width`
+corner cases (lanes=0, exact-width hits, equidistant ties),
+`chunk_pytree`/`merge_chunks` round-trips on ragged splits, and the lanes<1
+guard.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.reconfig_runtime import (LANE_WIDTHS, chunk_pytree,
+                                         laned_psum, merge_chunks,
+                                         nearest_compiled_width)
+
+
+# ---------------------------------------------------------------------------
+# nearest_compiled_width
+# ---------------------------------------------------------------------------
+
+def test_nearest_width_exact_hits():
+    for w in LANE_WIDTHS:
+        assert nearest_compiled_width(w) == w
+
+
+def test_nearest_width_lanes_zero_snaps_to_minimum():
+    assert nearest_compiled_width(0) == min(LANE_WIDTHS)
+
+
+def test_nearest_width_tie_breaks_to_narrower():
+    # 3 is equidistant from 2 and 4 — the (abs, width) key picks 2.
+    assert nearest_compiled_width(3) == 2
+    assert nearest_compiled_width(3, widths=(1, 2, 4, 8)) == 2
+
+
+def test_nearest_width_above_maximum_clamps():
+    assert nearest_compiled_width(100) == max(LANE_WIDTHS)
+    assert nearest_compiled_width(5, widths=(2, 8)) == 2  # tie -> narrower
+
+
+# ---------------------------------------------------------------------------
+# chunk_pytree / merge_chunks
+# ---------------------------------------------------------------------------
+
+def _tree(sizes):
+    return {f"p{i}": jnp.arange(s, dtype=jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+def test_chunk_pytree_rejects_zero_lanes():
+    with pytest.raises(ValueError, match="lanes >= 1"):
+        chunk_pytree(_tree([4, 2]), 0)
+    with pytest.raises(ValueError, match="lanes >= 1"):
+        chunk_pytree(_tree([4]), -1)
+
+
+def test_chunk_single_lane_round_trip():
+    tree = _tree([5, 3, 7])
+    bins = chunk_pytree(tree, 1)
+    assert len(bins) == 1 and len(bins[0]) == 3
+    merged = merge_chunks(bins, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(merged[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_ragged_final_chunk_round_trip():
+    # 5 leaves into 3 lanes: the last bins are ragged, every leaf must come
+    # back exactly once in its original tree position.
+    tree = _tree([11, 7, 5, 3, 2])
+    bins = chunk_pytree(tree, 3)
+    assert len(bins) == 3
+    assert sum(len(b) for b in bins) == 5
+    seen = [i for b in bins for i in b]
+    assert sorted(seen) == list(range(5)), "leaf dropped or duplicated"
+    merged = merge_chunks(bins, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(merged[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_more_lanes_than_leaves_round_trip():
+    tree = _tree([4, 2])
+    bins = chunk_pytree(tree, 4)
+    assert len(bins) == 4
+    assert sum(bool(b) for b in bins) == 2      # two empty lanes ride along
+    merged = merge_chunks(bins, tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(merged[k]),
+                                      np.asarray(tree[k]))
+
+
+def test_chunking_balances_bytes():
+    # Largest-first binning: no lane should exceed half the total bytes
+    # for this size profile.
+    tree = _tree([8, 8, 8, 8])
+    bins = chunk_pytree(tree, 2)
+    loads = [sum(v.size for v in b.values()) for b in bins]
+    assert loads[0] == loads[1] == 16
+
+
+def test_laned_psum_identity_outside_shard_map():
+    tree = _tree([6, 3])
+    out = laned_psum(tree, None, 4)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(tree[k]))
