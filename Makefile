@@ -3,7 +3,7 @@
 # `benchmarks` namespace package resolves when a bench runs standalone.
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench bench-placement
+.PHONY: verify test smoke bench bench-placement bench-traffic
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -22,3 +22,8 @@ bench:
 # Just the compiled placement-search benchmark (-> BENCH_placement.json).
 bench-placement:
 	$(PY) benchmarks/bench_placement.py
+
+# Just the workload-DSE / ragged-batch / streaming benchmark
+# (-> BENCH_traffic.json).
+bench-traffic:
+	$(PY) benchmarks/bench_traffic.py

@@ -1,0 +1,149 @@
+"""Workload-DSE benchmark: per-workload/per-length compile farm vs ONE
+compiled executable, plus the streaming-session throughput.
+
+Traffic-driven studies (the whole point of ReSiPI, §4) sweep *workloads*:
+different applications, different synthetic patterns, different trace
+lengths. Without the workload-polymorphic engine every distinct trace
+length is its own jit executable and every workload its own call — a
+compile farm. This benchmark times a mixed PARSEC + synthetic workload set
+(five distinct trace lengths) three ways:
+
+  * compile farm    — one `simulate` per workload (caches cleared first):
+                      every distinct T pays trace + compile + run.
+  * workload cold   — the whole set as ONE `sweep_workload` executable
+                      (time-padded under t_mask), including its single
+                      compilation.
+  * workload warm   — the same call re-keyed against a hot cache: the
+                      steady-state workload-DSE cost.
+
+Also measures the ragged `simulate_batch` path against its per-length farm
+and the `SimSession` streaming path (chunked, donated carry) against the
+one-shot run. Results land in benchmarks/results/BENCH_traffic.json with
+an appended `history` entry per run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import traffic
+from repro.core.simulator import (Arch, SimConfig, SimSession,
+                                  clear_engine_caches, engine_stats,
+                                  reset_engine_stats, simulate,
+                                  simulate_batch, sweep_workload)
+from benchmarks.common import save_json_history
+
+# Mixed workload set: calibrated apps + canonical synthetics, five distinct
+# trace lengths so the farm pays five distinct-shape compiles.
+WORKLOADS = (
+    traffic.ParsecSpec(app="blackscholes", n_intervals=48),
+    traffic.ParsecSpec(app="dedup", n_intervals=64),
+    traffic.ParsecSpec(app="facesim", n_intervals=32),
+    traffic.UniformSpec(n_intervals=40),
+    traffic.HotspotSpec(n_intervals=48),
+    traffic.PermutationSpec(pattern="transpose", n_intervals=56),
+    traffic.PermutationSpec(pattern="tornado", n_intervals=40),
+    traffic.BurstySpec(n_intervals=64),
+)
+
+
+def _timed(fn) -> float:
+    t0 = time.time()
+    jax.block_until_ready(fn())
+    return time.time() - t0
+
+
+def run(seed: int = 11, chunk: int = 16, stream_chunks: int = 24) -> dict:
+    base = SimConfig().with_arch(Arch.RESIPI)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(WORKLOADS))
+    traces = [traffic.generate(s, k) for s, k in zip(WORKLOADS, keys)]
+    n_lengths = len({tr["ext_load"].shape[0] for tr in traces})
+
+    # -- per-workload compile farm (one executable per distinct T) ----------
+    clear_engine_caches()
+    farm_s = _timed(lambda: [simulate(tr, base)["summary"]["mean_latency"]
+                             for tr in traces])
+
+    # -- workload engine: cold (single compile) then warm re-keyed ----------
+    clear_engine_caches()
+    reset_engine_stats()
+    sweep = lambda s: sweep_workload(list(WORKLOADS), base, seed=s)[
+        "summary"]["mean_latency"]
+    workload_cold_s = _timed(lambda: sweep(seed))
+    scan_body_traces = engine_stats()["simulate_traces"]
+    workload_warm_s = _timed(lambda: sweep(seed + 1))
+
+    # -- ragged batch vs its per-length farm --------------------------------
+    clear_engine_caches()
+    ragged_farm_s = _timed(
+        lambda: [simulate(tr, base)["summary"]["mean_latency"]
+                 for tr in traces])
+    clear_engine_caches()
+    ragged = lambda: simulate_batch(traces, base)["summary"]["mean_latency"]
+    ragged_cold_s = _timed(ragged)
+    ragged_warm_s = _timed(ragged)
+
+    # -- streaming session: chunked one-pass vs one-shot --------------------
+    stream_spec = traffic.ParsecSpec(app="dedup",
+                                     n_intervals=chunk * stream_chunks)
+    stream_tr = traffic.generate(stream_spec, jax.random.PRNGKey(seed))
+    chunks = list(traffic.chunk_trace(stream_tr, chunk))
+
+    def stream():
+        session = SimSession.init(base)
+        for ch in chunks:
+            session.step_chunk(ch)
+        return session.summary()["mean_latency"]
+
+    oneshot = lambda: simulate(stream_tr, base)["summary"]["mean_latency"]
+    stream();  oneshot()                       # warm both paths
+    stream_warm_s = _timed(stream)
+    oneshot_warm_s = _timed(oneshot)
+    drift = abs(float(np.asarray(stream())) - float(np.asarray(oneshot())))
+
+    t_max = max(s.n_intervals for s in WORKLOADS)
+    result = {
+        "backend": jax.default_backend(),
+        "n_workloads": len(WORKLOADS),
+        "n_distinct_lengths": n_lengths,
+        "t_max": t_max,
+        "workloads": [s.name for s in WORKLOADS],
+        "scan_body_traces": scan_body_traces,
+        "farm_s": farm_s,
+        "workload_cold_s": workload_cold_s,
+        "workload_warm_s": workload_warm_s,
+        "speedup_cold": farm_s / workload_cold_s,
+        "speedup_warm": farm_s / workload_warm_s,
+        "warm_intervals_per_sec": sum(s.n_intervals for s in WORKLOADS)
+                                  / workload_warm_s,
+        "ragged_farm_s": ragged_farm_s,
+        "ragged_cold_s": ragged_cold_s,
+        "ragged_warm_s": ragged_warm_s,
+        "ragged_speedup_warm": ragged_farm_s / ragged_warm_s,
+        "stream_chunk": chunk,
+        "stream_intervals": chunk * stream_chunks,
+        "stream_warm_s": stream_warm_s,
+        "oneshot_warm_s": oneshot_warm_s,
+        "stream_intervals_per_sec": chunk * stream_chunks / stream_warm_s,
+        "stream_vs_oneshot_drift": drift,
+    }
+    save_json_history("BENCH_traffic.json", result)
+    return result
+
+
+if __name__ == "__main__":
+    r = run()
+    print(f"workload DSE ({r['n_workloads']} workloads, "
+          f"{r['n_distinct_lengths']} trace lengths): compile farm "
+          f"{r['farm_s']:.2f}s -> one padded executable cold "
+          f"{r['workload_cold_s']:.2f}s ({r['speedup_cold']:.1f}x), warm "
+          f"{r['workload_warm_s']:.3f}s ({r['speedup_warm']:.0f}x); "
+          f"{r['scan_body_traces']} scan-body trace(s)")
+    print(f"ragged batch: farm {r['ragged_farm_s']:.2f}s -> warm "
+          f"{r['ragged_warm_s']:.3f}s ({r['ragged_speedup_warm']:.0f}x)")
+    print(f"streaming: {r['stream_intervals']} intervals in chunks of "
+          f"{r['stream_chunk']} at {r['stream_intervals_per_sec']:.0f} "
+          f"intervals/s (one-shot {r['oneshot_warm_s']:.3f}s, drift "
+          f"{r['stream_vs_oneshot_drift']:.2e})")

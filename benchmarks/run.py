@@ -20,8 +20,9 @@ def _run(name, fn, derived_fn):
 
 def main() -> None:
     from benchmarks import (bench_engine, bench_placement, bench_topology,
-                            fig10_lm_dse, fig11_main, fig12_adaptivity,
-                            fig13_residency, table2_overhead, lane_schedule)
+                            bench_traffic, fig10_lm_dse, fig11_main,
+                            fig12_adaptivity, fig13_residency,
+                            table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
     eng = _run("bench_engine", bench_engine.run,
@@ -54,6 +55,16 @@ def main() -> None:
           f"({plc['speedup_warm_vs_farm']:.0f}x vs per-placement compiles); "
           f"best placement {plc['inter_latency_delta_frac']:+.1%} "
           f"inter-chiplet latency vs default edges", flush=True)
+    tra = _run("bench_traffic", bench_traffic.run,
+               lambda r: (f"warm_speedup={r['speedup_warm']:.0f}x,"
+                          f"{r['scan_body_traces']}trace/"
+                          f"{r['n_workloads']}workloads"))
+    print(f"# traffic: {tra['n_workloads']}-workload mixed-length DSE is ONE "
+          f"padded executable ({tra['scan_body_traces']} scan-body trace): "
+          f"compile farm {tra['farm_s']:.2f}s -> warm "
+          f"{tra['workload_warm_s']:.3f}s ({tra['speedup_warm']:.0f}x); "
+          f"streaming {tra['stream_intervals_per_sec']:.0f} intervals/s in "
+          f"chunks of {tra['stream_chunk']}", flush=True)
     _run("fig10_lm_dse", fig10_lm_dse.run,
          lambda r: f"L_m={r['l_m_selected']:.4f}(paper 0.0152)")
     _run("fig11_main", fig11_main.run,

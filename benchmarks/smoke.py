@@ -8,7 +8,10 @@
      ONE scan-body trace, and padded results match unpadded `simulate` —
      so regressions in the compiled padded path are caught without a TPU,
   3. the same pair of invariants for the gateway-placement axis
-     (`sweep_placement`: K placements, one trace, unpadded parity).
+     (`sweep_placement`: K placements, one trace, unpadded parity),
+  4. the workload/time axis: a mixed-length `sweep_workload` runs as one
+     scan-body trace with T-padded lanes matching unpadded `simulate`,
+     and a chunked `SimSession` bit-matches the one-shot records.
 
 `--smoke-only` skips the pytest stage (used by CI wrappers that already
 ran the suite, and for quick local iteration).
@@ -98,6 +101,55 @@ def placement_sweep_smoke() -> None:
           f"(2 placements, 1 trace, parity holds)")
 
 
+def traffic_stream_smoke() -> None:
+    """Workload/time axis: T-padded parity + streaming-vs-oneshot match."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import traffic
+    from repro.core.simulator import (Arch, SimConfig, SimSession,
+                                      engine_stats, reset_engine_stats,
+                                      simulate, sweep_workload)
+
+    t0 = time.time()
+    base = SimConfig().with_arch(Arch.RESIPI)
+    specs = [traffic.ParsecSpec(app="dedup", n_intervals=10),
+             traffic.UniformSpec(n_intervals=16),
+             traffic.BurstySpec(n_intervals=12)]
+
+    # mixed-length workload sweep: ONE scan-body trace, padded-lane parity
+    reset_engine_stats()
+    out = sweep_workload(specs, base, seed=0)
+    traces = engine_stats()["simulate_traces"]
+    assert traces == 1, f"expected ONE scan-body trace, got {traces}"
+    keys = jax.random.split(jax.random.PRNGKey(0), len(specs))
+    for i, (sp, ky) in enumerate(zip(specs, keys)):
+        ref = simulate(traffic.generate(sp, ky), base)["summary"]
+        np.testing.assert_allclose(
+            np.asarray(out["summary"]["mean_latency"][i]),
+            np.asarray(ref["mean_latency"]), rtol=1e-6,
+            err_msg=f"padded workload lane {sp.name} diverged")
+
+    # streaming session: chunked records bit-match the one-shot scan
+    tr = traffic.generate_trace("canneal", 24, jax.random.PRNGKey(1))
+    one = simulate(tr, base)
+    session = SimSession.init(base)
+    recs = [session.step_chunk(ch)["records"]
+            for ch in traffic.chunk_trace(tr, 8)]
+    cat = jax.tree.map(lambda *xs: jnp.concatenate(xs), *recs)
+    for k in ("latency", "power_mw", "g"):
+        assert np.array_equal(np.asarray(cat[k]),
+                              np.asarray(one["records"][k])), \
+            f"streamed records[{k}] diverged from one-shot simulate"
+    np.testing.assert_allclose(
+        np.asarray(session.summary()["mean_latency"]),
+        np.asarray(one["summary"]["mean_latency"]), rtol=1e-6)
+    print(f"traffic/streaming smoke OK in {time.time() - t0:.1f}s "
+          f"({len(specs)} mixed-length workloads, 1 trace, chunked "
+          f"records bit-match)")
+
+
 def main(argv) -> int:
     if "--smoke-only" not in argv:
         rc = subprocess.call(
@@ -107,6 +159,7 @@ def main(argv) -> int:
             return rc
     padded_sweep_smoke()
     placement_sweep_smoke()
+    traffic_stream_smoke()
     print("verify OK")
     return 0
 

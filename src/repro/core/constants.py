@@ -108,7 +108,11 @@ class NetworkConfig:
         if mesh_radix is not None:
             kw["mesh_x"] = int(mesh_radix)
             kw["mesh_y"] = int(mesh_radix)
-            kw["gateway_positions"] = None
+            if int(mesh_radix) != self.mesh_x \
+                    or int(mesh_radix) != self.mesh_y:
+                # An actual radix change: the placement's coordinates
+                # belong to the old mesh, so reset to the default scheme.
+                kw["gateway_positions"] = None
         return dataclasses.replace(self, **kw)
 
     def with_placement(self, positions) -> "NetworkConfig":

@@ -39,6 +39,19 @@ Engine model (compile-once, batch-everywhere):
   * `search_placement` — PlaceIT-style greedy/annealed placement search:
     numpy proposals, one `sweep_placement` scoring call per generation,
     one compiled executable for the entire search.
+  * `sweep_workload` — K `traffic.TrafficSpec` workloads (mixed lengths
+    allowed) generated from seeds and run as ONE compiled executable;
+    runtime/topology/placement grids of the same length zip in.
+  * **Ragged time axis** — every batched entry point accepts mixed-length
+    traces: `stack_traces(..., pad=True)` pads to the longest T with a
+    `t_mask`, and masked tail intervals provably contribute zero to every
+    latency/power/energy reduction (padded lane == unpadded `simulate`,
+    pinned per-arch in tests — the time-axis analogue of the PR 2
+    chiplet-masking invariant).
+  * `SimSession.init(sim)` / `session.step_chunk(chunk)` — streaming
+    simulation with a donated carry: controller/PROWAVES state persists
+    across chunks, so an unbounded online trace runs at fixed memory and
+    a chunked run bit-matches the one-shot `simulate` records.
   * `engine_stats()` — trace/compile counters used by tests and benches.
 
 `simulate_eager` preserves the pre-engine per-call retrace path for
@@ -56,7 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import photonics
+from repro.core import photonics, traffic
 from repro.core.constants import (NETWORK, PROWAVES_MAX_WAVELENGTHS,
                                   PROWAVES_MIN_WAVELENGTHS,
                                   RESIPI_WAVELENGTHS, NetworkConfig,
@@ -128,13 +141,20 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
                       ext_load: jax.Array, mem_load: jax.Array,
                       int_load: jax.Array, ext_frac: jax.Array,
                       sim: SimConfig, tables: dict,
-                      topo: Optional[dict] = None) -> dict:
+                      topo: Optional[dict] = None,
+                      t_valid: jax.Array | float = 1.0) -> dict:
     """Latency/load metrics for one interval given activity (g, lambda).
 
     With `topo` (the padded topology-sweep path) the chiplet axis is padded
     to the grid maximum: every reduction is mask-weighted so padded chiplet
     lanes contribute exactly zero load/latency, and the per-topology hop
     tables/mesh scalars come from `topo` instead of the static config.
+
+    `t_valid` is the interval's time-validity bit (ragged-T padding): a
+    masked interval carries zero injected load already, but zero-load
+    latency is NOT zero (the memory term alone yields a finite quotient),
+    so every returned metric is multiplied by `t_valid` — a padded tail
+    interval contributes exactly zero to every downstream reduction.
     """
     noc = sim.noc
     # Per-gateway load after the Fig. 8 balanced selection. ext traffic of a
@@ -194,11 +214,13 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     tot_mem = mem_load + 1e-9
     lat = (jnp.sum(inter_lat * w_ext) + jnp.sum(intra_lat * int_load)
            + mem_lat * tot_mem) / (tot_ext + tot_int + tot_mem)
-    return {"latency": lat, "gw_load": gw_load,
-            "inter_latency": inter_lat,
-            "mean_inter_latency": jnp.sum(inter_lat * w_ext) / tot_ext,
+    return {"latency": lat * t_valid, "gw_load": gw_load * t_valid,
+            "inter_latency": inter_lat * t_valid,
+            "mean_inter_latency": jnp.sum(inter_lat * w_ext) / tot_ext
+                                  * t_valid,
             "access_db": access_db,
-            "saturated": jnp.any(noc.saturated(gw_load, lam))}
+            "saturated": jnp.any(noc.saturated(gw_load, lam))
+                         & (t_valid > 0)}
 
 
 def _prowaves_update(lam: jax.Array, inter_latency: jax.Array,
@@ -245,7 +267,7 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
     n_chips = cfg.n_chiplets if topo is None else topo["n_chiplets"]
 
     def step(state: SimState, tr) -> Tuple[SimState, dict]:
-        ext, mem, intra, ext_frac = tr
+        ext, mem, intra, ext_frac, t_valid = tr
         if sim.arch in (Arch.RESIPI, Arch.RESIPI_ALL):
             g = state.ctl.g
             lam = jnp.float32(sim.wavelengths)
@@ -261,7 +283,7 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
             lam = jnp.float32(1.0)
 
         m = _interval_metrics(g, lam, ext, mem, intra, ext_frac, sim,
-                              tables, topo)
+                              tables, topo, t_valid=t_valid)
 
         # --- power ---------------------------------------------------------
         active = _activity_mask(g, sim)
@@ -322,16 +344,29 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
                                  prev_active=active)
 
         # energy proxy: mW * cycles-per-packet -> pJ-scale unit (model units)
+        # (latency is already t_valid-masked, so energy is too.)
         energy = pw["total_mw"] * m["latency"]
         lam_rec = lam * jnp.ones((cfg.n_chiplets,)) if topo is None \
             else lam * chip_mask
-        rec = {"latency": m["latency"], "power_mw": pw["total_mw"],
-               "laser_mw": pw["laser_mw"], "energy": energy,
-               "reconfig_nj": reconf_nj,
-               "g": g, "wavelengths": lam_rec,
+        # Time-mask every record: a padded tail interval must read as zero
+        # gateways / zero power / zero reconfig energy, never as an idle but
+        # powered network — the t-axis analogue of the chiplet masking.
+        rec = {"latency": m["latency"], "power_mw": pw["total_mw"] * t_valid,
+               "laser_mw": pw["laser_mw"] * t_valid, "energy": energy,
+               "reconfig_nj": reconf_nj * t_valid,
+               "g": g * t_valid.astype(g.dtype),
+               "wavelengths": lam_rec * t_valid,
                "gw_load": m["gw_load"],
                "mean_inter_latency": m["mean_inter_latency"],
                "saturated": m["saturated"]}
+        # Masked intervals FREEZE the carry (like the noc_step kernel's
+        # frozen cycles): the controller must not react to the fake idle
+        # epochs of a padded gap, so a mask-interior gap — a mid-stream
+        # padded chunk, a concat of padded traces — resumes exactly where
+        # the last valid interval left off.
+        new_state = jax.tree.map(
+            lambda new, old: jnp.where(t_valid > 0, new, old),
+            new_state, state)
         return new_state, rec
 
     return step
@@ -386,8 +421,26 @@ def clear_engine_caches() -> None:
     """
     for f in (_simulate_jit, _simulate_batch_jit, _sweep_jit,
               _sweep_batch_jit, _sweep_topology_jit,
-              _sweep_topology_batch_jit):
+              _sweep_topology_batch_jit, _sweep_workload_jit,
+              _sweep_workload_topo_jit, _session_chunk_jit):
         f.clear_cache()
+
+
+def _grid_len(name: str, values) -> int:
+    """Length of one swept grid, rejecting scalars with a clear message."""
+    if name == "gateway_positions":
+        if not isinstance(values, (list, tuple)):
+            raise ValueError(
+                f"swept field {name!r} must be a list of placements "
+                f"(each a tuple of (x, y) pairs or None), got "
+                f"{type(values).__name__}")
+        return len(values)
+    arr = jnp.asarray(values)
+    if arr.ndim != 1:
+        raise ValueError(
+            f"swept field {name!r} must be a 1-D grid of values, got "
+            f"shape {arr.shape} — wrap a single value as [{name}_value]")
+    return int(arr.shape[0])
 
 
 def _apply_overrides(sim: SimConfig, ov: Optional[Dict[str, jax.Array]]
@@ -420,9 +473,67 @@ def _apply_overrides(sim: SimConfig, ov: Optional[Dict[str, jax.Array]]
     return sim
 
 
+def _initial_state(sim: SimConfig) -> SimState:
+    """Fresh unpadded simulation state (shared by `simulate`/`SimSession`)."""
+    cfg = sim.cfg
+    return SimState(
+        ctl=ControllerState.init(cfg.n_chiplets, sim.ctl),
+        wavelengths=jnp.full((cfg.n_chiplets,), PROWAVES_MAX_WAVELENGTHS
+                             if sim.arch == Arch.PROWAVES else
+                             sim.wavelengths, jnp.int32),
+        prev_active=_activity_mask(
+            jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
+                     jnp.int32), sim))
+
+
+def _scan_trace(state: SimState, xs, sim: SimConfig, tables: Optional[dict],
+                topo: Optional[dict]) -> Tuple[SimState, dict]:
+    """Run the per-interval scan; the ONE place the trace counter bumps."""
+    _STATS["traces"] += 1
+    step = make_step(sim, tables, topo)
+    return jax.lax.scan(step, state, xs)
+
+
+def _record_sums(recs: dict, t_mask: jax.Array) -> dict:
+    """Mask-correct record totals: the sufficient statistics every summary
+    (one-shot, padded lane, or streaming accumulation) is computed from.
+    Records are already t_valid-masked in the scan body, so plain sums
+    ignore padded tail intervals by construction."""
+    return {
+        "latency": jnp.sum(recs["latency"]),
+        "power_mw": jnp.sum(recs["power_mw"]),
+        "energy": jnp.sum(recs["energy"]),
+        "gateways": jnp.sum(recs["g"]).astype(jnp.float32),
+        "wavelengths": jnp.sum(recs["wavelengths"]),
+        "saturated": jnp.sum(recs["saturated"].astype(jnp.float32)),
+        "reconfig_nj": jnp.sum(recs["reconfig_nj"]),
+        "valid_intervals": jnp.sum(t_mask),
+    }
+
+
+def _summary_from_sums(sums: dict, n_chiplets_for_lambda) -> dict:
+    """Summary means from `_record_sums` totals.
+
+    `n_chiplets_for_lambda` is the per-interval lambda-record width used to
+    normalize mean_wavelengths (the real chiplet count on padded paths).
+    """
+    t = jnp.maximum(sums["valid_intervals"], 1.0)
+    return {
+        "mean_latency": sums["latency"] / t,
+        "mean_power_mw": sums["power_mw"] / t,
+        "mean_energy": sums["energy"] / t,
+        "mean_gateways": sums["gateways"] / t,
+        "mean_wavelengths": sums["wavelengths"]
+                            / (t * n_chiplets_for_lambda),
+        "saturated_frac": sums["saturated"] / t,
+        "total_reconfig_nj": sums["reconfig_nj"],
+        "valid_intervals": sums["valid_intervals"],
+    }
+
+
 def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
-                   ext_frac: jax.Array, sim: SimConfig, tables: dict,
-                   ov: Optional[Dict[str, jax.Array]] = None,
+                   ext_frac: jax.Array, t_mask: jax.Array, sim: SimConfig,
+                   tables: dict, ov: Optional[Dict[str, jax.Array]] = None,
                    topo: Optional[dict] = None) -> dict:
     """Scan body shared by every entry point (single / batch / sweep).
 
@@ -431,19 +542,20 @@ def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
     per-topology actuals. Padded chiplets start with g=0 and lambda=0,
     inject zero traffic, and — because the controller thresholds can only
     raise g on positive load — stay dark for the whole scan.
+
+    `t_mask` [T] is the time-axis validity vector (all-ones for full-length
+    traces): masked intervals inject zero traffic, record zeros everywhere,
+    and are excluded from every summary mean, so a tail-padded trace is
+    bit-equivalent to its unpadded original.
     """
-    _STATS["traces"] += 1
     sim = _apply_overrides(sim, ov)
     cfg = sim.cfg
+    t_mask = t_mask.astype(jnp.float32)
+    ext = ext * t_mask[:, None]
+    mem = mem * t_mask
+    intra = intra * t_mask[:, None]
     if topo is None:
-        state0 = SimState(
-            ctl=ControllerState.init(cfg.n_chiplets, sim.ctl),
-            wavelengths=jnp.full((cfg.n_chiplets,), PROWAVES_MAX_WAVELENGTHS
-                                 if sim.arch == Arch.PROWAVES else
-                                 sim.wavelengths, jnp.int32),
-            prev_active=_activity_mask(
-                jnp.full((cfg.n_chiplets,), cfg.max_gateways_per_chiplet,
-                         jnp.int32), sim))
+        state0 = _initial_state(sim)
     else:
         valid = jnp.arange(cfg.n_chiplets) < topo["n_chiplets"]
         chip_mask = valid.astype(jnp.float32)
@@ -464,80 +576,108 @@ def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
                                   jnp.asarray(w0).astype(jnp.int32), 0),
             prev_active=jnp.zeros((cfg.total_gateways,), bool))
 
-    xs = (ext, mem, intra, jnp.broadcast_to(ext_frac, mem.shape))
-    step = make_step(sim, tables, topo)
-    _, recs = jax.lax.scan(step, state0, xs)
+    xs = (ext, mem, intra, jnp.broadcast_to(ext_frac, mem.shape), t_mask)
+    _, recs = _scan_trace(state0, xs, sim, tables, topo)
 
-    if topo is None:
-        mean_wavelengths = jnp.mean(recs["wavelengths"])
-    else:
-        # Masked mean: padded chiplet lanes record lambda=0 and must not
-        # dilute the per-chiplet average.
-        n_lam = recs["wavelengths"].shape[0] * jnp.maximum(
-            jnp.sum(topo["chip_mask"]), 1.0)
-        mean_wavelengths = jnp.sum(recs["wavelengths"]) / n_lam
-    summary = {
-        "mean_latency": jnp.mean(recs["latency"]),
-        "mean_power_mw": jnp.mean(recs["power_mw"]),
-        "mean_energy": jnp.mean(recs["energy"]),
-        "mean_gateways": jnp.mean(jnp.sum(recs["g"], axis=1)),
-        "mean_wavelengths": mean_wavelengths,
-        "saturated_frac": jnp.mean(recs["saturated"].astype(jnp.float32)),
-        "total_reconfig_nj": jnp.sum(recs["reconfig_nj"]),
-    }
+    # Masked chiplet lanes record lambda=0 and must not dilute the
+    # per-chiplet average on padded-topology paths.
+    n_lam = cfg.n_chiplets if topo is None \
+        else jnp.maximum(jnp.sum(topo["chip_mask"]), 1.0)
+    summary = _summary_from_sums(_record_sums(recs, t_mask), n_lam)
     return {"records": recs, "summary": summary}
 
 
 def _trace_arrays(trace: dict) -> Tuple[jax.Array, ...]:
-    return (trace["ext_load"], trace["mem_load"], trace["int_load"],
-            jnp.asarray(trace["ext_frac"]))
+    traffic.validate_trace(trace)
+    mem = trace["mem_load"]
+    t_mask = trace.get("t_mask")
+    t_mask = jnp.ones(jnp.shape(mem), jnp.float32) if t_mask is None \
+        else jnp.asarray(t_mask, jnp.float32)
+    return (trace["ext_load"], mem, trace["int_load"],
+            jnp.asarray(trace["ext_frac"]), t_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _simulate_jit(ext, mem, intra, ext_frac, tables, *, sim: SimConfig):
-    return _simulate_impl(ext, mem, intra, ext_frac, sim, tables)
+def _simulate_jit(ext, mem, intra, ext_frac, t_mask, tables, *,
+                  sim: SimConfig):
+    return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _simulate_batch_jit(ext, mem, intra, ext_frac, tables, *,
+def _simulate_batch_jit(ext, mem, intra, ext_frac, t_mask, tables, *,
                         sim: SimConfig):
     return jax.vmap(
-        lambda e, m, i, f: _simulate_impl(e, m, i, f, sim, tables)
-    )(ext, mem, intra, ext_frac)
+        lambda e, m, i, f, t: _simulate_impl(e, m, i, f, t, sim, tables)
+    )(ext, mem, intra, ext_frac, t_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_jit(ext, mem, intra, ext_frac, tables, ov, *, sim: SimConfig):
+def _sweep_jit(ext, mem, intra, ext_frac, t_mask, tables, ov, *,
+               sim: SimConfig):
     return jax.vmap(
-        lambda o: _simulate_impl(ext, mem, intra, ext_frac, sim, tables, o)
+        lambda o: _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim,
+                                 tables, o)
     )(ov)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_batch_jit(ext, mem, intra, ext_frac, tables, ov, *,
+def _sweep_batch_jit(ext, mem, intra, ext_frac, t_mask, tables, ov, *,
                      sim: SimConfig):
-    def one_trace(e, m, i, f):
+    def one_trace(e, m, i, f, t):
         return jax.vmap(
-            lambda o: _simulate_impl(e, m, i, f, sim, tables, o))(ov)
-    return jax.vmap(one_trace)(ext, mem, intra, ext_frac)
+            lambda o: _simulate_impl(e, m, i, f, t, sim, tables, o))(ov)
+    return jax.vmap(one_trace)(ext, mem, intra, ext_frac, t_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_topology_jit(ext, mem, intra, ext_frac, topo, ov, *,
+def _sweep_topology_jit(ext, mem, intra, ext_frac, t_mask, topo, ov, *,
                         sim: SimConfig):
     return jax.vmap(
-        lambda tp, o: _simulate_impl(ext, mem, intra, ext_frac, sim, None,
-                                     o, topo=tp))(topo, ov)
+        lambda tp, o: _simulate_impl(ext, mem, intra, ext_frac, t_mask,
+                                     sim, None, o, topo=tp))(topo, ov)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_topology_batch_jit(ext, mem, intra, ext_frac, topo, ov, *,
-                              sim: SimConfig):
-    def one_trace(e, m, i, f):
+def _sweep_topology_batch_jit(ext, mem, intra, ext_frac, t_mask, topo, ov,
+                              *, sim: SimConfig):
+    def one_trace(e, m, i, f, t):
         return jax.vmap(
-            lambda tp, o: _simulate_impl(e, m, i, f, sim, None,
+            lambda tp, o: _simulate_impl(e, m, i, f, t, sim, None,
                                          o, topo=tp))(topo, ov)
-    return jax.vmap(one_trace)(ext, mem, intra, ext_frac)
+    return jax.vmap(one_trace)(ext, mem, intra, ext_frac, t_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _sweep_workload_jit(ext, mem, intra, ext_frac, t_mask, tables, ov, *,
+                        sim: SimConfig):
+    """K workload lanes zipped with K runtime-override lanes (one scan)."""
+    return jax.vmap(
+        lambda e, m, i, f, t, o: _simulate_impl(e, m, i, f, t, sim,
+                                                tables, o)
+    )(ext, mem, intra, ext_frac, t_mask, ov)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _sweep_workload_topo_jit(ext, mem, intra, ext_frac, t_mask, topo, ov,
+                             *, sim: SimConfig):
+    """K workload lanes zipped with K padded-topology/placement lanes."""
+    return jax.vmap(
+        lambda e, m, i, f, t, tp, o: _simulate_impl(e, m, i, f, t, sim,
+                                                    None, o, topo=tp)
+    )(ext, mem, intra, ext_frac, t_mask, topo, ov)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",), donate_argnums=(0,))
+def _session_chunk_jit(state, ext, mem, intra, ext_frac, t_mask, tables, *,
+                       sim: SimConfig):
+    """One streaming chunk: scan from the carried state, return the new
+    carry (donated — the old state's buffers are reused in place), the
+    chunk's records, and mask-correct running totals."""
+    t_mask = t_mask.astype(jnp.float32)
+    xs = (ext * t_mask[:, None], mem * t_mask, intra * t_mask[:, None],
+          jnp.broadcast_to(ext_frac, mem.shape), t_mask)
+    new_state, recs = _scan_trace(state, xs, sim, tables, None)
+    return new_state, recs, _record_sums(recs, t_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -551,8 +691,8 @@ def simulate(trace: dict, sim: SimConfig) -> dict:
     equal config and trace shape re-traces nothing (engine_stats() shows the
     counter), and the selection tables are memoized per NetworkConfig.
     """
-    ext, mem, intra, ext_frac = _trace_arrays(trace)
-    return _simulate_jit(ext, mem, intra, ext_frac,
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    return _simulate_jit(ext, mem, intra, ext_frac, t_mask,
                          selection_tables_jax(sim.cfg), sim=sim)
 
 
@@ -562,8 +702,8 @@ def simulate_eager(trace: dict, sim: SimConfig) -> dict:
     Kept as the benchmark baseline (bench_engine.py) — do not use in sweeps.
     """
     tables = rebuild_selection_tables(sim.cfg)
-    ext, mem, intra, ext_frac = _trace_arrays(trace)
-    return _simulate_impl(ext, mem, intra, ext_frac, sim, tables)
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables)
 
 
 def rebuild_selection_tables(cfg: NetworkConfig) -> dict:
@@ -576,10 +716,41 @@ def rebuild_selection_tables(cfg: NetworkConfig) -> dict:
 SelectionTables_rebuild = rebuild_selection_tables
 
 
-def stack_traces(traces: List[dict]) -> dict:
-    """Stack N same-shape traces along a new leading batch axis."""
+def stack_traces(traces: List[dict], *, pad: bool = False) -> dict:
+    """Stack N traces along a new leading batch axis.
+
+    Same-length traces stack directly (the pre-PR-4 behavior). Mixed-length
+    (ragged-T) traces need `pad=True`: shorter traces zero-pad to the
+    longest T and the stacked dict carries a `t_mask` [N, T] validity mask
+    — masked tail intervals contribute exactly zero to every engine
+    reduction, so padded lane k simulates identically to the unpadded
+    trace k. Without `pad=True`, ragged inputs raise a ValueError naming
+    the lengths (instead of the old cryptic jnp stacking error).
+    """
+    if not traces:
+        raise ValueError("stack_traces() needs at least one trace")
+    for i, tr in enumerate(traces):
+        traffic.validate_trace(tr, who=f"traces[{i}]")
+    chips = sorted({int(jnp.shape(tr["ext_load"])[-1]) for tr in traces})
+    if len(chips) != 1:
+        raise ValueError(
+            f"traces cover different chiplet counts {chips}; narrow them "
+            f"to one width first (traffic.slice_trace)")
+    lengths = [int(jnp.shape(tr["ext_load"])[0]) for tr in traces]
+    ragged = len(set(lengths)) > 1
+    if ragged and not pad:
+        raise ValueError(
+            f"traces have mixed lengths T={lengths}; pass pad=True to "
+            f"zero-pad them to T={max(lengths)} under a t_mask (the "
+            f"ragged/padded batch path — simulate_batch/sweep_batch/"
+            f"sweep_workload do this automatically for list inputs)")
+    masked = pad or ragged or any("t_mask" in tr for tr in traces)
+    if masked:
+        traces = [traffic.pad_trace(tr, max(lengths)) for tr in traces]
+    keys = ("ext_load", "mem_load", "int_load", "ext_frac") \
+        + (("t_mask",) if masked else ())
     out = {k: jnp.stack([jnp.asarray(tr[k]) for tr in traces])
-           for k in ("ext_load", "mem_load", "int_load", "ext_frac")}
+           for k in keys}
     out["app"] = [tr.get("app", "?") for tr in traces]
     return out
 
@@ -587,14 +758,16 @@ def stack_traces(traces: List[dict]) -> dict:
 def simulate_batch(traces, sim: SimConfig) -> dict:
     """Batched simulate: one vmapped, jit-cached scan over N traces.
 
-    `traces` is either a list of trace dicts (stacked here) or an
-    already-stacked dict with a leading batch axis (from `stack_traces`).
-    Records and summary values gain that leading [N] axis.
+    `traces` is either a list of trace dicts (stacked here; mixed-length
+    traces pad to the longest T under a `t_mask`) or an already-stacked
+    dict with a leading batch axis (from `stack_traces`). Records and
+    summary values gain that leading [N] axis; for ragged batches the
+    records of shorter lanes are zero beyond their own T.
     """
-    batch = stack_traces(traces) if isinstance(traces, (list, tuple)) \
-        else traces
-    ext, mem, intra, ext_frac = _trace_arrays(batch)
-    return _simulate_batch_jit(ext, mem, intra, ext_frac,
+    batch = stack_traces(traces, pad=True) \
+        if isinstance(traces, (list, tuple)) else traces
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
+    return _simulate_batch_jit(ext, mem, intra, ext_frac, t_mask,
                                selection_tables_jax(sim.cfg), sim=sim)
 
 
@@ -611,8 +784,8 @@ def sweep(trace: dict, sim: SimConfig, **fields) -> dict:
     the space is compile-free.
     """
     ov = _check_sweep_fields(fields)
-    ext, mem, intra, ext_frac = _trace_arrays(trace)
-    return _sweep_jit(ext, mem, intra, ext_frac,
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    return _sweep_jit(ext, mem, intra, ext_frac, t_mask,
                       selection_tables_jax(sim.cfg), ov, sim=sim)
 
 
@@ -635,11 +808,11 @@ def sweep_batch(traces, sim: SimConfig, **fields) -> dict:
     axes (trace-major). fig10's app x gateway-count exploration is a single
     call of this with `max_gateways`/`min_gateways` pinned per grid point.
     """
-    batch = stack_traces(traces) if isinstance(traces, (list, tuple)) \
-        else traces
+    batch = stack_traces(traces, pad=True) \
+        if isinstance(traces, (list, tuple)) else traces
     ov = _check_sweep_fields(fields)
-    ext, mem, intra, ext_frac = _trace_arrays(batch)
-    return _sweep_batch_jit(ext, mem, intra, ext_frac,
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
+    return _sweep_batch_jit(ext, mem, intra, ext_frac, t_mask,
                             selection_tables_jax(sim.cfg), ov, sim=sim)
 
 
@@ -682,6 +855,7 @@ def _prepare_topology_sweep(sim: SimConfig, grids: dict):
     if not grids:
         raise ValueError("sweep_topology() needs at least one field=values "
                          f"pair from {TOPOLOGY_SWEEPABLE_FIELDS}")
+    lengths = {k: _grid_len(k, v) for k, v in grids.items()}
     topo_grids = {k: list(v) for k, v in grids.items()
                   if k in TOPOLOGY_SWEEPABLE_FIELDS}
     other = {k: v for k, v in grids.items()
@@ -694,8 +868,6 @@ def _prepare_topology_sweep(sim: SimConfig, grids: dict):
     if not topo_grids:
         raise ValueError("no topology fields swept — use sweep() for "
                          "runtime-only grids")
-    lengths = {k: (len(v) if k == "gateway_positions"
-                   else len(jnp.asarray(v))) for k, v in grids.items()}
     if len(set(lengths.values())) != 1:
         raise ValueError(f"swept fields must share one length, "
                          f"got {lengths}")
@@ -707,8 +879,18 @@ def _prepare_topology_sweep(sim: SimConfig, grids: dict):
     gs = [int(x) for x in topo_grids.get(
         "gateways_per_chiplet", [cfg.max_gateways_per_chiplet] * k)]
     rs = [int(x) for x in topo_grids.get("mesh_radix", [cfg.mesh_x] * k)]
-    ps = [normalize_placement(p) for p in topo_grids.get(
-        "gateway_positions", [cfg.gateway_positions] * k)]
+    if "gateway_positions" in topo_grids:
+        ps = [normalize_placement(p)
+              for p in topo_grids["gateway_positions"]]
+    else:
+        # with_topology's contract: a mesh_radix change invalidates the
+        # base config's explicit placement (its coordinates belong to the
+        # old mesh), so such grid points fall back to the default edge
+        # scheme — matching topology_point_config and keeping the
+        # padded==unpadded parity invariant.
+        ps = [normalize_placement(cfg.gateway_positions)
+              if r == cfg.mesh_x and r == cfg.mesh_y else None
+              for r in rs]
     if min(cs) < 1 or min(gs) < 1 or min(rs) < 2:
         raise ValueError(f"invalid topology grid: n_chiplets {cs}, "
                          f"gateways {gs}, radix {rs}")
@@ -757,13 +939,13 @@ def _prepare_topology_sweep(sim: SimConfig, grids: dict):
 
 
 def _topo_trace_arrays(trace_or_batch, c_max: int):
-    ext, mem, intra, ext_frac = _trace_arrays(trace_or_batch)
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace_or_batch)
     if ext.shape[-1] < c_max:
         raise ValueError(
             f"trace covers {ext.shape[-1]} chiplets but the grid needs "
             f"{c_max}; generate it with cfg.with_topology(n_chiplets="
             f"{c_max}) (see traffic.generate_trace)")
-    return ext[..., :c_max], mem, intra[..., :c_max], ext_frac
+    return ext[..., :c_max], mem, intra[..., :c_max], ext_frac, t_mask
 
 
 def sweep_topology(trace: dict, sim: SimConfig, **grids) -> dict:
@@ -794,8 +976,8 @@ def sweep_topology(trace: dict, sim: SimConfig, **grids) -> dict:
     gateway count (see `topology_point_config`).
     """
     sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
-    ext, mem, intra, ext_frac = _topo_trace_arrays(trace, c_max)
-    return _sweep_topology_jit(ext, mem, intra, ext_frac, topo, ov,
+    ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(trace, c_max)
+    return _sweep_topology_jit(ext, mem, intra, ext_frac, t_mask, topo, ov,
                                sim=sim_p)
 
 
@@ -805,12 +987,12 @@ def sweep_topology_batch(traces, sim: SimConfig, **grids) -> dict:
     The topology analogue of `sweep_batch`: `traces` is a list of same-shape
     trace dicts or an already-stacked dict from `stack_traces`.
     """
-    batch = stack_traces(traces) if isinstance(traces, (list, tuple)) \
-        else traces
+    batch = stack_traces(traces, pad=True) \
+        if isinstance(traces, (list, tuple)) else traces
     sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
-    ext, mem, intra, ext_frac = _topo_trace_arrays(batch, c_max)
-    return _sweep_topology_batch_jit(ext, mem, intra, ext_frac, topo, ov,
-                                     sim=sim_p)
+    ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(batch, c_max)
+    return _sweep_topology_batch_jit(ext, mem, intra, ext_frac, t_mask,
+                                     topo, ov, sim=sim_p)
 
 
 def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
@@ -839,9 +1021,9 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
         import numpy as _np
 
         sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
-        batch = stack_traces(traces) \
+        batch = stack_traces(traces, pad=True) \
             if isinstance(traces, (list, tuple)) else traces
-        ext, mem, intra, ext_frac = _topo_trace_arrays(batch, c_max)
+        ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(batch, c_max)
 
         k = int(topo["n_chiplets"].shape[0])
         pad = (-k) % len(devices)
@@ -856,7 +1038,7 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
         topo = jax.tree.map(lambda a: jax.device_put(a, sharding), topo)
         ov = jax.tree.map(lambda a: jax.device_put(a, sharding), ov)
         fn = _sweep_topology_batch_jit if batched else _sweep_topology_jit
-        out = fn(ext, mem, intra, ext_frac, topo, ov, sim=sim_p)
+        out = fn(ext, mem, intra, ext_frac, t_mask, topo, ov, sim=sim_p)
         if pad:
             out = jax.tree.map(
                 lambda a: a[:, :k] if batched else a[:k], out)
@@ -866,6 +1048,157 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
         warnings.warn(f"sharded sweep failed ({e!r}); falling back to "
                       f"single-device path")
         return single_call(traces, sim, **grids)
+
+
+# ---------------------------------------------------------------------------
+# Workload-polymorphic sweeps + streaming sessions
+# ---------------------------------------------------------------------------
+
+def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
+                   **grids) -> dict:
+    """Workload DSE: K traffic specs, ONE compiled executable.
+
+    ::
+
+        sweep_workload([traffic.ParsecSpec("dedup", n_intervals=64),
+                        traffic.UniformSpec(n_intervals=32),
+                        traffic.BurstySpec(n_intervals=48)], sim)
+
+    Each spec (`traffic.TrafficSpec`, or a PARSEC app name) is generated
+    under jit from `seed` (or an explicit [K]-row `keys` array) and the K
+    traces — mixed lengths welcome — are padded to the longest T under a
+    `t_mask` and run as a single vmapped scan. Results carry a leading [K]
+    axis; lane k matches unpadded ``simulate(traffic.generate(specs[k],
+    ...), sim)`` (tested per-arch at 1e-6).
+
+    Workload zips with the other sweep axes: any TOPOLOGY_SWEEPABLE_FIELDS
+    (n_chiplets / mesh_radix / gateway_positions / ...) or SWEEPABLE_FIELDS
+    grids of length K pair element-wise with the specs, so "workload i on
+    topology i with runtime knobs i" is still one compiled call.
+    """
+    specs = [traffic.as_spec(s) for s in specs]
+    if not specs:
+        raise ValueError("sweep_workload() needs at least one traffic spec")
+    k = len(specs)
+    if keys is None:
+        keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    elif len(keys) != k:
+        raise ValueError(f"{len(keys)} keys for {k} specs")
+    for name, v in grids.items():
+        n = _grid_len(name, v)
+        if n != k:
+            raise ValueError(
+                f"grid {name!r} has length {n} but {k} workload specs "
+                f"were given — workload zips element-wise with every grid")
+
+    topo_grids = {g: v for g, v in grids.items()
+                  if g in TOPOLOGY_SWEEPABLE_FIELDS}
+    if topo_grids:
+        c_gen = max(int(c) for c in topo_grids.get(
+            "n_chiplets", [sim.cfg.n_chiplets]))
+        gen_cfg = sim.cfg.with_topology(n_chiplets=c_gen)
+        traces = [traffic.generate(s, ky, gen_cfg)
+                  for s, ky in zip(specs, keys)]
+        batch = stack_traces(traces, pad=True)
+        sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
+        ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(batch, c_max)
+        return _sweep_workload_topo_jit(ext, mem, intra, ext_frac, t_mask,
+                                        topo, ov, sim=sim_p)
+
+    unknown = set(grids) - set(SWEEPABLE_FIELDS)
+    if unknown:
+        raise ValueError(
+            f"non-sweepable fields: {sorted(unknown)} (topology: "
+            f"{TOPOLOGY_SWEEPABLE_FIELDS}, runtime: {SWEEPABLE_FIELDS})")
+    ov = {g: jnp.asarray(v) for g, v in grids.items()}
+    traces = [traffic.generate(s, ky, sim.cfg) for s, ky in zip(specs, keys)]
+    batch = stack_traces(traces, pad=True)
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
+    return _sweep_workload_jit(ext, mem, intra, ext_frac, t_mask,
+                               selection_tables_jax(sim.cfg), ov, sim=sim)
+
+
+class SimSession:
+    """Streaming simulation session: unbounded traces at fixed memory.
+
+    ::
+
+        session = SimSession.init(sim)
+        for chunk in online_trace_chunks:        # each a trace dict
+            out = session.step_chunk(chunk)      # records + chunk summary
+        total = session.summary()                # whole-stream summary
+
+    The controller / PROWAVES / activity state persists across chunks (the
+    carry is donated to the chunked executable, so steady-state streaming
+    reuses its buffers in place), which makes a chunked run equivalent to
+    one-shot `simulate` on the concatenated trace: per-interval records
+    bit-match, and the running summary matches up to float re-association
+    of the partial sums. Chunks of equal length share one compiled
+    executable; `engine_stats()` shows one scan-body trace per chunk
+    shape.
+    """
+
+    def __init__(self, sim: SimConfig, state: SimState, tables: dict):
+        self.sim = sim
+        self._state = state
+        self._tables = tables
+        self._sums = None
+
+    @classmethod
+    def init(cls, sim: SimConfig) -> "SimSession":
+        """Open a session with a fresh simulation state for `sim`."""
+        return cls(sim, _initial_state(sim), selection_tables_jax(sim.cfg))
+
+    @property
+    def intervals_seen(self) -> int:
+        """Valid (unmasked) intervals consumed so far."""
+        return 0 if self._sums is None \
+            else int(self._sums["valid_intervals"])
+
+    def step_chunk(self, chunk: dict) -> dict:
+        """Consume one trace chunk; returns its records + chunk summary.
+
+        `chunk` is an ordinary (unbatched) trace dict — `traffic.pad_trace`
+        output with a `t_mask` is fine, e.g. a partial chunk padded to the
+        session's steady chunk length so it reuses the same executable.
+        Masked intervals freeze the carry (the controller never reacts to
+        padded idle epochs), so padding mid-stream is exact too.
+        """
+        ext, mem, intra, ext_frac, t_mask = _trace_arrays(chunk)
+        if ext.ndim != 2:
+            raise ValueError(
+                f"step_chunk takes one unbatched trace chunk "
+                f"(ext_load [T, C]), got ext_load {ext.shape}")
+        self._state, recs, sums = _session_chunk_jit(
+            self._state, ext, mem, intra, ext_frac, t_mask, self._tables,
+            sim=self.sim)
+        self._sums = sums if self._sums is None else jax.tree.map(
+            lambda a, b: a + b, self._sums, sums)
+        return {"records": recs,
+                "summary": _summary_from_sums(sums, self.sim.cfg.n_chiplets)}
+
+    def summary(self) -> dict:
+        """Running summary over every interval streamed so far."""
+        if self._sums is None:
+            raise ValueError("summary() before any step_chunk() — the "
+                             "session has consumed no intervals yet")
+        return _summary_from_sums(self._sums, self.sim.cfg.n_chiplets)
+
+
+def simulate_stream(chunks, sim: SimConfig) -> dict:
+    """Drive a fresh `SimSession` over an iterable of trace chunks.
+
+    Convenience wrapper for offline chunked runs: returns the final
+    whole-stream summary plus the session (for further streaming).
+    """
+    session = SimSession.init(sim)
+    n = 0
+    for chunk in chunks:
+        session.step_chunk(chunk)
+        n += 1
+    if n == 0:
+        raise ValueError("simulate_stream() got an empty chunk iterable")
+    return {"summary": session.summary(), "chunks": n, "session": session}
 
 
 # ---------------------------------------------------------------------------

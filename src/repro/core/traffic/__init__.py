@@ -1,0 +1,44 @@
+"""Workload-polymorphic traffic subsystem.
+
+Traffic is a first-class DSE axis, like topology (PR 2) and gateway
+placement (PR 3):
+
+  * `specs` — frozen/hashable `TrafficSpec` hierarchy: calibrated
+    PARSEC-like application profiles (`ParsecSpec` / `PARSEC`) plus the
+    canonical synthetic NoC workloads (`UniformSpec`, `HotspotSpec`,
+    `PermutationSpec` — transpose / bit-complement / tornado / neighbor —
+    and `BurstySpec`, Markov-modulated on/off).
+  * `generators` — `generate(spec, key, cfg)`: spec + PRNG key -> trace
+    dict, under jit (spec/cfg static, key traced), so workload sweeps are
+    seeded, reproducible and compile-free after the first key.
+  * `transform` — `validate_trace` / `slice_trace` / `concat_traces` /
+    `pad_trace` / `trace_length`: the ragged-T padding contract (`t_mask`)
+    that lets mixed-length traces share one compiled executable
+    (`simulator.sweep_workload`, `stack_traces(..., pad=True)`).
+
+The flat pre-package API (`traffic.generate_trace`, `traffic.PARSEC`,
+`traffic.slice_trace`, ...) is re-exported unchanged.
+"""
+from repro.core.traffic.specs import (ALL_SYNTHETIC_SPECS, APP_NAMES,
+                                      AppProfile, BurstySpec, HotspotSpec,
+                                      PARSEC, PERMUTATION_PATTERNS,
+                                      ParsecSpec, PermutationSpec,
+                                      TrafficSpec, UniformSpec, as_spec,
+                                      expected_mean_ext_load,
+                                      permutation_destinations)
+from repro.core.traffic.generators import (all_app_traces, generate,
+                                           generate_trace)
+from repro.core.traffic.transform import (TRACE_KEYS, chunk_trace,
+                                          concat_traces, pad_trace,
+                                          slice_trace, trace_length,
+                                          validate_trace)
+
+__all__ = [
+    "ALL_SYNTHETIC_SPECS", "APP_NAMES", "AppProfile", "BurstySpec",
+    "HotspotSpec", "PARSEC", "PERMUTATION_PATTERNS", "ParsecSpec",
+    "PermutationSpec", "TRACE_KEYS", "TrafficSpec", "UniformSpec",
+    "all_app_traces", "as_spec", "chunk_trace", "concat_traces",
+    "expected_mean_ext_load", "generate", "generate_trace", "pad_trace",
+    "permutation_destinations", "slice_trace", "trace_length",
+    "validate_trace",
+]

@@ -1,0 +1,186 @@
+"""Trace transforms: validation, slicing, concatenation, time padding.
+
+Every transform validates its inputs up front (`validate_trace`), so a
+malformed trace fails with a clear message here instead of deep inside a jit
+trace. The time-padding helpers (`pad_trace` / `trace_length`) implement the
+ragged-T contract: a padded trace carries a `t_mask` [T] validity vector and
+the engine guarantees masked intervals contribute exactly zero to every
+latency/power/energy reduction (see simulator._simulate_impl).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# The array keys every trace must carry (plus the "app" label and, for
+# time-padded traces, "t_mask").
+TRACE_KEYS = ("ext_load", "mem_load", "int_load", "ext_frac")
+_META_KEYS = ("app", "t_mask")
+
+
+def validate_trace(trace, who: str = "trace") -> dict:
+    """Check that `trace` is a well-formed trace dict; return it.
+
+    Raises TypeError for non-dict inputs and ValueError naming any missing
+    keys — the clear-error front door for every transform and engine entry
+    point (a malformed trace used to fail deep inside the jit trace).
+    """
+    if not isinstance(trace, dict):
+        raise TypeError(
+            f"{who} must be a trace dict with keys {TRACE_KEYS} "
+            f"(see repro.core.traffic.generate), got "
+            f"{type(trace).__name__}: {trace!r:.80}")
+    missing = [k for k in TRACE_KEYS if k not in trace]
+    if missing:
+        raise ValueError(
+            f"{who} is missing {missing}; a trace dict needs {TRACE_KEYS} "
+            f"(generate one with repro.core.traffic.generate / "
+            f"generate_trace)")
+    return trace
+
+
+def trace_length(trace: dict) -> int:
+    """Valid interval count: sum of `t_mask` if present, else the T axis."""
+    validate_trace(trace)
+    if "t_mask" in trace:
+        return int(np.sum(np.asarray(trace["t_mask"]) > 0))
+    return int(jnp.shape(trace["ext_load"])[0])
+
+
+def slice_trace(trace: dict, n_chiplets: int) -> dict:
+    """Restrict a trace to its first `n_chiplets` chiplet columns.
+
+    The per-topology view used by topology sweeps: a trace generated at the
+    grid's maximum chiplet count is narrowed per grid point. `mem_load` and
+    `ext_frac` are chiplet-count-free and shared across grid points.
+    """
+    validate_trace(trace)
+    c = trace["ext_load"].shape[-1]
+    if n_chiplets > c:
+        raise ValueError(f"trace has {c} chiplets, needs >= {n_chiplets}")
+    return dict(trace,
+                ext_load=trace["ext_load"][..., :n_chiplets],
+                int_load=trace["int_load"][..., :n_chiplets])
+
+
+def pad_trace(trace: dict, n_intervals: int) -> dict:
+    """Zero-pad a trace's time axis to `n_intervals`, adding a `t_mask`.
+
+    Padded tail intervals inject zero traffic and are masked out of every
+    engine reduction, so a padded trace simulates identically to the
+    original (the ragged-batching invariant, pinned per-arch in tests).
+    Already-padded traces extend their existing mask.
+    """
+    validate_trace(trace)
+    t = int(jnp.shape(trace["ext_load"])[0])
+    if n_intervals < t:
+        raise ValueError(f"cannot pad a {t}-interval trace down to "
+                         f"{n_intervals} (use slice on the time axis "
+                         f"explicitly instead)")
+    mask = jnp.asarray(trace.get("t_mask", jnp.ones((t,), jnp.float32)),
+                       jnp.float32)
+    pad = n_intervals - t
+    if pad == 0:
+        return dict(trace, t_mask=mask)
+
+    def _pad_time(a):
+        a = jnp.asarray(a)
+        return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+    out = dict(trace)
+    for k in ("ext_load", "mem_load", "int_load"):
+        out[k] = _pad_time(trace[k])
+    out["t_mask"] = _pad_time(mask)
+    # Carry any extra per-interval arrays along (leading axis == T).
+    for k, v in trace.items():
+        if k in TRACE_KEYS or k in _META_KEYS:
+            continue
+        if hasattr(v, "ndim") and getattr(v, "ndim", 0) >= 1 \
+                and jnp.shape(v)[0] == t:
+            out[k] = _pad_time(v)
+    return out
+
+
+def chunk_trace(trace: dict, size: int):
+    """Yield consecutive `size`-interval chunks of a trace (last may be
+    shorter — pad it with `pad_trace(chunk, size)` to reuse a streaming
+    session's steady executable).
+
+    Every per-interval key — the core loads, `t_mask`, and any extra array
+    whose leading axis is T — is sliced; everything else is carried whole.
+    The streaming companion to `SimSession.step_chunk`.
+    """
+    validate_trace(trace)
+    if size < 1:
+        raise ValueError(f"chunk size must be >= 1, got {size}")
+    t = int(jnp.shape(trace["ext_load"])[0])
+    per_t = [k for k, v in trace.items()
+             if k in ("ext_load", "mem_load", "int_load", "t_mask")
+             or (hasattr(v, "ndim") and getattr(v, "ndim", 0) >= 1
+                 and k != "app" and jnp.shape(v)[0] == t)]
+    for s in range(0, t, size):
+        yield {k: (v[s:s + size] if k in per_t else v)
+               for k, v in trace.items()}
+
+
+def concat_traces(traces: list) -> dict:
+    """Stitch traces back-to-back (Fig. 12 application-switch runs).
+
+    `ext_frac` is the load-weighted mean of the segments' fractions (each
+    segment weighted by its total ext load — an unweighted mean would let a
+    near-idle segment drag the composite fraction). Keys outside the core
+    trace schema are carried through: per-interval arrays (leading axis ==
+    that segment's T) concatenate, segment-constant values must agree, and
+    anything else raises instead of being silently dropped.
+    """
+    if not traces:
+        raise ValueError("concat_traces() needs at least one trace")
+    for i, tr in enumerate(traces):
+        validate_trace(tr, who=f"traces[{i}]")
+    lens = [int(jnp.shape(tr["ext_load"])[0]) for tr in traces]
+    out = {k: jnp.concatenate([jnp.asarray(tr[k]) for tr in traces], axis=0)
+           for k in ("ext_load", "mem_load", "int_load")}
+
+    # Load-weighted ext_frac: sum_i f_i * L_i / sum_i L_i.
+    weights = jnp.stack([jnp.sum(jnp.asarray(tr["ext_load"], jnp.float32))
+                         for tr in traces])
+    fracs = jnp.stack([jnp.asarray(tr["ext_frac"], jnp.float32)
+                       for tr in traces])
+    total = jnp.sum(weights)
+    out["ext_frac"] = jnp.where(
+        total > 0.0, jnp.sum(fracs * weights) / jnp.maximum(total, 1e-12),
+        jnp.mean(fracs))
+    out["app"] = "+".join(str(tr.get("app", "?")) for tr in traces)
+
+    if any("t_mask" in tr for tr in traces):
+        out["t_mask"] = jnp.concatenate(
+            [jnp.asarray(tr.get("t_mask", jnp.ones((n,), jnp.float32)),
+                         jnp.float32) for tr, n in zip(traces, lens)])
+
+    known = set(TRACE_KEYS) | set(_META_KEYS)
+    extras = sorted(set().union(*(set(tr) for tr in traces)) - known)
+    for k in extras:
+        holders = [k in tr for tr in traces]
+        if not all(holders):
+            raise ValueError(
+                f"key {k!r} present in only {sum(holders)}/{len(traces)} "
+                f"segments — concat_traces cannot stitch a partial key "
+                f"(drop it or add it to every segment)")
+        vals = [tr[k] for tr in traces]
+        if all(hasattr(v, "ndim") and getattr(v, "ndim", 0) >= 1
+               and jnp.shape(v)[0] == n for v, n in zip(vals, lens)):
+            out[k] = jnp.concatenate([jnp.asarray(v) for v in vals], axis=0)
+        elif all(_values_equal(v, vals[0]) for v in vals[1:]):
+            out[k] = vals[0]
+        else:
+            raise ValueError(
+                f"key {k!r} differs across segments and is not a "
+                f"per-interval array — concat_traces cannot merge it "
+                f"(values: {[str(v)[:40] for v in vals]})")
+    return out
+
+
+def _values_equal(a, b) -> bool:
+    if hasattr(a, "shape") or hasattr(b, "shape"):
+        return np.array_equal(np.asarray(a), np.asarray(b))
+    return a == b

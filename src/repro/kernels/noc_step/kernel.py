@@ -29,8 +29,8 @@ from repro.kernels import resolve_interpret
 LANES = 128   # TPU lane width: the router axis pads to this for compilation
 
 
-def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref, mask_ref,
-                resid_ref, occ_final_ref, drained_ref,
+def _noc_kernel(arrivals_ref, tmask_ref, next_mat_ref, drain_ref, buf_ref,
+                mask_ref, resid_ref, occ_final_ref, drained_ref,
                 occ_scratch, resid_scratch, drained_scratch,
                 *, t_chunk: int, link_rate: float, n_steps: int):
     step = pl.program_id(0)
@@ -47,11 +47,15 @@ def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref, mask_ref,
     mask = mask_ref[...].astype(jnp.float32)          # [1, R] valid lanes
 
     def cycle(t, carry):
-        occ, resid, drained = carry
+        occ0, resid, drained = carry
         arr = arrivals_ref[t, :][None, :].astype(jnp.float32)   # [1, R]
+        # Per-cycle time-validity scalar (SMEM): a masked cycle freezes
+        # the whole network state, so time-padded batches match their
+        # unpadded originals exactly.
+        tm = tmask_ref[0, t].astype(jnp.float32)
         # Dead-lane enforcement: invalid (padded) lanes can never hold or
         # emit flits, whatever the caller put in their arrival/buffer slots.
-        occ = (occ + arr) * mask
+        occ = (occ0 + arr) * mask
         send = jnp.minimum(occ, link_rate) * jnp.sign(
             jnp.sum(nmat, axis=1))[None, :]                     # routers only
         # desired inflow at each destination: send @ nmat  ([1,R]@[R,R])
@@ -73,7 +77,8 @@ def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref, mask_ref,
         occ = occ - moved + inflow
         sunk = jnp.minimum(occ, drain)
         occ = occ - sunk
-        return occ, resid + occ, drained + sunk
+        return (tm * occ + (1.0 - tm) * occ0,
+                resid + tm * occ, drained + tm * sunk)
 
     occ, resid, drained = jax.lax.fori_loop(
         0, t_chunk, cycle,
@@ -92,6 +97,7 @@ def _noc_kernel(arrivals_ref, next_mat_ref, drain_ref, buf_ref, mask_ref,
 def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
                    drain_rate: jax.Array, buf_cap: jax.Array,
                    *, valid_mask: jax.Array | None = None,
+                   t_mask: jax.Array | None = None,
                    t_chunk: int = 256, link_rate: float = 1.0,
                    interpret: bool | None = None,
                    pad_lanes: bool | None = None):
@@ -108,6 +114,13 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         batch layout leaves garbage in their arrival/buffer slots. This is
         the topology-batching contract — padded router lanes are dead
         lanes, not zero-traffic routers.
+      t_mask: [T] 1/0 cycle-validity mask (None = all valid). Masked
+        cycles FREEZE the network: no arrivals, no movement, no drain, no
+        residency accumulation — so mixed-length cycle batches can pad the
+        time axis and still match their unpadded originals exactly (the
+        ragged-T contract of the epoch engine, at flit granularity). When
+        T is not a multiple of `t_chunk`, the wrapper pads the tail with
+        masked cycles automatically.
       interpret: None = backend-aware (compiled on TPU), or explicit bool.
       pad_lanes: pad the router axis up to the 128-lane boundary. Defaults
         to on whenever the kernel compiles (Mosaic requires lane-aligned
@@ -122,6 +135,14 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
     if valid_mask is None:
         valid_mask = jnp.ones((r_in,), jnp.float32)
     valid_mask = valid_mask.astype(jnp.float32)
+    if t_mask is None:
+        t_mask = jnp.ones((t,), jnp.float32)
+    t_mask = t_mask.astype(jnp.float32)
+    t_pad = (-t) % t_chunk
+    if t_pad:       # tail cycles arrive masked-out: frozen, zero residency
+        arrivals = jnp.pad(arrivals, ((0, t_pad), (0, 0)))
+        t_mask = jnp.pad(t_mask, (0, t_pad))
+        t += t_pad
     pad = (-r_in) % LANES if pad_lanes else 0
     if pad:
         arrivals = jnp.pad(arrivals, ((0, 0), (0, pad)))
@@ -130,7 +151,6 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         buf_cap = jnp.pad(buf_cap, (0, pad))
         valid_mask = jnp.pad(valid_mask, (0, pad))
     r = r_in + pad
-    assert t % t_chunk == 0
     n_steps = t // t_chunk
     kernel = functools.partial(_noc_kernel, t_chunk=t_chunk,
                                link_rate=link_rate, n_steps=n_steps)
@@ -139,6 +159,10 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         grid=(n_steps,),
         in_specs=[
             pl.BlockSpec((t_chunk, r), lambda i: (i, 0)),
+            # per-cycle validity scalars ride in SMEM, one t_chunk row per
+            # grid step — R times smaller than materializing a [T, R] mask
+            pl.BlockSpec((1, t_chunk), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((r, r), lambda i: (0, 0)),
             pl.BlockSpec((1, r), lambda i: (0, 0)),
             pl.BlockSpec((1, r), lambda i: (0, 0)),
@@ -152,6 +176,6 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((1, r), jnp.float32)] * 3,
         scratch_shapes=[pltpu.VMEM((1, r), jnp.float32)] * 3,
         interpret=interpret,
-    )(arrivals, next_mat, drain_rate[None, :], buf_cap[None, :],
-      valid_mask[None, :])
+    )(arrivals, t_mask.reshape(n_steps, t_chunk), next_mat,
+      drain_rate[None, :], buf_cap[None, :], valid_mask[None, :])
     return resid[0, :r_in], occ[0, :r_in], drained[0, :r_in]

@@ -91,11 +91,17 @@ def build_topology_padded(g_active: int, wavelengths: int,
 def simulate_residency(ext_load: float, g_active: int, wavelengths: int,
                        cycles: int = 4096, seed: int = 0,
                        cfg: NetworkConfig = NETWORK,
+                       active_cycles: int | None = None,
                        interpret: bool | None = None):
     """Returns (mean residency per router [4,4], drained flits).
 
     ext_load: chiplet-level inter-chiplet packet rate (pkts/cycle); packets
     arrive as `packet_flits`-sized bursts Poisson-thinned over routers.
+    active_cycles: run only the first `active_cycles` of the window (the
+    rest are t_mask-frozen) — lets mixed-duration runs share one kernel
+    shape, mirroring the epoch engine's ragged-T batching. `cycles` no
+    longer needs to be a multiple of the kernel time-chunk; the wrapper
+    pads the tail with masked cycles.
     """
     r = cfg.routers_per_chiplet
     next_mat, drain, buf, _ = build_topology(g_active, wavelengths, cfg)
@@ -106,10 +112,16 @@ def simulate_residency(ext_load: float, g_active: int, wavelengths: int,
            per_router).astype(jnp.float32) * cfg.packet_flits
     arrivals = jnp.concatenate(
         [arr, jnp.zeros((cycles, n - r), jnp.float32)], axis=1)
+    if active_cycles is None:
+        active_cycles = cycles
+    if not 0 < active_cycles <= cycles:
+        raise ValueError(f"active_cycles must be in (0, {cycles}], "
+                         f"got {active_cycles}")
+    t_mask = (jnp.arange(cycles) < active_cycles).astype(jnp.float32)
     resid, occ, drained = noc_run_pallas(
         arrivals, jnp.asarray(next_mat), jnp.asarray(drain),
         jnp.asarray(buf), valid_mask=jnp.ones((n,), jnp.float32),
-        interpret=interpret)
-    mean_resid = resid[:r] / cycles
+        t_mask=t_mask, interpret=interpret)
+    mean_resid = resid[:r] / active_cycles
     return (np.asarray(mean_resid).reshape(cfg.mesh_x, cfg.mesh_y),
             float(jnp.sum(drained)))

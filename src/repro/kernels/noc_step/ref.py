@@ -8,19 +8,24 @@ import jax.numpy as jnp
 def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
                       drain_rate: jax.Array, buf_cap: jax.Array,
                       *, valid_mask: jax.Array | None = None,
+                      t_mask: jax.Array | None = None,
                       link_rate: float = 1.0):
-    """Same contract as noc_run_pallas (incl. the dead-lane valid_mask)."""
-    r = arrivals.shape[1]
+    """Same contract as noc_run_pallas (dead-lane valid_mask + frozen-cycle
+    t_mask: a masked cycle leaves occupancy/residency/drain untouched)."""
+    t, r = arrivals.shape
     nmat = next_mat.astype(jnp.float32)
     is_router = jnp.sign(jnp.sum(nmat, axis=1))
     drain = drain_rate.astype(jnp.float32)
     buf = buf_cap.astype(jnp.float32)
     mask = jnp.ones((r,), jnp.float32) if valid_mask is None \
         else valid_mask.astype(jnp.float32)
+    tmask = jnp.ones((t,), jnp.float32) if t_mask is None \
+        else t_mask.astype(jnp.float32)
 
-    def cycle(carry, arr):
-        occ, resid, drained = carry
-        occ = (occ + arr.astype(jnp.float32)) * mask
+    def cycle(carry, x):
+        occ0, resid, drained = carry
+        arr, tm = x
+        occ = (occ0 + arr.astype(jnp.float32)) * mask
         send = jnp.minimum(occ, link_rate) * is_router
         inflow_want = send @ nmat
         space = jnp.maximum(buf - occ, 0.0)
@@ -33,9 +38,10 @@ def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
         occ = occ - moved + inflow
         sunk = jnp.minimum(occ, drain)
         occ = occ - sunk
-        return (occ, resid + occ, drained + sunk), None
+        return (tm * occ + (1.0 - tm) * occ0,
+                resid + tm * occ, drained + tm * sunk), None
 
     zeros = jnp.zeros((r,), jnp.float32)
     (occ, resid, drained), _ = jax.lax.scan(
-        cycle, (zeros, zeros, zeros), arrivals)
+        cycle, (zeros, zeros, zeros), (arrivals, tmask))
     return resid, occ, drained

@@ -91,6 +91,21 @@ def test_mesh_radix_sweep_matches(wide_trace):
             topology_point_config(base, n_chiplets=4, mesh_radix=r))
 
 
+def test_radix_sweep_resets_explicit_base_placement(wide_trace):
+    """A mesh_radix grid point must drop the base config's explicit
+    placement (with_topology's reset contract), not re-apply stale
+    coordinates from the old mesh — parity vs topology_point_config."""
+    base = SimConfig().with_arch(Arch.RESIPI)
+    base = dataclasses.replace(base, cfg=base.cfg.with_placement(
+        ((1, 1), (2, 2), (1, 2), (2, 1))))
+    radii = [4, 6]
+    out = sweep_topology(wide_trace, base, mesh_radix=radii)
+    for i, r in enumerate(radii):
+        _assert_point_matches(
+            out, i, wide_trace,
+            topology_point_config(base, mesh_radix=r))
+
+
 def test_whole_grid_is_one_compile(wide_trace):
     """The acceptance invariant: K topologies, ONE scan-body trace, and a
     warm re-call (even with different grid values) re-traces nothing."""
