@@ -3,7 +3,7 @@
 # `benchmarks` namespace package resolves when a bench runs standalone.
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench bench-placement bench-traffic
+.PHONY: verify test smoke bench bench-placement bench-search bench-traffic
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -22,6 +22,10 @@ bench:
 # Just the compiled placement-search benchmark (-> BENCH_placement.json).
 bench-placement:
 	$(PY) benchmarks/bench_placement.py
+
+# Device-resident vs host-loop search engines (-> BENCH_search.json).
+bench-search:
+	$(PY) benchmarks/bench_search.py
 
 # Just the workload-DSE / ragged-batch / streaming benchmark
 # (-> BENCH_traffic.json).

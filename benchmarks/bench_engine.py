@@ -16,22 +16,15 @@ in benchmarks/results/BENCH_engine.json so later PRs have a perf trajectory.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import traffic
 from repro.core.simulator import (clear_engine_caches, simulate,
                                   simulate_eager, stack_traces, sweep)
-from benchmarks.common import fixed_gateway_config, save_json_history
+from benchmarks.common import (fixed_gateway_config, save_json_history,
+                               timed_s, warm_median)
 from benchmarks.fig10_lm_dse import GATEWAY_COUNTS, dse_grid
-
-
-def _timed(fn) -> float:
-    t0 = time.time()
-    jax.block_until_ready(fn())
-    return time.time() - t0
 
 
 def _dse_seed_loop(traces: dict) -> float:
@@ -42,11 +35,11 @@ def _dse_seed_loop(traces: dict) -> float:
                 outs.append(simulate_eager(tr, fixed_gateway_config(g))
                             ["summary"]["mean_latency"])
         return outs
-    return _timed(go)
+    return timed_s(go)
 
 
 def _dse_engine(batch: dict) -> float:
-    return _timed(lambda: dse_grid(batch)["summary"]["mean_latency"])
+    return timed_s(lambda: dse_grid(batch)["summary"]["mean_latency"])
 
 
 def run(n_intervals: int = 60, seed: int = 7) -> dict:
@@ -60,21 +53,23 @@ def run(n_intervals: int = 60, seed: int = 7) -> dict:
     # -- seed-parity baseline (per-call retrace loop) -----------------------
     seed_loop_s = _dse_seed_loop(traces)
 
-    # -- engine: cold (compile) then warm (cache hit) -----------------------
+    # -- engine: cold (compile) then warm (cache hit, median-of-N) ----------
     clear_engine_caches()
     engine_cold_s = _dse_engine(batch)
-    engine_warm_s = _dse_engine(batch)
+    engine_warm_s = warm_median(
+        lambda: dse_grid(batch)["summary"]["mean_latency"])
 
     # -- single-call latency ------------------------------------------------
     clear_engine_caches()
-    single_cold_s = _timed(lambda: simulate(tr0, sim0)["summary"])
-    single_warm_s = _timed(lambda: simulate(tr0, sim0)["summary"])
+    single_cold_s = timed_s(lambda: simulate(tr0, sim0)["summary"])
+    single_warm_s = warm_median(
+        lambda: simulate(tr0, sim0)["summary"])
 
     # -- vmapped parameter sweep (64-point L_m grid) ------------------------
     lm_grid = jnp.linspace(0.004, 0.032, 64)
-    sweep_cold_s = _timed(
+    sweep_cold_s = timed_s(
         lambda: sweep(tr0, sim0, l_m=lm_grid)["summary"]["mean_latency"])
-    sweep_warm_s = _timed(
+    sweep_warm_s = warm_median(
         lambda: sweep(tr0, sim0, l_m=lm_grid)["summary"]["mean_latency"])
 
     result = {

@@ -4,15 +4,18 @@ PlaceIT-style placement exploration is a generate-and-score loop: propose
 candidate gateway placements, simulate each, keep the best. Without the
 placement-polymorphic engine every candidate placement is a distinct
 `NetworkConfig`, hence a distinct jit executable — a compile per candidate.
-`sweep_placement` turns a whole generation into ONE vmapped masked scan, and
-`search_placement` reuses that single executable for every generation, so
-the steady-state cost of the search is pure device time.
+`search_placement` (device engine, PR 5) goes further: the entire annealed
+search — proposals, traceable placement tables, scoring, acceptance — is
+ONE compiled `lax.scan`, a single dispatch per search. This bench tracks
+the *product* search path; the device-vs-host engine comparison lives in
+bench_search.py -> BENCH_search.json.
 
 Measured here on the paper's Table 1 system (4 chiplets, 4x4 mesh, 4 gateway
 slots):
 
   * search cold  — full `search_placement` including its one compile.
-  * search warm  — the same search against a hot cache (steady-state DSE).
+  * search warm  — the same search against a hot cache (steady-state DSE,
+                   median of N warm runs).
   * farm         — the same number of candidate evaluations as unpadded
                    per-placement `simulate` calls (compile farm baseline).
   * best-vs-default deltas — latency/power/energy of the found placement
@@ -25,7 +28,6 @@ Results land in benchmarks/results/BENCH_placement.json with an appended
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import numpy as np
@@ -34,16 +36,11 @@ from repro.core import traffic
 from repro.core.simulator import (Arch, SimConfig, clear_engine_caches,
                                   engine_stats, reset_engine_stats,
                                   search_placement, simulate)
-from benchmarks.common import save_json_history
+from benchmarks.common import (save_json_history, timed_result_s, timed_s,
+                               warm_median)
 
 GENERATIONS = 8
 POPULATION = 12
-
-
-def _timed(fn):
-    t0 = time.time()
-    out = fn()
-    return out, time.time() - t0
 
 
 def _farm_baseline(trace, base: SimConfig, placements) -> float:
@@ -53,9 +50,8 @@ def _farm_baseline(trace, base: SimConfig, placements) -> float:
         for p in placements:
             sim = dataclasses.replace(base, cfg=base.cfg.with_placement(p))
             outs.append(simulate(trace, sim)["summary"]["mean_latency"])
-        jax.block_until_ready(outs)
         return outs
-    return _timed(go)[1]
+    return timed_s(go)
 
 
 def run(n_intervals: int = 32, seed: int = 3) -> dict:
@@ -68,9 +64,10 @@ def run(n_intervals: int = 32, seed: int = 3) -> dict:
     # -- compiled search: cold (includes its ONE compile), then warm --------
     clear_engine_caches()
     reset_engine_stats()
-    res, search_cold_s = _timed(lambda: search(seed))
+    res, search_cold_s = timed_result_s(lambda: search(seed))
     scan_body_traces = engine_stats()["simulate_traces"]
-    res_warm, search_warm_s = _timed(lambda: search(seed + 1))
+    res_warm, _ = timed_result_s(lambda: search(seed + 1))
+    search_warm_s = warm_median(lambda: search(seed + 1))
     if res_warm["best_score"] < res["best_score"]:
         res = res_warm
 

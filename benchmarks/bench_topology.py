@@ -18,8 +18,6 @@ Results land in benchmarks/results/BENCH_topology.json with an appended
 """
 from __future__ import annotations
 
-import time
-
 import jax
 
 from repro.core import traffic
@@ -28,7 +26,7 @@ from repro.core.simulator import (Arch, SimConfig, clear_engine_caches,
                                   engine_stats, reset_engine_stats, simulate,
                                   shard_sweep, sweep_topology,
                                   topology_point_config)
-from benchmarks.common import save_json_history
+from benchmarks.common import save_json_history, timed_s, warm_median
 
 CHIPLET_COUNTS = (4, 8, 9, 16, 25, 36, 49, 64)
 GATEWAY_CLAMPS = (2, 4)
@@ -41,12 +39,6 @@ def topology_grid():
     return cs, gs
 
 
-def _timed(fn) -> float:
-    t0 = time.time()
-    jax.block_until_ready(fn())
-    return time.time() - t0
-
-
 def _farm(trace: dict, base: SimConfig, cs, gs) -> float:
     """Per-topology compile farm: distinct shapes/configs, one jit each."""
     def go():
@@ -57,7 +49,7 @@ def _farm(trace: dict, base: SimConfig, cs, gs) -> float:
             outs.append(simulate(traffic.slice_trace(trace, c), sim)
                         ["summary"]["mean_latency"])
         return outs
-    return _timed(go)
+    return timed_s(go)
 
 
 def run(n_intervals: int = 40, seed: int = 7) -> dict:
@@ -79,16 +71,16 @@ def run(n_intervals: int = 40, seed: int = 7) -> dict:
     padded = lambda: sweep_topology(trace, base, n_chiplets=cs,
                                     gateways_per_chiplet=gs)[
                                         "summary"]["mean_latency"]
-    padded_cold_s = _timed(padded)
+    padded_cold_s = timed_s(padded)
     scan_body_traces = engine_stats()["simulate_traces"]
-    padded_warm_s = _timed(padded)
+    padded_warm_s = warm_median(padded)
 
     # -- sharded path (graceful single-device fallback) ---------------------
     devices = jax.devices()
     shard = lambda: shard_sweep(trace, base, n_chiplets=cs,
                                 gateways_per_chiplet=gs)[
                                     "summary"]["mean_latency"]
-    shard(); sharded_warm_s = _timed(shard)
+    shard(); sharded_warm_s = warm_median(shard)
 
     result = {
         "backend": jax.default_backend(),

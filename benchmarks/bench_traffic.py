@@ -23,8 +23,6 @@ an appended `history` entry per run.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import numpy as np
 
@@ -33,7 +31,7 @@ from repro.core.simulator import (Arch, SimConfig, SimSession,
                                   clear_engine_caches, engine_stats,
                                   reset_engine_stats, simulate,
                                   simulate_batch, sweep_workload)
-from benchmarks.common import save_json_history
+from benchmarks.common import save_json_history, timed_s, warm_median
 
 # Mixed workload set: calibrated apps + canonical synthetics, five distinct
 # trace lengths so the farm pays five distinct-shape compiles.
@@ -49,12 +47,6 @@ WORKLOADS = (
 )
 
 
-def _timed(fn) -> float:
-    t0 = time.time()
-    jax.block_until_ready(fn())
-    return time.time() - t0
-
-
 def run(seed: int = 11, chunk: int = 16, stream_chunks: int = 24) -> dict:
     base = SimConfig().with_arch(Arch.RESIPI)
     keys = jax.random.split(jax.random.PRNGKey(seed), len(WORKLOADS))
@@ -63,27 +55,27 @@ def run(seed: int = 11, chunk: int = 16, stream_chunks: int = 24) -> dict:
 
     # -- per-workload compile farm (one executable per distinct T) ----------
     clear_engine_caches()
-    farm_s = _timed(lambda: [simulate(tr, base)["summary"]["mean_latency"]
-                             for tr in traces])
+    farm_s = timed_s(lambda: [simulate(tr, base)["summary"]["mean_latency"]
+                              for tr in traces])
 
     # -- workload engine: cold (single compile) then warm re-keyed ----------
     clear_engine_caches()
     reset_engine_stats()
     sweep = lambda s: sweep_workload(list(WORKLOADS), base, seed=s)[
         "summary"]["mean_latency"]
-    workload_cold_s = _timed(lambda: sweep(seed))
+    workload_cold_s = timed_s(lambda: sweep(seed))
     scan_body_traces = engine_stats()["simulate_traces"]
-    workload_warm_s = _timed(lambda: sweep(seed + 1))
+    workload_warm_s = warm_median(lambda: sweep(seed + 1))
 
     # -- ragged batch vs its per-length farm --------------------------------
     clear_engine_caches()
-    ragged_farm_s = _timed(
+    ragged_farm_s = timed_s(
         lambda: [simulate(tr, base)["summary"]["mean_latency"]
                  for tr in traces])
     clear_engine_caches()
     ragged = lambda: simulate_batch(traces, base)["summary"]["mean_latency"]
-    ragged_cold_s = _timed(ragged)
-    ragged_warm_s = _timed(ragged)
+    ragged_cold_s = timed_s(ragged)
+    ragged_warm_s = warm_median(ragged)
 
     # -- streaming session: chunked one-pass vs one-shot --------------------
     stream_spec = traffic.ParsecSpec(app="dedup",
@@ -99,8 +91,8 @@ def run(seed: int = 11, chunk: int = 16, stream_chunks: int = 24) -> dict:
 
     oneshot = lambda: simulate(stream_tr, base)["summary"]["mean_latency"]
     stream();  oneshot()                       # warm both paths
-    stream_warm_s = _timed(stream)
-    oneshot_warm_s = _timed(oneshot)
+    stream_warm_s = warm_median(stream)
+    oneshot_warm_s = warm_median(oneshot)
     drift = abs(float(np.asarray(stream())) - float(np.asarray(oneshot())))
 
     t_max = max(s.n_intervals for s in WORKLOADS)

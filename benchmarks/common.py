@@ -23,13 +23,47 @@ def fixed_gateway_config(g: int, base: SimConfig = SimConfig()) -> SimConfig:
 
 
 def timed(fn, *args, repeat: int = 1, **kwargs):
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = None
     for _ in range(repeat):
         out = fn(*args, **kwargs)
     out = jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
         else out
-    return out, (time.time() - t0) / repeat * 1e6   # us per call
+    return out, (time.perf_counter() - t0) / repeat * 1e6   # us per call
+
+
+def timed_s(fn) -> float:
+    """One blocking wall-clock measurement of fn() in seconds
+    (`time.perf_counter`, monotonic — cold sections / one-shot costs)."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def timed_result_s(fn):
+    """`timed_s` that also hands back fn()'s (blocked) result, so benches
+    that need both the timing and the output do not run fn() twice."""
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn())
+    return out, time.perf_counter() - t0
+
+
+# Median-of-N repetitions for every *warm* (hot-path) measurement: single
+# warm samples in the BENCH history swung 3-6x between runs (scheduler
+# noise at millisecond scale), which buried real regressions. N >= 5 keeps
+# the bench fast while the median rejects the outlier tail.
+WARM_REPS = 5
+
+
+def warm_median(fn, reps: int = WARM_REPS) -> float:
+    """Median of `reps` blocking wall-clock runs of fn(), in seconds.
+
+    Assumes fn() is already warm (compiled); run it once beforehand if the
+    preceding code has not. The per-run result is discarded — time only.
+    """
+    import statistics
+
+    return statistics.median(timed_s(fn) for _ in range(reps))
 
 
 def save_json(name: str, data) -> Path:

@@ -10,18 +10,23 @@ import sys
 import time
 
 
+def r_traces(r):
+    return (f"{r['scan_body_traces']} trace, "
+            f"{r['search_dispatches']} dispatch")
+
+
 def _run(name, fn, derived_fn):
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = fn()
-    us = (time.time() - t0) * 1e6
+    us = (time.perf_counter() - t0) * 1e6
     print(f"{name},{us:.0f},{derived_fn(out)}", flush=True)
     return out
 
 
 def main() -> None:
-    from benchmarks import (bench_engine, bench_placement, bench_topology,
-                            bench_traffic, fig10_lm_dse, fig11_main,
-                            fig12_adaptivity, fig13_residency,
+    from benchmarks import (bench_engine, bench_placement, bench_search,
+                            bench_topology, bench_traffic, fig10_lm_dse,
+                            fig11_main, fig12_adaptivity, fig13_residency,
                             table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
@@ -55,6 +60,18 @@ def main() -> None:
           f"({plc['speedup_warm_vs_farm']:.0f}x vs per-placement compiles); "
           f"best placement {plc['inter_latency_delta_frac']:+.1%} "
           f"inter-chiplet latency vs default edges", flush=True)
+    sea = _run("bench_search", bench_search.run,
+               lambda r: (f"device="
+                          f"{r['speedup_device_vs_pr3_recorded']:.1f}"
+                          f"x_vs_pr3,meets_10x={r['meets_10x']}"))
+    print(f"# search: whole annealed search is ONE dispatch "
+          f"({r_traces(sea)}): PR-3 recorded "
+          f"{sea['pr3_recorded_evals_per_sec']:.0f} -> host+fix "
+          f"{sea['host_evals_per_sec']:.0f} -> device "
+          f"{sea['device_evals_per_sec']:.0f} evals/s "
+          f"({sea['speedup_device_vs_pr3_recorded']:.1f}x vs PR-3); "
+          f"{sea['islands']} islands "
+          f"{sea['islands_evals_per_sec']:.0f} evals/s", flush=True)
     tra = _run("bench_traffic", bench_traffic.run,
                lambda r: (f"warm_speedup={r['speedup_warm']:.0f}x,"
                           f"{r['scan_body_traces']}trace/"

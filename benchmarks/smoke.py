@@ -11,7 +11,10 @@
      (`sweep_placement`: K placements, one trace, unpadded parity),
   4. the workload/time axis: a mixed-length `sweep_workload` runs as one
      scan-body trace with T-padded lanes matching unpadded `simulate`,
-     and a chunked `SimSession` bit-matches the one-shot records.
+     and a chunked `SimSession` bit-matches the one-shot records,
+  5. the device-resident placement search: a whole annealed search is ONE
+     scan-body trace and ONE dispatch, and its best score matches a fresh
+     host-oracle `simulate` of the found placement (device/host parity).
 
 `--smoke-only` skips the pytest stage (used by CI wrappers that already
 ran the suite, and for quick local iteration).
@@ -150,6 +153,52 @@ def traffic_stream_smoke() -> None:
           f"records bit-match)")
 
 
+def search_smoke() -> None:
+    """Device-resident search: one trace + one dispatch + oracle parity."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core import traffic
+    from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                      reset_engine_stats, search_placement,
+                                      simulate)
+
+    t0 = time.time()
+    tr = traffic.generate_trace("dedup", 12, jax.random.PRNGKey(2))
+    base = SimConfig().with_arch(Arch.RESIPI)
+
+    reset_engine_stats()
+    res = search_placement(tr, base, generations=4, population=6, seed=0)
+    stats = engine_stats()
+    assert stats["simulate_traces"] <= 1, \
+        f"search re-traced per generation: {stats}"
+    assert stats["search_dispatches"] == 1, \
+        f"search was not ONE dispatch: {stats}"
+    assert res["best_score"] <= res["default_score"]
+
+    # Host-oracle parity: re-score the found placement through unpadded
+    # simulate (numpy tables) — must match the device path's traced tables.
+    # (This traces its own single-config executable, so the warm-search
+    # accounting below starts from a fresh reset.)
+    single = simulate(tr, dataclasses.replace(
+        base, cfg=base.cfg.with_placement(res["best_placement"])))
+    ref = float(np.mean(np.asarray(single["records"]["mean_inter_latency"])))
+    np.testing.assert_allclose(
+        res["best_score"], ref, rtol=1e-5,
+        err_msg="device search score diverged from the host oracle")
+
+    # Warm re-seeded search: zero new traces, exactly one dispatch.
+    reset_engine_stats()
+    search_placement(tr, base, generations=4, population=6, seed=3)
+    stats2 = engine_stats()
+    assert stats2["simulate_traces"] == 0, "warm search re-traced"
+    assert stats2["search_dispatches"] == 1
+    print(f"search smoke OK in {time.time() - t0:.1f}s "
+          f"(4x6 annealed search, 1 dispatch, oracle parity holds)")
+
+
 def main(argv) -> int:
     if "--smoke-only" not in argv:
         rc = subprocess.call(
@@ -160,6 +209,7 @@ def main(argv) -> int:
     padded_sweep_smoke()
     placement_sweep_smoke()
     traffic_stream_smoke()
+    search_smoke()
     print("verify OK")
     return 0
 

@@ -2,8 +2,10 @@
 to a live application switch (the Fig. 12 experiment, narrated), then scale
 the same engine to a hundreds-of-chiplets topology scan in ONE compiled
 executable (the HexaMesh/PlaceIT-style DSE the padded sweep engine enables),
-let `search_placement` redesign the gateway floorplan itself, sweep a mixed
-PARSEC + synthetic workload set of ragged lengths through one executable
+let the device-resident `search_placement` redesign the gateway floorplan
+itself in a single dispatch (plus `search_placement_islands`: K annealed
+chains x a runtime-knob grid in one executable), sweep a mixed PARSEC +
+synthetic workload set of ragged lengths through one executable
 (`sweep_workload`), and finally stream an unbounded trace through a
 fixed-memory `SimSession`.
 
@@ -80,21 +82,25 @@ def hundreds_of_chiplets_scan():
 
 
 def placement_search_walkthrough():
-    """Redesign the gateway floorplan with the compiled placement search.
+    """Redesign the gateway floorplan with the device-resident search.
 
     `NetworkConfig.gateway_positions` makes gateway placement a first-class,
-    sweepable axis: `search_placement` proposes candidate placements in
-    numpy (single-gateway moves + random restarts, rows kept in controller
-    activation order) and scores each generation with ONE `sweep_placement`
-    call, so the entire search compiles exactly once. Interior placements
-    trade shorter router->gateway walks against access-waveguide loss
+    sweepable axis, and `search_placement` now runs the ENTIRE annealed
+    search on device (repro.core.search): proposals (collision-free
+    single-gateway moves + random restarts, spread-reordered by the
+    traceable activation rule), candidate tables (the jnp twins of the
+    selection builders), scoring, annealed acceptance and the history all
+    live inside ONE `lax.scan` — a whole search is a single dispatch with
+    zero host round-trips between generations. Interior placements trade
+    shorter router->gateway walks against access-waveguide loss
     (photonics.gateway_access_loss_db) — the search surfaces that frontier.
+    (`engine="host"` keeps the PR-3 numpy-proposal loop as a parity oracle.)
     """
     tr = traffic.generate_trace("dedup", 24, jax.random.PRNGKey(2))
-    before = engine_stats()["simulate_traces"]
+    reset_engine_stats()
     res = search_placement(tr, SimConfig().with_arch(Arch.RESIPI),
                            generations=8, population=12, seed=0)
-    traces = engine_stats()["simulate_traces"] - before
+    stats = engine_stats()
 
     print("\nplacement search (Table 1 system, objective: inter-chiplet "
           "latency):")
@@ -105,9 +111,49 @@ def placement_search_walkthrough():
     print(f"default edge scheme {res['default_score']:.3f} -> best "
           f"{res['best_placement']} at {res['best_score']:.3f} "
           f"(inter-chiplet latency {-res['improvement_frac']:+.1%})")
-    print(f"engine: {traces} scan-body trace for "
+    print(f"engine: {stats['simulate_traces']} scan-body trace, "
+          f"{stats['search_dispatches']} dispatch for "
           f"{res['generations']} generations x {res['population']} "
-          f"candidates (every generation reuses the one executable)")
+          f"candidates (the whole search is one compiled lax.scan)")
+
+
+def island_search_walkthrough():
+    """K annealed chains + a runtime-knob grid in ONE compiled executable.
+
+    `search_placement_islands` vmaps K independent search chains over seeds
+    inside the same single-dispatch executable — embarrassingly parallel
+    restarts at the cost of one — and runtime `SWEEPABLE_FIELDS` grids of
+    length K zip with the island axis. Here each island searches the best
+    floorplan for a different L_m operating point: a joint placement x
+    controller-threshold exploration (the step toward the ROADMAP's joint
+    search item). With more than one device the island axis shards via
+    NamedSharding.
+    """
+    from repro.core.simulator import search_placement_islands
+
+    tr = traffic.generate_trace("dedup", 24, jax.random.PRNGKey(3))
+    lms = [0.008, 0.0152, 0.024, 0.032]
+    reset_engine_stats()
+    res = search_placement_islands(
+        tr, SimConfig().with_arch(Arch.RESIPI),
+        generations=8, population=12, seed=0, l_m=lms)
+    stats = engine_stats()
+
+    print("\nisland search: best placement per L_m operating point "
+          "(4 chains, ONE dispatch):")
+    print("island |    L_m | default | best    | found placement")
+    for k in range(res["islands"]):
+        print(f"{k:6d} | {lms[k]:6.4f} | "
+              f"{res['island_default_scores'][k]:7.3f} | "
+              f"{res['island_best_scores'][k]:7.3f} | "
+              f"{res['island_best_placements'][k]}")
+    print(f"overall best: island {res['best_island']} at "
+          f"{res['best_score']:.3f} ({-res['improvement_frac']:+.1%} vs its "
+          f"default)")
+    print(f"engine: {stats['simulate_traces']} scan-body trace, "
+          f"{stats['search_dispatches']} dispatch for "
+          f"{res['islands']} islands x {res['generations']} generations x "
+          f"{res['population']} candidates")
 
 
 def mixed_workload_sweep():
@@ -181,6 +227,7 @@ def main():
     reconfiguration_walkthrough()
     hundreds_of_chiplets_scan()
     placement_search_walkthrough()
+    island_search_walkthrough()
     mixed_workload_sweep()
     streaming_session_walkthrough()
 

@@ -64,6 +64,46 @@ def activation_order(positions, cfg: NetworkConfig = NETWORK) -> np.ndarray:
     return np.asarray(order, np.int64)
 
 
+def activation_order_jnp(positions, cfg: NetworkConfig = NETWORK
+                         ) -> jax.Array:
+    """Traceable twin of `activation_order` (exact tie-break parity).
+
+    Same greedy spread rule — most-central position first, then each level
+    maximizes its minimum Manhattan distance to the already-activated set,
+    ties broken by centrality then original row index — but expressed as an
+    argmin over integer composite keys so it runs under jit/vmap on *traced*
+    placements. This is what lets the device-resident placement search
+    (repro.core.search) spread-order every proposal without a host
+    round-trip. Matches the numpy `activation_order` exactly for any
+    placement (integer comparisons only; pinned in tests/test_search.py).
+    """
+    pos = jnp.asarray(positions, jnp.int32).reshape(-1, 2)
+    n = int(pos.shape[0])
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # 2x the numpy rule's float centrality — integer, identical ordering.
+    cent2 = (jnp.abs(2 * pos[:, 0] - (cfg.mesh_x - 1))
+             + jnp.abs(2 * pos[:, 1] - (cfg.mesh_y - 1)))
+    pair = jnp.sum(jnp.abs(pos[:, None, :] - pos[None, :, :]), axis=-1)
+    # Composite lexicographic keys: b bounds the row-index tie-break, a
+    # bounds (centrality, index). All terms stay far inside int32 for any
+    # realistic mesh (dmin <= mesh perimeter).
+    b = n
+    a = (2 * (cfg.mesh_x + cfg.mesh_y - 2) + 1) * b
+    big = jnp.int32(4 * (cfg.mesh_x + cfg.mesh_y))
+    taken = jnp.iinfo(jnp.int32).max
+
+    first = jnp.argmin(cent2 * b + idx).astype(jnp.int32)
+    order = jnp.zeros((n,), jnp.int32).at[0].set(first)
+    selected = idx == first
+    for k in range(1, n):
+        dmin = jnp.min(jnp.where(selected[None, :], pair, big), axis=1)
+        key = jnp.where(selected, taken, -dmin * a + cent2 * b + idx)
+        nxt = jnp.argmin(key).astype(jnp.int32)
+        order = order.at[k].set(nxt)
+        selected = selected | (idx == nxt)
+    return order
+
+
 def t_p(cfg: ControllerConfig) -> jax.Array:
     """Eq. 6: activation threshold — constant L_m for every g."""
     return jnp.float32(cfg.l_m)

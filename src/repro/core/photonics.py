@@ -128,6 +128,24 @@ def gateway_access_loss_db(gw_pos: np.ndarray,
             * power.waveguide_db_per_mm).astype(np.float32)
 
 
+def gateway_access_loss_db_jnp(gw_pos, cfg: NetworkConfig = NETWORK,
+                               power: PhotonicPower = PHOTONIC_POWER
+                               ) -> jax.Array:
+    """Traceable twin of `gateway_access_loss_db` for traced placements.
+
+    Identical distance-to-nearest-edge formula, expressed in jnp so the
+    device-resident placement search (repro.core.search) can derive a
+    candidate's optical access loss without leaving the device. Matches the
+    numpy builder at 1e-6 (tests/test_search.py).
+    """
+    pos = jnp.asarray(gw_pos, jnp.int32).reshape(-1, 2)
+    edge_hops = jnp.minimum(
+        jnp.minimum(pos[:, 0], cfg.mesh_x - 1 - pos[:, 0]),
+        jnp.minimum(pos[:, 1], cfg.mesh_y - 1 - pos[:, 1]))
+    return (edge_hops.astype(jnp.float32)
+            * jnp.float32(cfg.router_pitch_mm * power.waveguide_db_per_mm))
+
+
 # ---------------------------------------------------------------------------
 # MRG accounting (Fig. 4): N gateways, W wavelengths
 #   each MRG: 1 modulator row (W MRs) + (N-1) filter rows (W MRs each)

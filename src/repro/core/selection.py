@@ -24,6 +24,7 @@ import functools
 from typing import Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import photonics
@@ -262,6 +263,72 @@ build_selection_tables.cache_clear = \
     _build_selection_tables_cached.cache_clear
 build_selection_tables.__wrapped__ = \
     _build_selection_tables_cached.__wrapped__
+
+
+# ---------------------------------------------------------------------------
+# Traceable placement->tables path (device-resident search, PR 5)
+# ---------------------------------------------------------------------------
+
+def placement_tables_jnp(positions, cfg: NetworkConfig = NETWORK) -> dict:
+    """Traceable twin of the `build_selection_tables` hot columns.
+
+    From a (possibly traced) [G, 2] placement in activation order, builds
+    exactly the two per-activation-level columns the epoch simulator
+    consumes — `src_hops` (mean router->gateway hops under the §3.4 balanced
+    partition) and `gw_loss_db` (running-mean access-waveguide loss) —
+    entirely in jnp, so candidate placements never leave the device
+    (repro.core.search scores thousands of candidates without a host
+    round-trip). Matches the numpy builder at 1e-6 for arbitrary placements
+    on any mesh (tests/test_search.py). The full src_map/dst_map router
+    tables stay design-time numpy: nothing in the epoch-level scan reads
+    them.
+
+    The numpy builder walks (router, gateway) pairs one at a time in
+    (distance, router, gateway) order — inherently sequential, and slow as
+    compiled code (R*g scatter steps per level). This twin uses an exactly
+    equivalent *class-column* schedule: for each distance value d
+    (ascending), for each gateway column g (ascending), take the first
+    `capacity - load_g` still-unassigned distance-d candidates of g in
+    router order — one masked cumsum over the router axis per (d, g) step.
+    Equivalence: within a distance class the pair walk assigns router r at
+    its smallest in-class gateway with spare capacity at its turn, and by
+    induction over g the winner set of each column is exactly "the first
+    cap_left unassigned candidates in router order" — which is what the
+    cumsum computes. That turns sum_g R*g scalar steps into
+    (mesh_x + mesh_y - 1) * G fully vectorized ones, with all G activation
+    levels riding as batched lanes (this is the search's hot inner loop,
+    rebuilt per candidate per generation). Pinned bit-exact against the
+    numpy walk across meshes in tests/test_search.py.
+    """
+    pos = jnp.asarray(positions, jnp.int32).reshape(-1, 2)
+    g_max = int(pos.shape[0])
+    routers = jnp.asarray(_router_coords(cfg))
+    n_r = int(routers.shape[0])
+    d_vals = cfg.mesh_x + cfg.mesh_y - 1       # distinct Manhattan values
+    dist = jnp.sum(jnp.abs(routers[:, None, :] - pos[None, :, :]),
+                   axis=-1).astype(jnp.int32)                  # [R, G]
+    caps = jnp.asarray([-(-n_r // g) for g in range(1, g_max + 1)],
+                       jnp.int32)                              # ceil(R/g)
+    level_has = np.arange(1, g_max + 1)        # lane l uses gateways < l+1
+
+    assigned = jnp.zeros((g_max, n_r), bool)   # [L, R]
+    assign_d = jnp.zeros((g_max, n_r), jnp.float32)
+    load = [jnp.zeros((g_max,), jnp.int32) for _ in range(g_max)]
+    for d in range(d_vals):
+        for g in range(g_max):
+            lane_on = jnp.asarray(level_has > g)               # [L] static
+            cand = ((~assigned) & (dist[None, :, g] == d)
+                    & lane_on[:, None])                        # [L, R]
+            k = jnp.cumsum(cand.astype(jnp.int32), axis=1)     # router order
+            take = cand & (k <= (caps - load[g])[:, None])
+            assigned = assigned | take
+            assign_d = jnp.where(take, jnp.float32(d), assign_d)
+            load[g] = load[g] + jnp.sum(take.astype(jnp.int32), axis=1)
+
+    per_gw_db = photonics.gateway_access_loss_db_jnp(pos, cfg)
+    levels = jnp.arange(1, g_max + 1, dtype=jnp.float32)
+    return {"src_hops": jnp.mean(assign_d, axis=1),
+            "gw_loss_db": jnp.cumsum(per_gw_db) / levels}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -36,9 +36,16 @@ Engine model (compile-once, batch-everywhere):
     *placements* (NetworkConfig.gateway_positions) through the same ONE
     compiled masked scan; placements enter purely as traced hop/loss
     tables, so a placement DSE never recompiles per candidate.
-  * `search_placement` — PlaceIT-style greedy/annealed placement search:
-    numpy proposals, one `sweep_placement` scoring call per generation,
-    one compiled executable for the entire search.
+  * `search_placement` — PlaceIT-style greedy/annealed placement search.
+    The default engine is DEVICE-RESIDENT (repro.core.search): proposals,
+    traceable placement tables, scoring, annealed acceptance and history
+    run inside ONE compiled `lax.scan` — a whole search is a single
+    dispatch. `engine="host"` keeps the PR-3 numpy-proposal loop (one
+    `sweep_placement` call per generation) as the parity oracle.
+  * `search_placement_islands` — K independent annealed chains vmapped
+    over seeds in the same single executable; runtime `SWEEPABLE_FIELDS`
+    grids of length K zip with the island axis (joint placement x
+    runtime-knob search), sharded across devices when available.
   * `sweep_workload` — K `traffic.TrafficSpec` workloads (mixed lengths
     allowed) generated from seeds and run as ONE compiled executable;
     runtime/topology/placement grids of the same length zip in.
@@ -378,7 +385,9 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
 
 # Trace-time counters: bumped every time jax actually traces a simulation
 # body. A warm jit cache leaves these untouched — tests/benches assert on it.
-_STATS = {"traces": 0}
+# `search_dispatches` counts device-resident search executable launches
+# (repro.core.search): one whole annealed search == one dispatch.
+_STATS = {"traces": 0, "search_dispatches": 0}
 
 # Config fields that `sweep` may override with runtime (traced) scalars.
 # All are scalar knobs that feed jnp comparisons/arithmetic — nothing that
@@ -404,12 +413,14 @@ def engine_stats() -> dict:
     """Engine instrumentation: scan-body trace count + table-cache stats."""
     info = build_selection_tables.cache_info()
     return {"simulate_traces": _STATS["traces"],
+            "search_dispatches": _STATS["search_dispatches"],
             "selection_table_builds": info.misses,
             "selection_table_hits": info.hits}
 
 
 def reset_engine_stats() -> None:
     _STATS["traces"] = 0
+    _STATS["search_dispatches"] = 0
 
 
 def clear_engine_caches() -> None:
@@ -419,11 +430,14 @@ def clear_engine_caches() -> None:
     this instead of reaching for the private wrappers, so adding an entry
     point can't silently leave a warm cache in a 'cold' measurement.
     """
+    from repro.core.search import clear_search_caches
+
     for f in (_simulate_jit, _simulate_batch_jit, _sweep_jit,
               _sweep_batch_jit, _sweep_topology_jit,
               _sweep_topology_batch_jit, _sweep_workload_jit,
               _sweep_workload_topo_jit, _session_chunk_jit):
         f.clear_cache()
+    clear_search_caches()
 
 
 def _grid_len(name: str, values) -> int:
@@ -529,6 +543,33 @@ def _summary_from_sums(sums: dict, n_chiplets_for_lambda) -> dict:
         "total_reconfig_nj": sums["reconfig_nj"],
         "valid_intervals": sums["valid_intervals"],
     }
+
+
+# The summary schema `_summary_from_sums` emits, as a fixed-order tuple:
+# the device-resident search (repro.core.search) packs best-candidate
+# summaries as vectors in this order, and both search engines validate
+# objectives against it — keep in sync with the dict above (pinned by
+# tests/test_search.py).
+SUMMARY_KEYS = ("mean_latency", "mean_power_mw", "mean_energy",
+                "mean_gateways", "mean_wavelengths", "saturated_frac",
+                "total_reconfig_nj", "valid_intervals")
+
+# Short objective names accepted by the placement search engines.
+PLACEMENT_OBJECTIVE_ALIASES = {"latency": "mean_latency",
+                               "power": "mean_power_mw",
+                               "energy": "mean_energy"}
+
+
+def check_placement_objective(objective: str) -> None:
+    """Shared search-objective validation (host and device engines)."""
+    if objective == "inter_latency":
+        return
+    if PLACEMENT_OBJECTIVE_ALIASES.get(objective, objective) \
+            not in SUMMARY_KEYS:
+        raise ValueError(
+            f"unknown placement objective {objective!r} (use "
+            f"'inter_latency', 'latency', 'power', 'energy' or a summary "
+            f"key: {sorted(SUMMARY_KEYS)})")
 
 
 def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
@@ -1239,48 +1280,66 @@ def sweep_placement_batch(traces, sim: SimConfig, placements,
                                 gateway_positions=list(placements), **grids)
 
 
-def _placement_scores(out: dict, objective: str) -> np.ndarray:
-    """Per-lane scalar objective from a sweep_placement result ([K])."""
+def _placement_scores(summary: dict, inter_latency: np.ndarray,
+                      objective: str) -> np.ndarray:
+    """Per-lane scalar objective from device_get'd sweep results ([K])."""
+    check_placement_objective(objective)
     if objective == "inter_latency":
         # Per-interval traffic-weighted inter-chiplet latency, [K, T] -> [K].
-        return np.asarray(
-            jnp.mean(out["records"]["mean_inter_latency"], axis=-1))
-    key = {"latency": "mean_latency", "power": "mean_power_mw",
-           "energy": "mean_energy"}.get(objective, objective)
-    if key not in out["summary"]:
-        raise ValueError(
-            f"unknown placement objective {objective!r} (use "
-            f"'inter_latency', 'latency', 'power', 'energy' or a summary "
-            f"key: {sorted(out['summary'])})")
-    return np.asarray(out["summary"][key])
+        return np.mean(inter_latency, axis=-1)
+    return np.asarray(
+        summary[PLACEMENT_OBJECTIVE_ALIASES.get(objective, objective)])
 
 
 def search_placement(trace: dict, sim: SimConfig, *,
                      objective: str = "inter_latency",
                      generations: int = 10, population: int = 12,
                      seed: int = 0, init=None, temperature: float = 0.05,
-                     cooling: float = 0.7,
-                     restart_frac: float = 0.25) -> dict:
-    """PlaceIT-style gateway-placement search on the compiled sweep engine.
+                     cooling: float = 0.7, restart_frac: float = 0.25,
+                     engine: str = "device") -> dict:
+    """PlaceIT-style annealed gateway-placement search.
 
-    Greedy/simulated-annealing hybrid: candidate placements are proposed in
-    numpy (single-gateway moves around the incumbent, spread-reordered by
-    the controller activation rule, plus random restarts) and every
-    generation is scored with ONE `sweep_placement` call of fixed population
-    size — so the whole search shares a single compiled executable
-    (`engine_stats()` shows one scan-body trace across all generations).
-
-    Acceptance is annealed: the incumbent moves to the generation's best
-    candidate when it improves, or with probability exp(-rel_delta/T)
-    otherwise (T decays by `cooling` each round). The returned best is
-    elitist over everything ever scored, and the default edge scheme is
+    Greedy/simulated-annealing hybrid: candidate placements (single-gateway
+    moves around the incumbent, spread-reordered by the controller
+    activation rule, plus random restarts) are scored per generation at
+    fixed population size, with annealed acceptance of the incumbent and an
+    elitist best over everything ever scored. The default edge scheme is
     always scored in generation 0, so `best_score <= default_score` when
     `init` is None.
+
+    Two engines share these semantics:
+
+      * `engine="device"` (default) — the whole search is ONE compiled
+        `lax.scan` (repro.core.search.search_placement_device): proposals,
+        traceable placement tables, scoring, acceptance and history all
+        stay on device; a search is a single dispatch with zero host
+        round-trips between generations (`engine_stats()` shows one
+        scan-body trace and one `search_dispatches`). For parallel chains
+        see `search_placement_islands`.
+      * `engine="host"` — the PR-3 loop, retained as the parity oracle:
+        numpy proposals, one `sweep_placement` call per generation (still
+        one compiled executable across the search), and ONE
+        `jax.device_get` of the summary pytree per generation.
+
+    Both engines are deterministic per seed; their PRNG streams differ
+    (jax.random vs numpy RandomState), so they explore different — equally
+    valid — trajectories from the same seed.
 
     Returns {best_placement, best_score, best_summary, default_placement,
     default_score, improvement_frac, history} with one history entry per
     generation (the latency/power/energy trajectory of the search).
     """
+    if engine == "device":
+        from repro.core.search import search_placement_device
+
+        return search_placement_device(
+            trace, sim, objective=objective, generations=generations,
+            population=population, seed=seed, init=init,
+            temperature=temperature, cooling=cooling,
+            restart_frac=restart_frac)
+    if engine != "host":
+        raise ValueError(f"unknown engine {engine!r} (use 'device' or "
+                         f"'host')")
     if population < 2:
         raise ValueError("population must be >= 2 (incumbent + candidates)")
     if generations < 1:
@@ -1312,10 +1371,6 @@ def search_placement(trace: dict, sim: SimConfig, *,
             occupied.add(pos[i])
         return normalize_placement(pos, cfg, order="spread")
 
-    def lane_summary(out, i):
-        return {k: float(np.asarray(v)[i])
-                for k, v in out["summary"].items()}
-
     best_p, best_s, best_summary = None, np.inf, None
     default_s = None
     temp = temperature
@@ -1330,14 +1385,22 @@ def search_placement(trace: dict, sim: SimConfig, *,
                          if rng.rand() < restart_frac else
                          mutate(parent, moves))
         out = sweep_placement(trace, sim, cands)
-        scores = _placement_scores(out, objective)
+        # ONE device->host sync for everything this generation consumes
+        # (scores, lane summary, history values) — per-key np.asarray calls
+        # here used to cost several round-trips per generation.
+        pulled = jax.device_get(
+            {"summary": out["summary"],
+             "inter_latency": out["records"]["mean_inter_latency"]})
+        scores = _placement_scores(pulled["summary"],
+                                   pulled["inter_latency"], objective)
         if gen == 0:
             default_s = float(scores[cands.index(default_p)]
                               if default_p in cands else scores[0])
         ibest = int(np.argmin(scores))
         if scores[ibest] < best_s:
             best_p, best_s = cands[ibest], float(scores[ibest])
-            best_summary = lane_summary(out, ibest)
+            best_summary = {k: float(v[ibest])
+                            for k, v in pulled["summary"].items()}
         # Annealed incumbent move: greedy downhill, probabilistic uphill.
         delta = float(scores[ibest] - scores[0])
         rel = delta / max(abs(float(scores[0])), 1e-12)
@@ -1351,12 +1414,9 @@ def search_placement(trace: dict, sim: SimConfig, *,
             "best_candidate_score": float(scores[ibest]),
             "best_score": float(best_s),
             "accepted": bool(accepted),
-            "latency": float(np.asarray(
-                out["summary"]["mean_latency"])[ibest]),
-            "power_mw": float(np.asarray(
-                out["summary"]["mean_power_mw"])[ibest]),
-            "energy": float(np.asarray(
-                out["summary"]["mean_energy"])[ibest]),
+            "latency": float(pulled["summary"]["mean_latency"][ibest]),
+            "power_mw": float(pulled["summary"]["mean_power_mw"][ibest]),
+            "energy": float(pulled["summary"]["mean_energy"][ibest]),
         })
         temp *= cooling
 
@@ -1365,7 +1425,7 @@ def search_placement(trace: dict, sim: SimConfig, *,
             "default_placement": default_p, "default_score": default_s,
             "improvement_frac": 1.0 - best_s / max(default_s, 1e-12),
             "objective": objective, "generations": generations,
-            "population": population, "history": history}
+            "population": population, "engine": "host", "history": history}
 
 
 def simulate_all_archs(trace: dict, base: SimConfig = SimConfig()) -> dict:
@@ -1373,3 +1433,12 @@ def simulate_all_archs(trace: dict, base: SimConfig = SimConfig()) -> dict:
     for arch in Arch:
         out[arch.value] = simulate(trace, base.with_arch(arch))["summary"]
     return out
+
+
+def __getattr__(name):
+    # Lazy re-export: repro.core.search imports this module, so a top-level
+    # import here would be circular. Resolved on first attribute access.
+    if name in ("search_placement_device", "search_placement_islands"):
+        from repro.core import search as _search
+        return getattr(_search, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

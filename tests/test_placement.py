@@ -234,8 +234,10 @@ def test_search_placement_beats_or_ties_default(trace):
     base = SimConfig().with_arch(Arch.RESIPI)
     reset_engine_stats()
     res = search_placement(trace, base, generations=4, population=6, seed=1)
-    # The entire generation loop shares ONE compiled executable.
-    assert engine_stats()["simulate_traces"] == 1
+    # The entire generation loop shares ONE compiled executable (0 traces
+    # when another test already compiled this exact search shape).
+    assert engine_stats()["simulate_traces"] <= 1
+    assert engine_stats()["search_dispatches"] == 1
     assert res["best_score"] <= res["default_score"]
     assert len(res["history"]) == 4
     assert res["default_placement"] == normalize_placement(

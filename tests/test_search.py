@@ -1,0 +1,281 @@
+"""Device-resident placement-search engine tests (PR 5).
+
+Covers the traceable placement->tables path (jnp twins vs the numpy
+builders at 1e-6 across meshes, exact activation-order parity), the
+one-dispatch `lax.scan` search (determinism, host-oracle re-scoring
+parity, elitism/annealing invariants, engine_stats accounting), the
+vmapped island search with zipped runtime grids, and the engine-selection
+wrapper.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.constants import NetworkConfig
+from repro.core.gateway_controller import (activation_order,
+                                           activation_order_jnp)
+from repro.core.selection import (build_selection_tables, normalize_placement,
+                                  placement_tables_jnp)
+from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                  reset_engine_stats, search_placement,
+                                  search_placement_islands, simulate, sweep)
+
+MESHES = [(4, 4, 4), (5, 5, 4), (6, 6, 4), (4, 4, 6), (3, 3, 2)]
+TRIALS_PER_MESH = 10
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return traffic.generate_trace("dedup", 12, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def base():
+    return SimConfig().with_arch(Arch.RESIPI)
+
+
+@pytest.fixture(scope="module")
+def device_result(trace, base):
+    """One compiled device search shared by the assertion tests below."""
+    return search_placement(trace, base, generations=4, population=6,
+                            seed=1)
+
+
+def _random_placements(cfg, n, seed=0):
+    rng = np.random.RandomState(seed)
+    coords = [(x, y) for x in range(cfg.mesh_x) for y in range(cfg.mesh_y)]
+    g = cfg.max_gateways_per_chiplet
+    return [[coords[i] for i in rng.choice(len(coords), g, replace=False)]
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Traceable placement->tables path: jnp twins vs numpy builders
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _jitted_twins(cfg):
+    return (jax.jit(lambda p: placement_tables_jnp(p, cfg)),
+            jax.jit(lambda p: activation_order_jnp(p, cfg)))
+
+
+@pytest.mark.parametrize("mesh", MESHES)
+def test_placement_tables_jnp_match_numpy(mesh):
+    """Acceptance: jnp twins == numpy builders at 1e-6 on all meshes."""
+    mx, my, g = mesh
+    cfg = NetworkConfig(mesh_x=mx, mesh_y=my, max_gateways_per_chiplet=g)
+    tables_fn, _ = _jitted_twins(cfg)
+    for pos in _random_placements(cfg, TRIALS_PER_MESH, seed=mx * my + g):
+        ref = build_selection_tables(
+            cfg.with_placement(normalize_placement(pos, cfg)))
+        out = tables_fn(jnp.asarray(pos, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(out["src_hops"]), ref.src_hops, rtol=1e-6,
+            atol=1e-6, err_msg=f"src_hops diverged for {pos} on {mesh}")
+        np.testing.assert_allclose(
+            np.asarray(out["gw_loss_db"]), ref.gw_loss_db, rtol=1e-6,
+            atol=1e-6, err_msg=f"gw_loss_db diverged for {pos} on {mesh}")
+
+
+@pytest.mark.parametrize("mesh", MESHES)
+def test_activation_order_jnp_matches_numpy(mesh):
+    """The traceable spread rule is EXACTLY the numpy rule (tie-breaks)."""
+    mx, my, g = mesh
+    cfg = NetworkConfig(mesh_x=mx, mesh_y=my, max_gateways_per_chiplet=g)
+    _, order_fn = _jitted_twins(cfg)
+    for pos in _random_placements(cfg, TRIALS_PER_MESH, seed=7 * mx + g):
+        np.testing.assert_array_equal(
+            np.asarray(order_fn(jnp.asarray(pos, jnp.int32))),
+            activation_order(pos, cfg),
+            err_msg=f"activation order diverged for {pos} on {mesh}")
+
+
+def test_placement_tables_jnp_vmappable():
+    cfg = NetworkConfig()
+    batch = jnp.asarray(_random_placements(cfg, 5, seed=3), jnp.int32)
+    out = jax.jit(jax.vmap(lambda p: placement_tables_jnp(p, cfg)))(batch)
+    assert out["src_hops"].shape == (5, 4)
+    assert out["gw_loss_db"].shape == (5, 4)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident search: determinism, parity, invariants, accounting
+# ---------------------------------------------------------------------------
+
+def test_device_search_deterministic_by_seed(trace, base, device_result):
+    again = search_placement(trace, base, generations=4, population=6,
+                             seed=1)
+    assert again["best_placement"] == device_result["best_placement"]
+    assert again["best_score"] == device_result["best_score"]
+    assert again["history"] == device_result["history"]
+
+
+def test_device_search_result_structure(device_result, base):
+    res = device_result
+    assert res["engine"] == "device"
+    assert res["objective"] == "inter_latency"
+    assert len(res["history"]) == 4
+    pos = np.asarray(res["best_placement"])
+    g = base.cfg.max_gateways_per_chiplet
+    assert pos.shape == (g, 2)
+    assert len(np.unique(pos, axis=0)) == g
+    assert pos.min() >= 0 and pos.max() < base.cfg.mesh_x
+    inc = np.asarray(res["incumbent_placement"])
+    assert inc.shape == (g, 2) and len(np.unique(inc, axis=0)) == g
+
+
+def test_device_search_matches_host_rescoring(trace, base, device_result):
+    """The device-path score of the best placement == an unpadded simulate
+    of that placement (the host parity oracle) — traced tables vs numpy
+    tables end to end."""
+    res = device_result
+    single = simulate(trace, dataclasses.replace(
+        base, cfg=base.cfg.with_placement(res["best_placement"])))
+    ref = float(np.mean(np.asarray(
+        single["records"]["mean_inter_latency"])))
+    np.testing.assert_allclose(res["best_score"], ref, rtol=1e-5)
+    np.testing.assert_allclose(
+        res["best_summary"]["mean_latency"],
+        float(single["summary"]["mean_latency"]), rtol=1e-5)
+    # The packed-summary schema must track the engine's summary dict —
+    # pins simulator.SUMMARY_KEYS against _summary_from_sums drift.
+    assert set(res["best_summary"]) == set(single["summary"])
+
+
+def test_device_search_elitism_and_annealing(device_result):
+    """best_score is the running min of every candidate ever scored and
+    never increases (elitist acceptance is monotone)."""
+    hist = device_result["history"]
+    best = np.asarray([h["best_score"] for h in hist])
+    cand = np.asarray([h["best_candidate_score"] for h in hist])
+    np.testing.assert_allclose(best, np.minimum.accumulate(cand),
+                               rtol=1e-7)
+    assert np.all(np.diff(best) <= 0 + 1e-12)
+    assert device_result["best_score"] <= device_result["default_score"]
+    # Greedy rule: a strictly-improving generation is always accepted.
+    for h in hist:
+        if h["best_candidate_score"] < h["parent_score"]:
+            assert h["accepted"]
+
+
+def test_device_search_one_trace_one_dispatch(trace):
+    # A test-owned config variant guarantees a cold executable here.
+    sim = dataclasses.replace(SimConfig().with_arch(Arch.RESIPI),
+                              prowaves_rho_lo=0.3093)
+    reset_engine_stats()
+    search_placement(trace, sim, generations=2, population=4, seed=0)
+    stats = engine_stats()
+    assert stats["simulate_traces"] == 1, \
+        f"expected ONE scan-body trace for the whole search, got {stats}"
+    assert stats["search_dispatches"] == 1
+    # Warm repeat: one more dispatch, ZERO new traces.
+    search_placement(trace, sim, generations=2, population=4, seed=5)
+    stats = engine_stats()
+    assert stats["simulate_traces"] == 1
+    assert stats["search_dispatches"] == 2
+
+
+def test_engines_agree_on_default_score(trace, base, device_result):
+    """Cross-engine parity oracle: both engines score the deterministic
+    default edge scheme; the values must match at float tolerance."""
+    host = search_placement(trace, base, generations=2, population=4,
+                            seed=1, engine="host")
+    assert host["engine"] == "host"
+    np.testing.assert_allclose(host["default_score"],
+                               device_result["default_score"], rtol=1e-5)
+    assert host["default_placement"] == device_result["default_placement"]
+    assert host["best_score"] <= host["default_score"]
+
+
+def test_device_search_with_init_scores_default(trace, base):
+    """A non-default init still scores the default edge scheme in gen 0 —
+    even at the host engine's minimum population of 2 (the device lane-1
+    injection replaces the lone proposal that generation)."""
+    center = ((1, 1), (2, 2), (1, 2), (2, 1))
+    res = search_placement(trace, base, generations=2, population=2,
+                           seed=0, init=center)
+    assert res["best_score"] <= res["default_score"]
+    host = search_placement(trace, base, generations=2, population=2,
+                            seed=0, init=center, engine="host")
+    np.testing.assert_allclose(host["default_score"],
+                               res["default_score"], rtol=1e-5)
+
+
+def test_search_param_validation(trace, base):
+    with pytest.raises(ValueError, match="population"):
+        search_placement(trace, base, population=1)
+    with pytest.raises(ValueError, match="generations"):
+        search_placement(trace, base, generations=0)
+    with pytest.raises(ValueError, match="objective"):
+        search_placement(trace, base, generations=1, population=2,
+                         objective="nope")
+    with pytest.raises(ValueError, match="engine"):
+        search_placement(trace, base, engine="quantum")
+    with pytest.raises(ValueError, match="init places"):
+        search_placement(trace, base, init=((0, 0), (1, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Island search: vmapped chains + zipped runtime grids
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def island_result(trace, base):
+    return search_placement_islands(
+        trace, base, generations=3, population=5, seed=2,
+        l_m=[0.008, 0.0152, 0.03])
+
+
+def test_islands_shapes_and_overall_best(island_result):
+    res = island_result
+    k = 3
+    assert res["islands"] == k
+    assert res["island_best_scores"].shape == (k,)
+    assert res["island_default_scores"].shape == (k,)
+    assert len(res["island_best_placements"]) == k
+    assert res["history"]["best_score"].shape == (k, 3)
+    # The overall winner is the argmin island, scored against ITS default.
+    kb = res["best_island"]
+    assert res["best_score"] == res["island_best_scores"][kb]
+    assert res["best_score"] == res["island_best_scores"].min()
+    assert res["best_placement"] == res["island_best_placements"][kb]
+    # Per-island elitism: every island beats or ties its own default
+    # (init is None, so the default is scored in generation 0).
+    assert np.all(res["island_best_scores"]
+                  <= res["island_default_scores"] + 1e-6)
+
+
+def test_islands_zip_runtime_grid(trace, base, island_result):
+    """Island k really runs under l_m[k]: its default-scheme score matches
+    a single-lane sweep with that override."""
+    lms = [0.008, 0.0152, 0.03]
+    out = sweep(trace, base, l_m=jnp.asarray(lms))
+    ref = np.asarray(
+        jnp.mean(out["records"]["mean_inter_latency"], axis=-1))
+    np.testing.assert_allclose(island_result["island_default_scores"], ref,
+                               rtol=1e-5)
+
+
+def test_islands_deterministic(trace, base, island_result):
+    again = search_placement_islands(
+        trace, base, generations=3, population=5, seed=2,
+        l_m=[0.008, 0.0152, 0.03])
+    assert again["best_placement"] == island_result["best_placement"]
+    np.testing.assert_array_equal(again["island_best_scores"],
+                                  island_result["island_best_scores"])
+
+
+def test_islands_validation(trace, base):
+    with pytest.raises(ValueError, match="length islands"):
+        search_placement_islands(trace, base, islands=4, l_m=[0.01, 0.02])
+    with pytest.raises(ValueError, match="non-sweepable"):
+        search_placement_islands(trace, base, islands=2,
+                                 mesh_radix=[4, 5])
+    with pytest.raises(ValueError, match="share one length"):
+        search_placement_islands(trace, base, l_m=[0.01, 0.02],
+                                 buffer_sat=[0.5])
