@@ -3,7 +3,7 @@
 # `benchmarks` namespace package resolves when a bench runs standalone.
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench bench-placement bench-search bench-traffic
+.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -31,3 +31,7 @@ bench-search:
 # (-> BENCH_traffic.json).
 bench-traffic:
 	$(PY) benchmarks/bench_traffic.py
+
+# Fault-injection + closed-loop self-healing (-> BENCH_faults.json).
+bench-faults:
+	$(PY) benchmarks/bench_faults.py

@@ -1,0 +1,187 @@
+"""Fault-injection + closed-loop self-healing benchmark.
+
+Two halves, mirroring the fault subsystem's two layers:
+
+  * engine overhead — the fault-frame path (`simulate` with attached
+    frames, `sweep_faults` grids) against the clean path on the same
+    trace: the frames ride the same masked scan, so the warm overhead
+    should be a few percent, and a K-frame fault grid should cost one
+    vmapped call, not K.
+  * closed loop — a fault storm kills the routers under half the live
+    gateways mid-stream; the `ResilienceRuntime` detects the breach from
+    chunk telemetry, re-places gateways off the dead routers (blocked
+    device search), swaps the placement live, and pays the PCM bill.
+    Reported: detection latency (chunks from onset to the heal firing),
+    recovery time (chunks from onset back under the 10% band), availability
+    (fraction of chunks inside the band over the whole storm run), and the
+    physical recovery cost (PCM nJ, stall cycles, post-heal power delta).
+
+Results land in benchmarks/results/BENCH_faults.json with an appended
+`history` entry per run (commit-stamped).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import faults, traffic
+from repro.core.simulator import (SimSession, clear_engine_caches,
+                                  engine_stats, reset_engine_stats,
+                                  simulate, sweep_faults)
+from repro.serve.resilience import ResiliencePolicy, ResilienceRuntime
+from benchmarks.common import (fixed_gateway_config, save_json_history,
+                               timed_s, warm_median)
+
+CHUNK = 8
+T_TOTAL = 64
+STORM_T0 = 32
+BAND = 0.10              # the acceptance band: within 10% of pre-fault
+
+
+def _trace(seed: int, t: int = T_TOTAL) -> dict:
+    # x2 load so losing gateways is a real capacity loss (see
+    # tests/test_resilience.py calibration note).
+    tr = traffic.generate_trace("dedup", t, jax.random.PRNGKey(seed))
+    for k in ("ext_load", "mem_load", "int_load"):
+        tr[k] = jnp.asarray(tr[k]) * 2.0
+    return tr
+
+
+def _engine_overhead(sim, tr) -> dict:
+    """Warm fault-path cost vs the clean path on identical traffic."""
+    clean_frame = faults.no_faults(sim.cfg, T_TOTAL)
+    grid = [clean_frame,
+            faults.compile_faults([faults.GatewayFault(start=8, chiplet=0,
+                                                       slot=0)], sim.cfg,
+                                  T_TOTAL),
+            faults.compile_faults([faults.LossDrift(start=0,
+                                                    db_per_interval=0.2)],
+                                  sim.cfg, T_TOTAL),
+            faults.compile_faults([faults.LinkFlap(start=16, chiplet=1,
+                                                   p_down=0.5, p_up=0.5)],
+                                  sim.cfg, T_TOTAL)]
+    attached = faults.attach_faults(tr, clean_frame)
+
+    simulate(tr, sim)                               # warm both paths
+    simulate(attached, sim)
+    clean_s = warm_median(
+        lambda: simulate(tr, sim)["summary"]["mean_latency"])
+    fault_s = warm_median(
+        lambda: simulate(attached, sim)["summary"]["mean_latency"])
+
+    reset_engine_stats()
+    grid_cold_s = timed_s(
+        lambda: sweep_faults(tr, sim, grid)["summary"]["mean_latency"])
+    grid_traces = engine_stats()["simulate_traces"]
+    grid_warm_s = warm_median(
+        lambda: sweep_faults(tr, sim, grid)["summary"]["mean_latency"])
+    return {
+        "clean_warm_s": clean_s,
+        "fault_warm_s": fault_s,
+        "fault_overhead_frac": fault_s / clean_s - 1.0,
+        "grid_k": len(grid),
+        "grid_cold_s": grid_cold_s,
+        "grid_warm_s": grid_warm_s,
+        "grid_scan_body_traces": grid_traces,
+        "grid_warm_per_frame_s": grid_warm_s / len(grid),
+    }
+
+
+def _closed_loop(sim, tr, seed: int) -> dict:
+    """One fault-storm run under the ResilienceRuntime."""
+    runtime = ResilienceRuntime(
+        SimSession.init(sim),
+        ResiliencePolicy(threshold_frac=BAND, hysteresis=2, cooldown=1,
+                         search_generations=8, search_population=8,
+                         search_seed=seed))
+    victims = runtime.session.placement[:2]
+    injector = faults.FaultInjector(
+        [faults.GatewayFault(start=STORM_T0, position=p) for p in victims],
+        T_TOTAL, seed=seed)
+
+    heal_chunk, prefault_baseline, heal_s = None, None, 0.0
+    for i, ch in enumerate(traffic.chunk_trace(tr, CHUNK)):
+        t0 = i * CHUNK
+        if t0 == STORM_T0:
+            prefault_baseline = runtime.baseline
+        faulted = injector.inject(ch, runtime.current_cfg, t0)
+        runtime.report_failed_positions(injector.failed_positions(t0))
+        out, dt = _timed_observe(runtime, faulted)
+        if out["healed"] is not None and heal_chunk is None:
+            heal_chunk, heal_s = i, dt
+
+    storm_chunk = STORM_T0 // CHUNK
+    lats = [e["latency"] for e in runtime.events]
+    band_hi = (1.0 + BAND) * prefault_baseline
+    in_band = [lat <= band_hi for lat in lats]
+    recovery = next((i - storm_chunk for i in range(storm_chunk, len(lats))
+                     if in_band[i]), None)
+    return {
+        "storm_chunk": storm_chunk,
+        "heal_chunk": heal_chunk,
+        "detection_latency_chunks":
+            None if heal_chunk is None else heal_chunk - storm_chunk,
+        "recovery_time_chunks": recovery,
+        "availability": float(np.mean(in_band)),
+        "prefault_baseline": prefault_baseline,
+        "post_heal_mean_latency":
+            float(np.mean(lats[heal_chunk + 1:]))
+            if heal_chunk is not None and heal_chunk + 1 < len(lats)
+            else None,
+        "replacements": runtime.replacements,
+        "total_pcm_nj": runtime.total_pcm_nj,
+        "total_stall_cycles": runtime.total_stall_cycles,
+        "heal_dispatch_s": heal_s,
+    }
+
+
+def _timed_observe(runtime, chunk):
+    import time
+
+    t0 = time.perf_counter()
+    out = runtime.observe(chunk)
+    return out, time.perf_counter() - t0
+
+
+def run(seed: int = 0) -> dict:
+    sim = fixed_gateway_config(4)
+    tr = _trace(seed)
+
+    clear_engine_caches()
+    overhead = _engine_overhead(sim, tr)
+    loop = _closed_loop(sim, tr, seed)
+
+    # Energy overhead of surviving the storm: the faulted closed-loop run's
+    # mean power vs the fault-free run of the same traffic (spare routing
+    # is longer + the PCM switches are extra energy on top).
+    clean_power = float(simulate(tr, sim)["summary"]["mean_power_mw"])
+    result = {
+        "engine": overhead,
+        "closed_loop": loop,
+        "clean_mean_power_mw": clean_power,
+        "recovered_within_band":
+            loop["post_heal_mean_latency"] is not None
+            and loop["post_heal_mean_latency"]
+            <= (1.0 + BAND) * loop["prefault_baseline"],
+        "chunk": CHUNK,
+        "t_total": T_TOTAL,
+        "band_frac": BAND,
+    }
+    save_json_history("BENCH_faults.json", result)
+    return result
+
+
+if __name__ == "__main__":
+    r = run()
+    e, c = r["engine"], r["closed_loop"]
+    print(f"fault path: warm overhead {e['fault_overhead_frac']:+.1%} vs "
+          f"clean ({e['clean_warm_s']:.3f}s -> {e['fault_warm_s']:.3f}s); "
+          f"{e['grid_k']}-frame grid {e['grid_scan_body_traces']} scan-body "
+          f"trace, warm {e['grid_warm_per_frame_s'] * 1e3:.1f}ms/frame")
+    print(f"closed loop: storm at chunk {c['storm_chunk']}, detected+healed "
+          f"in {c['detection_latency_chunks']} chunk(s), recovered in "
+          f"{c['recovery_time_chunks']} chunk(s), availability "
+          f"{c['availability']:.0%}, bill {c['total_pcm_nj']:.0f} nJ PCM + "
+          f"{c['total_stall_cycles']} stall cycles "
+          f"(recovered_within_band={r['recovered_within_band']})")

@@ -72,13 +72,37 @@ def save_json(name: str, data) -> Path:
     return path
 
 
+def git_commit() -> "str | None":
+    """Short hash of the checked-out commit, or None outside a git repo.
+
+    Cached per process — `save_json_history` stamps it on every entry so a
+    BENCH_*.json trajectory is attributable to the PR that produced it.
+    """
+    global _GIT_COMMIT
+    if _GIT_COMMIT is _UNSET:
+        import subprocess
+        try:
+            _GIT_COMMIT = subprocess.check_output(
+                ["git", "rev-parse", "--short", "HEAD"],
+                cwd=Path(__file__).resolve().parent,
+                stderr=subprocess.DEVNULL, text=True).strip() or None
+        except (OSError, subprocess.CalledProcessError):
+            _GIT_COMMIT = None
+    return _GIT_COMMIT
+
+
+_UNSET = object()
+_GIT_COMMIT = _UNSET
+
+
 def save_json_history(name: str, data: dict) -> Path:
     """Write `data` but APPEND this run to the file's `history` list.
 
     The BENCH_*.json files are the cross-PR perf trajectory: the top-level
     keys always reflect the latest run, while `history` accumulates one
-    timestamped entry per run (latest last), surviving overwrites. Corrupt
-    or legacy files without a history list start a fresh one.
+    entry per run (latest last), surviving overwrites, each stamped with
+    the UTC timestamp and the git commit it ran at. Corrupt or legacy
+    files without a history list start a fresh one.
     """
     import datetime
 
@@ -93,6 +117,7 @@ def save_json_history(name: str, data: dict) -> Path:
     entry = {k: v for k, v in data.items() if k != "history"}
     entry["timestamp"] = datetime.datetime.now(
         datetime.timezone.utc).isoformat(timespec="seconds")
+    entry["commit"] = git_commit()
     out = dict(data)
     out["history"] = history + [entry]
     return save_json(name, out)

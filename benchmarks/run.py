@@ -24,10 +24,10 @@ def _run(name, fn, derived_fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_engine, bench_placement, bench_search,
-                            bench_topology, bench_traffic, fig10_lm_dse,
-                            fig11_main, fig12_adaptivity, fig13_residency,
-                            table2_overhead, lane_schedule)
+    from benchmarks import (bench_engine, bench_faults, bench_placement,
+                            bench_search, bench_topology, bench_traffic,
+                            fig10_lm_dse, fig11_main, fig12_adaptivity,
+                            fig13_residency, table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
     eng = _run("bench_engine", bench_engine.run,
@@ -101,6 +101,20 @@ def main() -> None:
     _run("lane_schedule", lane_schedule.run,
          lambda r: (f"lanes={r['resipi']['mean_lanes']:.2f},"
                     f"power={r['resipi']['power_mw']:.0f}mW"))
+    def _faults_derived(r):
+        c = r["closed_loop"]
+        return (f"detect={c['detection_latency_chunks']}chunk,"
+                f"avail={c['availability']:.0%},"
+                f"recovered={r['recovered_within_band']}")
+
+    flt = _run("bench_faults", bench_faults.run, _faults_derived)
+    c = flt["closed_loop"]
+    print(f"# faults: storm detected+healed in "
+          f"{c['detection_latency_chunks']} chunk(s), recovered in "
+          f"{c['recovery_time_chunks']} (availability "
+          f"{c['availability']:.0%}); PCM bill {c['total_pcm_nj']:.0f} nJ, "
+          f"fault-path warm overhead "
+          f"{flt['engine']['fault_overhead_frac']:+.1%}", flush=True)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,10 @@
      and a chunked `SimSession` bit-matches the one-shot records,
   5. the device-resident placement search: a whole annealed search is ONE
      scan-body trace and ONE dispatch, and its best score matches a fresh
-     host-oracle `simulate` of the found placement (device/host parity).
+     host-oracle `simulate` of the found placement (device/host parity),
+  6. the fault-injection path: a fault frame masked at t == T matches the
+     fault-free `simulate`, a firing fault reuses the same executable, and
+     the fault grid vmaps as one more sweep axis (one scan-body trace).
 
 `--smoke-only` skips the pytest stage (used by CI wrappers that already
 ran the suite, and for quick local iteration).
@@ -199,6 +202,62 @@ def search_smoke() -> None:
           f"(4x6 annealed search, 1 dispatch, oracle parity holds)")
 
 
+def fault_smoke() -> None:
+    """Compiled fault path: one trace per entry point + never-fire parity.
+
+    The parity half is the fault-masking contract on CPU: a fault frame
+    whose window starts at t == T (so it never fires inside the simulated
+    horizon) must match the fault-free `simulate` — same executable
+    discipline as the padded-lane invariants above.
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import faults, traffic
+    from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                      reset_engine_stats, simulate,
+                                      sweep_faults)
+
+    t0 = time.time()
+    base = SimConfig().with_arch(Arch.RESIPI)
+    T = 16
+    tr = traffic.generate_trace("dedup", T, jax.random.PRNGKey(3))
+    clean = simulate(tr, base)["summary"]
+
+    # Fault masked at t == T: in-window never fires -> fault-free parity.
+    masked = faults.compile_faults(
+        [faults.GatewayFault(start=T, chiplet=0, slot=0),
+         faults.LossDrift(start=T, db_per_interval=0.5)], base.cfg, T)
+    reset_engine_stats()
+    out = simulate(faults.attach_faults(tr, masked), base)["summary"]
+    assert engine_stats()["simulate_traces"] == 1
+    for k in ("mean_latency", "mean_power_mw", "mean_energy"):
+        np.testing.assert_allclose(
+            np.asarray(out[k]), np.asarray(clean[k]), rtol=1e-6,
+            err_msg=f"never-firing fault frame diverged from fault-free "
+                    f"simulate on {k}")
+
+    # A firing fault reuses the same executable and moves the result.
+    firing = faults.compile_faults(
+        [faults.GatewayFault(start=2, chiplet=0, slot=0)], base.cfg, T)
+    before = engine_stats()["simulate_traces"]
+    hurt = simulate(faults.attach_faults(tr, firing), base)["summary"]
+    assert engine_stats()["simulate_traces"] == before, \
+        "a different fault pattern re-traced the fault path"
+    assert float(hurt["mean_gateways"]) < float(clean["mean_gateways"]), \
+        "hard gateway failure did not reduce effective gateways"
+
+    # The fault grid is one more vmapped axis: K frames, one new trace.
+    reset_engine_stats()
+    sw = sweep_faults(tr, base, [masked, firing])
+    assert engine_stats()["simulate_traces"] == 1
+    lat = np.asarray(sw["summary"]["mean_latency"])
+    np.testing.assert_allclose(lat[0], np.asarray(clean["mean_latency"]),
+                               rtol=1e-6)
+    print(f"fault smoke OK in {time.time() - t0:.1f}s "
+          f"(t==T parity, 1 trace per entry point, fault grid vmaps)")
+
+
 def main(argv) -> int:
     if "--smoke-only" not in argv:
         rc = subprocess.call(
@@ -210,6 +269,7 @@ def main(argv) -> int:
     placement_sweep_smoke()
     traffic_stream_smoke()
     search_smoke()
+    fault_smoke()
     print("verify OK")
     return 0
 

@@ -5,9 +5,13 @@ noc, traffic, simulator — the 2.5D photonic-interposer network of the paper.
 
 Level 2 (framework integration): reconfig_runtime — the same controller
 driving communication-lane reconfiguration in the multi-pod trainer.
+
+Robustness: faults — frozen FaultSpecs compiled to time-varying validity/
+loss frames that ride the same masked scan (never-firing frames match the
+fault-free run bit-for-bit); serve.resilience closes the loop.
 """
 from repro.core import constants, photonics, gateway_controller, selection
-from repro.core import noc, traffic, simulator, reconfig_runtime
+from repro.core import noc, traffic, simulator, reconfig_runtime, faults
 
 __all__ = ["constants", "photonics", "gateway_controller", "selection",
-           "noc", "traffic", "simulator", "reconfig_runtime"]
+           "noc", "traffic", "simulator", "reconfig_runtime", "faults"]

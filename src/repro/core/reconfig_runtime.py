@@ -188,6 +188,12 @@ def lane_energy_report(lanes_history: jax.Array, cfg: LaneConfig) -> dict:
     Lanes map to gateways with 4 'wavelengths' each; idle lanes are
     PCM-gated. Reconfigurations pay the 2 nJ PCM cost each. Units are model
     mW/nJ — used for *relative* schedule comparisons, as in Fig. 11.
+
+    Besides the scalar aggregates, the report carries the cumulative audit
+    trail that `epoch_update`'s `reconfigured` records feed: per-epoch
+    running `cum_switches` / `cum_pcm_nj` ([T], epoch t includes the switch
+    INTO epoch t), plus the `switch_count` total — so a lane schedule's
+    reconfiguration history is auditable from the report alone.
     """
     max_l = cfg.max_lanes
 
@@ -198,7 +204,15 @@ def lane_energy_report(lanes_history: jax.Array, cfg: LaneConfig) -> dict:
         return pw["total_mw"]
 
     powers = jax.vmap(power_of)(lanes_history)
-    switches = jnp.sum((jnp.diff(lanes_history) != 0).astype(jnp.float32))
+    changed = (jnp.diff(lanes_history) != 0).astype(jnp.float32)
+    switches = jnp.sum(changed)
+    # Epoch 0 inherits its width (no switch); epoch t>0 switched iff the
+    # width differs from epoch t-1's.
+    cum_switches = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                                    jnp.cumsum(changed)])
     return {"mean_power_mw": jnp.mean(powers),
             "reconfig_nj": switches * PHOTONIC_POWER.pcmc_reconfig_nj,
-            "mean_lanes": jnp.mean(lanes_history.astype(jnp.float32))}
+            "mean_lanes": jnp.mean(lanes_history.astype(jnp.float32)),
+            "switch_count": switches,
+            "cum_switches": cum_switches,
+            "cum_pcm_nj": cum_switches * PHOTONIC_POWER.pcmc_reconfig_nj}

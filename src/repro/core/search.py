@@ -90,19 +90,23 @@ def _mesh_coords(cfg: NetworkConfig) -> jnp.ndarray:
 # categorical sample over the free slots.
 
 def _one_move(pos: jax.Array, i: jax.Array, gumbel: jax.Array,
-              coords: jax.Array, mesh_y: int) -> jax.Array:
+              coords: jax.Array, mesh_y: int,
+              blocked: jax.Array) -> jax.Array:
     """Collision-free single-gateway move (host `mutate` semantics).
 
     Relocates gateway `i` to a router chosen uniformly among the currently
     unoccupied ones (the mover's own slot counts as occupied, exactly like
-    the host loop, so a move never stays in place). Scatter-free on purpose
-    — tiny batched scatters lower poorly on CPU, and this runs per
-    candidate per generation inside the search scan.
+    the host loop, so a move never stays in place). `blocked` [R] marks
+    routers excluded from the proposal space (failed hardware) — they count
+    as permanently occupied. Scatter-free on purpose — tiny batched
+    scatters lower poorly on CPU, and this runs per candidate per
+    generation inside the search scan.
     """
     n_r = coords.shape[0]
     g_max = pos.shape[0]
     flat = pos[:, 0] * mesh_y + pos[:, 1]
     occupied = jnp.any(jnp.arange(n_r)[None, :] == flat[:, None], axis=0)
+    occupied = occupied | (blocked > 0.5)
     j = jnp.argmax(jnp.where(occupied, -jnp.inf, gumbel))
     # No free router (placement fills the mesh): skip the move, exactly
     # like the host loop's empty-free-list break.
@@ -114,11 +118,13 @@ def _one_move(pos: jax.Array, i: jax.Array, gumbel: jax.Array,
 def _propose(parent: jax.Array, restart: jax.Array,
              restart_pos: jax.Array, move_i: jax.Array,
              move_gumbel: jax.Array, moves: jax.Array, coords: jax.Array,
-             cfg: NetworkConfig) -> jax.Array:
+             blocked: jax.Array, cfg: NetworkConfig) -> jax.Array:
     """One candidate: random restart or 1-2 collision-free moves, then
     spread-reordered by the traceable activation rule (host parity)."""
-    m1 = _one_move(parent, move_i[0], move_gumbel[0], coords, cfg.mesh_y)
-    m2 = _one_move(m1, move_i[1], move_gumbel[1], coords, cfg.mesh_y)
+    m1 = _one_move(parent, move_i[0], move_gumbel[0], coords, cfg.mesh_y,
+                   blocked)
+    m2 = _one_move(m1, move_i[1], move_gumbel[1], coords, cfg.mesh_y,
+                   blocked)
     pos = jnp.where(restart, restart_pos, jnp.where(moves > 1, m2, m1))
     return pos[activation_order_jnp(pos, cfg)]
 
@@ -135,9 +141,9 @@ HISTORY_KEYS = ("generation", "parent_score", "best_candidate_score",
 
 def _search_core(carry0: dict, key: jax.Array, ext, mem, intra, ext_frac,
                  t_mask, default_pos: jax.Array, hyper: dict,
-                 ov: Dict[str, jax.Array], *, sim, generations: int,
-                 population: int, objective: str, inject_default: bool,
-                 moves_hi: int) -> dict:
+                 ov: Dict[str, jax.Array], blocked: jax.Array, *, sim,
+                 generations: int, population: int, objective: str,
+                 inject_default: bool, moves_hi: int) -> dict:
     """The whole annealed search as ONE `lax.scan` over generations.
 
     Every generation: propose population-1 candidates on device, build
@@ -159,11 +165,15 @@ def _search_core(carry0: dict, key: jax.Array, ext, mem, intra, ext_frac,
     k_flag, k_perm, k_idx, k_gum, k_acc = jax.random.split(key, 5)
     restart = jax.random.bernoulli(k_flag, hyper["restart_frac"],
                                    (generations, n_prop))
-    perms = jax.random.permutation(
-        k_perm,
-        jnp.broadcast_to(jnp.arange(n_r), (generations, n_prop, n_r)),
-        axis=-1, independent=True)
-    restart_pos = coords[perms[..., :g_max]]   # [T, n_prop, G, 2]
+    # Restart placements: Gumbel-top-k = a uniform sample of g_max routers
+    # WITHOUT replacement over the allowed (non-blocked) ones. With nothing
+    # blocked this is distributionally the random permutation the engine
+    # used pre-faults; blocking `blocked` routers just renormalizes it.
+    rest_gum = jnp.where(blocked[None, None, :] > 0.5, -jnp.inf,
+                         jax.random.gumbel(k_perm,
+                                           (generations, n_prop, n_r)))
+    _, rest_idx = jax.lax.top_k(rest_gum, g_max)
+    restart_pos = coords[rest_idx]             # [T, n_prop, G, 2]
     move_i = jax.random.randint(k_idx, (generations, n_prop, 2), 0, g_max)
     move_gum = jax.random.gumbel(k_gum, (generations, n_prop, 2, n_r))
     acc_u = jax.random.uniform(k_acc, (generations,))
@@ -175,7 +185,7 @@ def _search_core(carry0: dict, key: jax.Array, ext, mem, intra, ext_frac,
         moves = jnp.where(gen < moves_hi, 2, 1)
         props = jax.vmap(
             lambda r, rp, mi, mg: _propose(carry["parent"], r, rp, mi, mg,
-                                           moves, coords, cfg)
+                                           moves, coords, blocked, cfg)
         )(rst, rst_pos, mv_i, mv_gum)
         cands = jnp.concatenate([carry["parent"][None], props])  # [P, G, 2]
         if inject_default:
@@ -261,10 +271,10 @@ _SEARCH_STATICS = ("sim", "generations", "population", "objective",
 @functools.partial(jax.jit, static_argnames=_SEARCH_STATICS,
                    donate_argnums=(0,))
 def _search_jit(carry0, key, ext, mem, intra, ext_frac, t_mask,
-                default_pos, hyper, ov, *, sim, generations, population,
-                objective, inject_default, moves_hi):
+                default_pos, hyper, ov, blocked, *, sim, generations,
+                population, objective, inject_default, moves_hi):
     return _search_core(carry0, key, ext, mem, intra, ext_frac, t_mask,
-                        default_pos, hyper, ov, sim=sim,
+                        default_pos, hyper, ov, blocked, sim=sim,
                         generations=generations, population=population,
                         objective=objective, inject_default=inject_default,
                         moves_hi=moves_hi)
@@ -273,15 +283,16 @@ def _search_jit(carry0, key, ext, mem, intra, ext_frac, t_mask,
 @functools.partial(jax.jit, static_argnames=_SEARCH_STATICS,
                    donate_argnums=(0,))
 def _search_islands_jit(carry0, key, ext, mem, intra, ext_frac, t_mask,
-                        default_pos, hyper, ov, *, sim, generations,
-                        population, objective, inject_default, moves_hi):
+                        default_pos, hyper, ov, blocked, *, sim,
+                        generations, population, objective, inject_default,
+                        moves_hi):
     """K chains, ONE executable: vmap over (carry, key, overrides)."""
     return jax.vmap(
         lambda c0, ks, o: _search_core(
             c0, ks, ext, mem, intra, ext_frac, t_mask, default_pos, hyper,
-            o, sim=sim, generations=generations, population=population,
-            objective=objective, inject_default=inject_default,
-            moves_hi=moves_hi)
+            o, blocked, sim=sim, generations=generations,
+            population=population, objective=objective,
+            inject_default=inject_default, moves_hi=moves_hi)
     )(carry0, key, ov)
 
 
@@ -304,21 +315,83 @@ def _check_search_params(generations: int, population: int,
     check_placement_objective(objective)
 
 
-def _prepare_search(trace: dict, sim, init):
-    """Shared setup: trace arrays, default/init placements, static flags."""
+def repair_placement(placement, blocked_positions, cfg) -> tuple:
+    """Move gateways off blocked routers to the nearest allowed free ones.
+
+    Host-side (numpy) helper for warm-restarting a search from an
+    incumbent that predates a failure: every gateway sitting on a blocked
+    router relocates to the Manhattan-nearest unoccupied allowed router
+    (deterministic: ties break by flat router index). Returns a
+    spread-normalized placement that is valid under `blocked_positions`.
+    """
+    p = list(normalize_placement(placement, cfg))
+    blocked = {(int(x), int(y)) for (x, y) in blocked_positions}
+    occupied = set(p)
+    free = [(x, y) for x in range(cfg.mesh_x) for y in range(cfg.mesh_y)
+            if (x, y) not in blocked and (x, y) not in occupied]
+    for i, pos in enumerate(p):
+        if pos not in blocked:
+            continue
+        if not free:
+            raise ValueError(
+                f"cannot repair placement: {len(blocked)} blocked routers "
+                f"leave no free position for the gateway at {pos}")
+        j = min(range(len(free)),
+                key=lambda k: (abs(free[k][0] - pos[0])
+                               + abs(free[k][1] - pos[1]), k))
+        p[i] = free.pop(j)
+    return normalize_placement(p, cfg, order="spread")
+
+
+def _blocked_mask(blocked_positions, cfg) -> jnp.ndarray:
+    """[R] float mask in `_mesh_coords` flat order (1 = excluded router)."""
+    mask = np.zeros(cfg.mesh_x * cfg.mesh_y, np.float32)
+    for (x, y) in (blocked_positions or ()):
+        x, y = int(x), int(y)
+        if not (0 <= x < cfg.mesh_x and 0 <= y < cfg.mesh_y):
+            raise ValueError(f"blocked position ({x}, {y}) is outside the "
+                             f"{cfg.mesh_x}x{cfg.mesh_y} mesh")
+        mask[x * cfg.mesh_y + y] = 1.0
+    return jnp.asarray(mask)
+
+
+def _prepare_search(trace: dict, sim, init, blocked_positions=None):
+    """Shared setup: trace arrays, default/init placements, static flags.
+
+    Blocked routers shrink the proposal space as a *traced* [R] mask, so
+    every blocked set (including the empty one) shares the same compiled
+    search executable. The scored default placement is repaired off blocked
+    hardware; an `init` occupying a blocked router raises (callers repair
+    explicitly so the warm-restart move cost is attributable).
+    """
     from repro.core import simulator as _sim
 
     arrays = _sim._trace_arrays(trace)
     cfg = sim.cfg
+    blocked = {(int(x), int(y)) for (x, y) in (blocked_positions or ())}
+    g_max = cfg.max_gateways_per_chiplet
+    if cfg.mesh_x * cfg.mesh_y - len(blocked) < g_max:
+        raise ValueError(
+            f"{len(blocked)} blocked routers leave fewer than "
+            f"{g_max} allowed positions on the "
+            f"{cfg.mesh_x}x{cfg.mesh_y} mesh")
     default_p = normalize_placement(resolve_gateway_positions(cfg), cfg)
+    if set(default_p) & blocked:
+        default_p = repair_placement(default_p, blocked, cfg)
     parent_p = default_p if init is None else normalize_placement(init, cfg)
-    if len(parent_p) != cfg.max_gateways_per_chiplet:
+    if set(parent_p) & blocked:
+        raise ValueError(
+            f"init placement occupies blocked routers "
+            f"{sorted(set(parent_p) & blocked)} — repair it first "
+            f"(search.repair_placement)")
+    if len(parent_p) != g_max:
         raise ValueError(
             f"init places {len(parent_p)} gateways but "
-            f"max_gateways_per_chiplet={cfg.max_gateways_per_chiplet}")
+            f"max_gateways_per_chiplet={g_max}")
     inject_default = parent_p != default_p
     return (arrays, jnp.asarray(default_p, jnp.int32),
-            jnp.asarray(parent_p, jnp.int32), default_p, inject_default)
+            jnp.asarray(parent_p, jnp.int32), default_p, inject_default,
+            _blocked_mask(blocked, cfg))
 
 
 def _hyper(temperature, cooling, restart_frac) -> dict:
@@ -347,7 +420,8 @@ def search_placement_device(trace: dict, sim, *,
                             generations: int = 10, population: int = 12,
                             seed: int = 0, init=None,
                             temperature: float = 0.05, cooling: float = 0.7,
-                            restart_frac: float = 0.25) -> dict:
+                            restart_frac: float = 0.25,
+                            blocked_positions=None) -> dict:
     """Device-resident annealed placement search: ONE dispatch per search.
 
     Same searcher semantics and return structure as the host engine (see
@@ -361,12 +435,13 @@ def search_placement_device(trace: dict, sim, *,
 
     _check_search_params(generations, population, objective)
     (ext, mem, intra, ext_frac, t_mask), default_pos, init_pos, default_p, \
-        inject_default = _prepare_search(trace, sim, init)
+        inject_default, blocked = _prepare_search(trace, sim, init,
+                                                  blocked_positions)
 
     res = _search_jit(
         _init_carry(init_pos), jax.random.PRNGKey(seed), ext, mem, intra,
         ext_frac, t_mask, default_pos,
-        _hyper(temperature, cooling, restart_frac), {},
+        _hyper(temperature, cooling, restart_frac), {}, blocked,
         sim=sim, generations=generations, population=population,
         objective=objective, inject_default=inject_default,
         moves_hi=max(1, generations // 3))
@@ -397,7 +472,8 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
                              temperature: float = 0.05,
                              cooling: float = 0.7,
                              restart_frac: float = 0.25,
-                             devices=None, **grids) -> dict:
+                             devices=None, blocked_positions=None,
+                             **grids) -> dict:
     """K independent annealed chains in ONE compiled executable.
 
     Each island runs the full `search_placement_device` chain from its own
@@ -421,7 +497,8 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
 
     _check_search_params(generations, population, objective)
     (ext, mem, intra, ext_frac, t_mask), default_pos, init_pos, default_p, \
-        inject_default = _prepare_search(trace, sim, init)
+        inject_default, blocked = _prepare_search(trace, sim, init,
+                                                  blocked_positions)
 
     unknown = set(grids) - set(_sim.SWEEPABLE_FIELDS)
     if unknown:
@@ -477,7 +554,7 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
             res = _search_islands_jit(
                 jax.tree.map(put, carry0), put(keys_s), ext, mem, intra,
                 ext_frac, t_mask, default_pos, hyper,
-                jax.tree.map(put, ov_s), **static)
+                jax.tree.map(put, ov_s), blocked, **static)
             if pad:
                 res = jax.tree.map(lambda a: a[:islands], res)
         except Exception as e:  # pragma: no cover - depends on device layout
@@ -489,7 +566,8 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
                 jnp.arange(islands))
     if res is None:
         res = _search_islands_jit(carry0, keys, ext, mem, intra, ext_frac,
-                                  t_mask, default_pos, hyper, ov, **static)
+                                  t_mask, default_pos, hyper, ov, blocked,
+                                  **static)
     # Counted once per *successful* launch (a failed sharded attempt that
     # fell back above raised before dispatching), preserving the
     # one-search == one-dispatch accounting on every device layout.

@@ -77,6 +77,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import photonics, traffic
+from repro.core.faults import FAULT_KEYS, stack_fault_frames
 from repro.core.constants import (NETWORK, PROWAVES_MAX_WAVELENGTHS,
                                   PROWAVES_MIN_WAVELENGTHS,
                                   RESIPI_WAVELENGTHS, NetworkConfig,
@@ -149,7 +150,8 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
                       int_load: jax.Array, ext_frac: jax.Array,
                       sim: SimConfig, tables: dict,
                       topo: Optional[dict] = None,
-                      t_valid: jax.Array | float = 1.0) -> dict:
+                      t_valid: jax.Array | float = 1.0,
+                      extra_db: Optional[jax.Array] = None) -> dict:
     """Latency/load metrics for one interval given activity (g, lambda).
 
     With `topo` (the padded topology-sweep path) the chiplet axis is padded
@@ -162,6 +164,11 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     latency is NOT zero (the memory term alone yields a finite quotient),
     so every returned metric is multiplied by `t_valid` — a padded tail
     interval contributes exactly zero to every downstream reduction.
+
+    `extra_db` (fault path) is the interval's optical loss-drift term,
+    added to the placement's access loss so the laser power manager
+    compensates for device aging; None (and the 0.0 a never-firing fault
+    frame compiles to) leaves the fault-free math bit-identical.
     """
     noc = sim.noc
     # Per-gateway load after the Fig. 8 balanced selection. ext traffic of a
@@ -198,6 +205,8 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
             else jnp.sum(wavelengths * chip_mask) / nreal
         mesh_hops = topo["mesh_hops"]
         mesh_feed = 2.0 * topo["mesh_x"]
+    if extra_db is not None:
+        access_db = access_db + extra_db
 
     # Destination side: packets land on a uniformly random other chiplet;
     # the destination hop count mixes the other chiplets' activation levels.
@@ -254,7 +263,8 @@ def _prowaves_update(lam: jax.Array, inter_latency: jax.Array,
     return jnp.where(hot, lam_up, jnp.where(cold, lam_dn, lam))
 
 
-def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
+def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None,
+              faulted: bool = False):
     """Build the per-interval scan body for the chosen architecture.
 
     `topo` switches on the padded topology-sweep path: the chiplet/gateway
@@ -263,18 +273,48 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
     geometry, hop tables) are traced values. Padded chiplet lanes hold g=0
     and lambda=0 throughout, so activity masks, power sums, and reconfig
     energy see them as permanently dark gateways.
+
+    `faulted` appends the fault-frame xs (gw_ok [C, G], stuck_on [C, G],
+    drift_db scalar — see repro.core.faults): a failed gateway slot is a
+    dead lane exactly like a padded one — it carries no traffic (the
+    chiplet's capacity drops to the surviving slots), draws no power and
+    charges no reconfig energy — while a stuck-on cell burns power the
+    controller cannot gate, and drift_db erodes the optical budget. An
+    all-healthy frame reproduces the fault-free step bit-for-bit, so the
+    fault executables share every masking invariant with the clean ones.
     """
     cfg, ctl_cfg = sim.cfg, sim.ctl
     interval = float(cfg.reconfig_interval_cycles)
     n_total = cfg.total_gateways
+    gmax = cfg.max_gateways_per_chiplet
     chip_mask = None if topo is None else topo["chip_mask"]
     # Actual (traced) counts for count-dependent power terms; None selects
     # the static-config behavior on the unpadded path.
     gw_count = None if topo is None else topo["total_gateways"]
     n_chips = cfg.n_chiplets if topo is None else topo["n_chiplets"]
 
+    def _lit_mask(g_des: jax.Array, gw_ok: jax.Array,
+                  stuck_on: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """(usable [C, G], powered chain [N_total] bool) under faults.
+
+        usable = slots the controller wants AND whose hardware works;
+        powered = usable OR stuck-on-but-working (a lane the PCM cannot
+        darken still burns laser/ring power); memory gateways are always
+        on. A failed slot is in neither — provably dark and dead.
+        """
+        desired = (jnp.arange(gmax)[None, :]
+                   < g_des[:, None]).astype(jnp.float32)        # [C, G]
+        usable = desired * gw_ok
+        lit = jnp.maximum(usable, stuck_on * gw_ok)
+        mem_on = jnp.ones((cfg.memory_gateways,), jnp.float32)
+        return usable, jnp.concatenate([lit.reshape(-1), mem_on]) > 0.5
+
     def step(state: SimState, tr) -> Tuple[SimState, dict]:
-        ext, mem, intra, ext_frac, t_valid = tr
+        ext, mem, intra, ext_frac, t_valid = tr[:5]
+        if faulted:
+            gw_ok, stuck_on, drift_db = tr[5:]
+        else:
+            gw_ok = stuck_on = drift_db = None
         if sim.arch in (Arch.RESIPI, Arch.RESIPI_ALL):
             g = state.ctl.g
             lam = jnp.float32(sim.wavelengths)
@@ -289,17 +329,31 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
                                topo["g_max"].astype(jnp.int32), 0)
             lam = jnp.float32(1.0)
 
-        m = _interval_metrics(g, lam, ext, mem, intra, ext_frac, sim,
-                              tables, topo, t_valid=t_valid)
+        # Fault-effective capacity: the chiplet only has its usable active
+        # slots; g_eff == g whenever the frame never fires (exact parity).
+        if faulted:
+            usable, active_eff = _lit_mask(g, gw_ok, stuck_on)
+            g_eff = jnp.sum(usable, axis=1).astype(jnp.int32)
+        else:
+            g_eff = g
+
+        m = _interval_metrics(g_eff, lam, ext, mem, intra, ext_frac, sim,
+                              tables, topo, t_valid=t_valid,
+                              extra_db=drift_db)
 
         # --- power ---------------------------------------------------------
-        active = _activity_mask(g, sim)
+        active = active_eff if faulted else _activity_mask(g, sim)
         if sim.arch == Arch.PROWAVES:
             # 1 lit gateway per chiplet + memory gateways, per-chiplet
             # lambdas. Padded chiplet lanes carry lambda=0, so the "wdm"
             # power sums are mask-correct without further masking.
             n_pw = cfg.n_chiplets + cfg.memory_gateways
             w = state.wavelengths.astype(jnp.float32)
+            if faulted:
+                # A failed PROWAVES gateway (slot 0 is the chiplet's only
+                # one) takes its lasers down with it: lambda * gw_ok is 0
+                # for dead chiplets, identity for healthy ones.
+                w = w * gw_ok[:, 0]
             if topo is None:
                 lam_mem_val = jnp.mean(w)
             else:
@@ -330,8 +384,20 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
         reconf_nj = jnp.float32(0.0)
         if sim.arch == Arch.RESIPI:
             packets = ext * interval
+            if faulted:
+                # The controller meters load per USABLE gateway: failures
+                # concentrate the same packets on fewer lanes, so the
+                # measured load rises and the hysteresis law activates
+                # spares on its own (epoch_step divides by the desired g,
+                # hence the g/g_eff rescale; exactly 1.0 when healthy).
+                packets = packets * (g.astype(jnp.float32)
+                                     / jnp.maximum(
+                                         g_eff.astype(jnp.float32), 1.0))
             new_ctl, rec = epoch_step(state.ctl, packets, interval, ctl_cfg)
-            new_active = _activity_mask(new_ctl.g, sim)
+            if faulted:
+                _, new_active = _lit_mask(new_ctl.g, gw_ok, stuck_on)
+            else:
+                new_active = _activity_mask(new_ctl.g, sim)
             reconf_nj = photonics.reconfig_energy_nj(active, new_active)
             new_state = SimState(ctl=new_ctl, wavelengths=state.wavelengths,
                                  prev_active=new_active)
@@ -361,11 +427,22 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None):
         rec = {"latency": m["latency"], "power_mw": pw["total_mw"] * t_valid,
                "laser_mw": pw["laser_mw"] * t_valid, "energy": energy,
                "reconfig_nj": reconf_nj * t_valid,
-               "g": g * t_valid.astype(g.dtype),
+               # "g" reports the EFFECTIVE gateway count (usable active
+               # slots): failed slots count zero in every reduction, like
+               # padded ones. g_eff == g on every fault-free path.
+               "g": g_eff * t_valid.astype(g_eff.dtype),
                "wavelengths": lam_rec * t_valid,
                "gw_load": m["gw_load"],
                "mean_inter_latency": m["mean_inter_latency"],
                "saturated": m["saturated"]}
+        if faulted:
+            # Fault telemetry (fault executables only — extra record keys
+            # never feed _record_sums): the controller's desired g and the
+            # count of desired-but-dead slots per interval.
+            rec["g_desired"] = g * t_valid.astype(g.dtype)
+            rec["failed_slots"] = (jnp.sum(
+                (jnp.arange(gmax)[None, :] < g[:, None]) * (gw_ok < 0.5))
+                .astype(jnp.float32) * t_valid)
         # Masked intervals FREEZE the carry (like the noc_step kernel's
         # frozen cycles): the controller must not react to the fake idle
         # epochs of a padded gap, so a mask-interior gap — a mid-stream
@@ -435,7 +512,9 @@ def clear_engine_caches() -> None:
     for f in (_simulate_jit, _simulate_batch_jit, _sweep_jit,
               _sweep_batch_jit, _sweep_topology_jit,
               _sweep_topology_batch_jit, _sweep_workload_jit,
-              _sweep_workload_topo_jit, _session_chunk_jit):
+              _sweep_workload_topo_jit, _session_chunk_jit,
+              _simulate_faults_jit, _simulate_batch_faults_jit,
+              _sweep_faults_jit, _session_chunk_faults_jit):
         f.clear_cache()
     clear_search_caches()
 
@@ -501,10 +580,11 @@ def _initial_state(sim: SimConfig) -> SimState:
 
 
 def _scan_trace(state: SimState, xs, sim: SimConfig, tables: Optional[dict],
-                topo: Optional[dict]) -> Tuple[SimState, dict]:
+                topo: Optional[dict],
+                faulted: bool = False) -> Tuple[SimState, dict]:
     """Run the per-interval scan; the ONE place the trace counter bumps."""
     _STATS["traces"] += 1
-    step = make_step(sim, tables, topo)
+    step = make_step(sim, tables, topo, faulted=faulted)
     return jax.lax.scan(step, state, xs)
 
 
@@ -575,7 +655,8 @@ def check_placement_objective(objective: str) -> None:
 def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
                    ext_frac: jax.Array, t_mask: jax.Array, sim: SimConfig,
                    tables: dict, ov: Optional[Dict[str, jax.Array]] = None,
-                   topo: Optional[dict] = None) -> dict:
+                   topo: Optional[dict] = None,
+                   faults: Optional[Tuple[jax.Array, ...]] = None) -> dict:
     """Scan body shared by every entry point (single / batch / sweep).
 
     With `topo` the trace/state is padded on the chiplet axis: `sim.cfg`
@@ -618,7 +699,14 @@ def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
             prev_active=jnp.zeros((cfg.total_gateways,), bool))
 
     xs = (ext, mem, intra, jnp.broadcast_to(ext_frac, mem.shape), t_mask)
-    _, recs = _scan_trace(state0, xs, sim, tables, topo)
+    if faults is not None:
+        if topo is not None:
+            raise ValueError("fault frames are not supported on the padded-"
+                             "topology paths (run faults on an unpadded "
+                             "config, or sweep them with sweep_faults)")
+        xs = xs + tuple(faults)
+    _, recs = _scan_trace(state0, xs, sim, tables, topo,
+                          faulted=faults is not None)
 
     # Masked chiplet lanes record lambda=0 and must not dilute the
     # per-chiplet average on padded-topology paths.
@@ -638,10 +726,57 @@ def _trace_arrays(trace: dict) -> Tuple[jax.Array, ...]:
             jnp.asarray(trace["ext_frac"]), t_mask)
 
 
+def _trace_faults(trace: dict) -> Optional[Tuple[jax.Array, ...]]:
+    """The trace's fault frame as scan xs, or None when it carries none.
+
+    Returns (gw_ok [..., T, C, G], stuck_on [..., T, C, G], drift_db
+    [..., T]) in FAULT_KEYS order. A partial frame (some keys missing)
+    raises instead of silently simulating fault-free.
+    """
+    present = [k for k in FAULT_KEYS if k in trace]
+    if not present:
+        return None
+    missing = [k for k in FAULT_KEYS if k not in trace]
+    if missing:
+        raise ValueError(
+            f"trace carries fault keys {present} but is missing {missing} "
+            f"— attach a complete frame with faults.attach_faults")
+    return tuple(jnp.asarray(trace[k], jnp.float32) for k in FAULT_KEYS)
+
+
 @functools.partial(jax.jit, static_argnames=("sim",))
 def _simulate_jit(ext, mem, intra, ext_frac, t_mask, tables, *,
                   sim: SimConfig):
     return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _simulate_faults_jit(ext, mem, intra, ext_frac, t_mask, tables, flt, *,
+                         sim: SimConfig):
+    """Fault twin of `_simulate_jit` (its own executable: the no-fault
+    entry points keep their exact shapes and caches)."""
+    return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables,
+                          faults=flt)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _simulate_batch_faults_jit(ext, mem, intra, ext_frac, t_mask, tables,
+                               flt, *, sim: SimConfig):
+    return jax.vmap(
+        lambda e, m, i, f, t, fl: _simulate_impl(e, m, i, f, t, sim, tables,
+                                                 faults=fl)
+    )(ext, mem, intra, ext_frac, t_mask, flt)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _sweep_faults_jit(ext, mem, intra, ext_frac, t_mask, tables, flt, ov, *,
+                      sim: SimConfig):
+    """K fault frames (zipped with optional K runtime overrides) over one
+    trace — the fault grid vmaps exactly like every other sweep axis."""
+    return jax.vmap(
+        lambda fl, o: _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim,
+                                     tables, o, faults=fl)
+    )(flt, ov)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
@@ -721,6 +856,19 @@ def _session_chunk_jit(state, ext, mem, intra, ext_frac, t_mask, tables, *,
     return new_state, recs, _record_sums(recs, t_mask)
 
 
+@functools.partial(jax.jit, static_argnames=("sim",), donate_argnums=(0,))
+def _session_chunk_faults_jit(state, ext, mem, intra, ext_frac, t_mask,
+                              tables, flt, *, sim: SimConfig):
+    """Fault twin of `_session_chunk_jit`: the chunk's fault-frame slice
+    (aligned by chunk_trace, which slices FAULT_KEYS with the loads) rides
+    as extra scan xs; clean chunks keep their own executable."""
+    t_mask = t_mask.astype(jnp.float32)
+    xs = (ext * t_mask[:, None], mem * t_mask, intra * t_mask[:, None],
+          jnp.broadcast_to(ext_frac, mem.shape), t_mask) + tuple(flt)
+    new_state, recs = _scan_trace(state, xs, sim, tables, None, faulted=True)
+    return new_state, recs, _record_sums(recs, t_mask)
+
+
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
@@ -731,8 +879,17 @@ def simulate(trace: dict, sim: SimConfig) -> dict:
     Compile-once: `sim` is a static jit argument, so a second call with an
     equal config and trace shape re-traces nothing (engine_stats() shows the
     counter), and the selection tables are memoized per NetworkConfig.
+
+    A trace carrying a fault frame (faults.attach_faults) routes to the
+    fault twin of the scan automatically; traces without one never pay for
+    the fault arithmetic and keep their own executables.
     """
     ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    flt = _trace_faults(trace)
+    if flt is not None:
+        return _simulate_faults_jit(ext, mem, intra, ext_frac, t_mask,
+                                    selection_tables_jax(sim.cfg), flt,
+                                    sim=sim)
     return _simulate_jit(ext, mem, intra, ext_frac, t_mask,
                          selection_tables_jax(sim.cfg), sim=sim)
 
@@ -788,8 +945,15 @@ def stack_traces(traces: List[dict], *, pad: bool = False) -> dict:
     masked = pad or ragged or any("t_mask" in tr for tr in traces)
     if masked:
         traces = [traffic.pad_trace(tr, max(lengths)) for tr in traces]
+    n_faulted = sum(_trace_faults(tr) is not None for tr in traces)
+    if n_faulted not in (0, len(traces)):
+        raise ValueError(
+            f"{n_faulted}/{len(traces)} traces carry fault frames; a "
+            f"batch must be uniformly faulted or uniformly clean (attach "
+            f"faults.no_faults frames to the clean ones)")
     keys = ("ext_load", "mem_load", "int_load", "ext_frac") \
-        + (("t_mask",) if masked else ())
+        + (("t_mask",) if masked else ()) \
+        + (FAULT_KEYS if n_faulted else ())
     out = {k: jnp.stack([jnp.asarray(tr[k]) for tr in traces])
            for k in keys}
     out["app"] = [tr.get("app", "?") for tr in traces]
@@ -808,6 +972,11 @@ def simulate_batch(traces, sim: SimConfig) -> dict:
     batch = stack_traces(traces, pad=True) \
         if isinstance(traces, (list, tuple)) else traces
     ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
+    flt = _trace_faults(batch)
+    if flt is not None:
+        return _simulate_batch_faults_jit(ext, mem, intra, ext_frac, t_mask,
+                                          selection_tables_jax(sim.cfg),
+                                          flt, sim=sim)
     return _simulate_batch_jit(ext, mem, intra, ext_frac, t_mask,
                                selection_tables_jax(sim.cfg), sim=sim)
 
@@ -855,6 +1024,50 @@ def sweep_batch(traces, sim: SimConfig, **fields) -> dict:
     ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
     return _sweep_batch_jit(ext, mem, intra, ext_frac, t_mask,
                             selection_tables_jax(sim.cfg), ov, sim=sim)
+
+
+def sweep_faults(trace: dict, sim: SimConfig, frames, **fields) -> dict:
+    """K fault scenarios over one trace in a single compiled vmapped scan.
+
+    `frames` is a list of fault frames (each from `faults.compile_faults`
+    on the same horizon as the trace) or an already-stacked frame dict with
+    a leading [K] axis (`faults.stack_fault_frames`). Optional `**fields`
+    grids (SWEEPABLE_FIELDS, each length K) zip lane-for-lane with the
+    fault axis, so fault scenarios compose with every runtime-override
+    sweep axis. Results carry a leading [K] axis; compilation caches on
+    (trace shape, config, K, swept-field set), not on which faults fire.
+    """
+    if _trace_faults(trace) is not None:
+        raise ValueError(
+            "sweep_faults() takes the fault grid via `frames`; pass a clean "
+            "trace (faults.strip_faults) instead of an attached one")
+    from repro.core.faults import stack_fault_frames as _stack
+    stacked = _stack(frames) if isinstance(frames, (list, tuple)) else frames
+    missing = [k for k in FAULT_KEYS if k not in stacked]
+    if missing:
+        raise ValueError(f"fault frames are missing keys {missing}")
+    flt = tuple(jnp.asarray(stacked[k], jnp.float32) for k in FAULT_KEYS)
+    k = int(flt[0].shape[0])
+    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    t = int(jnp.shape(mem)[0])
+    if int(flt[0].shape[1]) != t:
+        raise ValueError(
+            f"fault frames cover {int(flt[0].shape[1])} intervals but the "
+            f"trace has {t} — compile them with n_intervals={t}")
+    if fields:
+        ov = _check_sweep_fields(fields)
+        k_ov = next(iter(ov.values())).shape[0]
+        if k_ov != k:
+            raise ValueError(
+                f"swept fields have length {k_ov} but there are {k} fault "
+                f"frames — the axes zip lane-for-lane")
+    else:
+        # An empty override pytree has no mapped leaves; the vmap axis size
+        # comes from the fault frame alone.
+        ov = {}
+    return _sweep_faults_jit(ext, mem, intra, ext_frac, t_mask,
+                             selection_tables_jax(sim.cfg), flt, ov,
+                             sim=sim)
 
 
 # ---------------------------------------------------------------------------
@@ -980,6 +1193,13 @@ def _prepare_topology_sweep(sim: SimConfig, grids: dict):
 
 
 def _topo_trace_arrays(trace_or_batch, c_max: int):
+    if _trace_faults(trace_or_batch) is not None:
+        raise ValueError(
+            "fault frames are not supported on the padded-topology paths "
+            "(sweep_topology / shard_sweep): fault frames are compiled "
+            "against ONE topology's [C, G] slot grid and cannot be "
+            "re-padded per grid point. strip_faults(trace) first, or use "
+            "simulate / sweep_faults on a fixed topology.")
     ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace_or_batch)
     if ext.shape[-1] < c_max:
         raise ValueError(
@@ -1184,11 +1404,29 @@ class SimSession:
         self._state = state
         self._tables = tables
         self._sums = None
+        self.placement = normalize_placement(
+            resolve_gateway_positions(sim.cfg), sim.cfg)
 
     @classmethod
     def init(cls, sim: SimConfig) -> "SimSession":
         """Open a session with a fresh simulation state for `sim`."""
         return cls(sim, _initial_state(sim), selection_tables_jax(sim.cfg))
+
+    def swap_placement(self, positions) -> None:
+        """Live gateway re-placement between chunks (zero recompile).
+
+        Placement reaches the executable only through the traced selection
+        tables, so swapping in tables for a new placement reuses every
+        cached chunk executable — this is what makes closed-loop recovery
+        (serve.resilience.ResilienceRuntime) cheap at run time. The caller
+        is responsible for charging the physical cost
+        (faults.placement_reconfig_cost); the carried controller/NoC state
+        streams on uninterrupted, modeling an in-flight reconfiguration.
+        """
+        p = normalize_placement(positions, self.sim.cfg)
+        self._tables = selection_tables_jax(
+            self.sim.cfg.with_placement(p))
+        self.placement = p
 
     @property
     def intervals_seen(self) -> int:
@@ -1210,9 +1448,15 @@ class SimSession:
             raise ValueError(
                 f"step_chunk takes one unbatched trace chunk "
                 f"(ext_load [T, C]), got ext_load {ext.shape}")
-        self._state, recs, sums = _session_chunk_jit(
-            self._state, ext, mem, intra, ext_frac, t_mask, self._tables,
-            sim=self.sim)
+        flt = _trace_faults(chunk)
+        if flt is not None:
+            self._state, recs, sums = _session_chunk_faults_jit(
+                self._state, ext, mem, intra, ext_frac, t_mask,
+                self._tables, flt, sim=self.sim)
+        else:
+            self._state, recs, sums = _session_chunk_jit(
+                self._state, ext, mem, intra, ext_frac, t_mask,
+                self._tables, sim=self.sim)
         self._sums = sums if self._sums is None else jax.tree.map(
             lambda a, b: a + b, self._sums, sums)
         return {"records": recs,
@@ -1296,7 +1540,8 @@ def search_placement(trace: dict, sim: SimConfig, *,
                      generations: int = 10, population: int = 12,
                      seed: int = 0, init=None, temperature: float = 0.05,
                      cooling: float = 0.7, restart_frac: float = 0.25,
-                     engine: str = "device") -> dict:
+                     engine: str = "device",
+                     blocked_positions=None) -> dict:
     """PlaceIT-style annealed gateway-placement search.
 
     Greedy/simulated-annealing hybrid: candidate placements (single-gateway
@@ -1328,6 +1573,12 @@ def search_placement(trace: dict, sim: SimConfig, *,
     Returns {best_placement, best_score, best_summary, default_placement,
     default_score, improvement_frac, history} with one history entry per
     generation (the latency/power/energy trajectory of the search).
+
+    `blocked_positions` excludes router coordinates (e.g. failed hardware
+    reported by faults.FaultInjector) from the whole proposal space —
+    restarts, mutations and the scored default all avoid them. An `init`
+    that occupies a blocked router raises: repair it first
+    (search.repair_placement).
     """
     if engine == "device":
         from repro.core.search import search_placement_device
@@ -1336,7 +1587,7 @@ def search_placement(trace: dict, sim: SimConfig, *,
             trace, sim, objective=objective, generations=generations,
             population=population, seed=seed, init=init,
             temperature=temperature, cooling=cooling,
-            restart_frac=restart_frac)
+            restart_frac=restart_frac, blocked_positions=blocked_positions)
     if engine != "host":
         raise ValueError(f"unknown engine {engine!r} (use 'device' or "
                          f"'host')")
@@ -1346,12 +1597,28 @@ def search_placement(trace: dict, sim: SimConfig, *,
         raise ValueError("generations must be >= 1")
     cfg = sim.cfg
     gmax = cfg.max_gateways_per_chiplet
-    coords = [(x, y) for x in range(cfg.mesh_x) for y in range(cfg.mesh_y)]
+    blocked = {(int(x), int(y)) for (x, y) in (blocked_positions or ())}
+    coords = [(x, y) for x in range(cfg.mesh_x) for y in range(cfg.mesh_y)
+              if (x, y) not in blocked]
+    if len(coords) < gmax:
+        raise ValueError(
+            f"{len(blocked)} blocked routers leave only {len(coords)} "
+            f"allowed positions for {gmax} gateways")
     rng = np.random.RandomState(seed)
 
     default_p = normalize_placement(resolve_gateway_positions(cfg), cfg)
+    if set(default_p) & blocked:
+        # Can't score a default that sits on dead hardware; fall back to a
+        # repaired variant of it as the reference lane.
+        from repro.core.search import repair_placement
+        default_p = repair_placement(default_p, blocked, cfg)
     parent = default_p if init is None \
         else normalize_placement(init, cfg)
+    if set(parent) & blocked:
+        raise ValueError(
+            f"init placement occupies blocked routers "
+            f"{sorted(set(parent) & blocked)} — repair it first "
+            f"(search.repair_placement)")
 
     def random_placement():
         idx = rng.choice(len(coords), size=gmax, replace=False)

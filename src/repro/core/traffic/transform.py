@@ -9,6 +9,7 @@ latency/power/energy reduction (see simulator._simulate_impl).
 """
 from __future__ import annotations
 
+import jax.core as jax_core
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,6 +37,29 @@ def validate_trace(trace, who: str = "trace") -> dict:
             f"{who} is missing {missing}; a trace dict needs {TRACE_KEYS} "
             f"(generate one with repro.core.traffic.generate / "
             f"generate_trace)")
+    # Value sanity: NaN or negative injected loads only surface as garbage
+    # summaries deep inside the compiled scan — reject them here, pre-jit.
+    # Tracers (trace construction inside jit/vmap) have no values to check
+    # and skip; concrete arrays (the common host-side path) are cheap to
+    # scan once at the boundary.
+    for k in TRACE_KEYS:
+        v = trace[k]
+        if isinstance(v, jax_core.Tracer):
+            continue
+        arr = np.asarray(v)
+        if not np.issubdtype(arr.dtype, np.number):
+            raise ValueError(
+                f"{who}[{k!r}] must be numeric, got dtype {arr.dtype}")
+        if np.isnan(arr).any():
+            raise ValueError(
+                f"{who}[{k!r}] contains NaN — injected loads must be "
+                f"finite (the compiled scan would silently propagate "
+                f"NaN into every summary)")
+        if (arr < 0).any():
+            raise ValueError(
+                f"{who}[{k!r}] contains negative values (min "
+                f"{float(arr.min()):g}) — loads are non-negative "
+                f"flit rates")
     return trace
 
 

@@ -32,7 +32,8 @@ LANES = 128   # TPU lane width: the router axis pads to this for compilation
 def _noc_kernel(arrivals_ref, tmask_ref, next_mat_ref, drain_ref, buf_ref,
                 mask_ref, resid_ref, occ_final_ref, drained_ref,
                 occ_scratch, resid_scratch, drained_scratch,
-                *, t_chunk: int, link_rate: float, n_steps: int):
+                *, t_chunk: int, link_rate: float, n_steps: int,
+                tv_mask: bool = False):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -44,7 +45,10 @@ def _noc_kernel(arrivals_ref, tmask_ref, next_mat_ref, drain_ref, buf_ref,
     nmat = next_mat_ref[...].astype(jnp.float32)      # [R, R] one-hot
     drain = drain_ref[...].astype(jnp.float32)        # [1, R] sink rates
     buf = buf_ref[...].astype(jnp.float32)            # [1, R] capacities
-    mask = mask_ref[...].astype(jnp.float32)          # [1, R] valid lanes
+    # Static path: [1, R] lane validity, read once. Time-varying path
+    # (tv_mask, the fault-injection contract): the ref holds this chunk's
+    # [t_chunk, R] rows and each cycle reads its own row.
+    mask_static = None if tv_mask else mask_ref[...].astype(jnp.float32)
 
     def cycle(t, carry):
         occ0, resid, drained = carry
@@ -53,8 +57,11 @@ def _noc_kernel(arrivals_ref, tmask_ref, next_mat_ref, drain_ref, buf_ref,
         # the whole network state, so time-padded batches match their
         # unpadded originals exactly.
         tm = tmask_ref[0, t].astype(jnp.float32)
-        # Dead-lane enforcement: invalid (padded) lanes can never hold or
-        # emit flits, whatever the caller put in their arrival/buffer slots.
+        # Dead-lane enforcement: invalid (padded or faulted-this-cycle)
+        # lanes can never hold or emit flits, whatever the caller put in
+        # their arrival/buffer slots.
+        mask = mask_ref[t, :][None, :].astype(jnp.float32) if tv_mask \
+            else mask_static
         occ = (occ0 + arr) * mask
         send = jnp.minimum(occ, link_rate) * jnp.sign(
             jnp.sum(nmat, axis=1))[None, :]                     # routers only
@@ -74,7 +81,10 @@ def _noc_kernel(arrivals_ref, tmask_ref, next_mat_ref, drain_ref, buf_ref,
         inflow = jax.lax.dot_general(
             moved, nmat, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        occ = occ - moved + inflow
+        # Flits routed INTO a dead lane are lost at the broken link (the
+        # sender already moved them out); on clean paths nothing routes
+        # into a padded lane, so this multiply is exactly x 1.0 there.
+        occ = occ - moved + inflow * mask
         sunk = jnp.minimum(occ, drain)
         occ = occ - sunk
         return (tm * occ + (1.0 - tm) * occ0,
@@ -97,6 +107,7 @@ def _noc_kernel(arrivals_ref, tmask_ref, next_mat_ref, drain_ref, buf_ref,
 def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
                    drain_rate: jax.Array, buf_cap: jax.Array,
                    *, valid_mask: jax.Array | None = None,
+                   valid_mask_t: jax.Array | None = None,
                    t_mask: jax.Array | None = None,
                    t_chunk: int = 256, link_rate: float = 1.0,
                    interpret: bool | None = None,
@@ -114,6 +125,13 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         batch layout leaves garbage in their arrival/buffer slots. This is
         the topology-batching contract — padded router lanes are dead
         lanes, not zero-traffic routers.
+      valid_mask_t: [T, R] 1/0 TIME-VARYING lane-validity mask (None =
+        static lanes only). Row t ANDs with `valid_mask` for cycle t: a
+        lane whose row goes to 0 mid-run (a fault firing) drops its flits
+        and is dead — zero send/hold/residency — for exactly those cycles,
+        then revives empty. An all-ones mask takes the same code path but
+        multiplies by 1.0, so "fault masked at t == T" matches the static
+        fault-free run bit-for-bit (the fault-parity smoke contract).
       t_mask: [T] 1/0 cycle-validity mask (None = all valid). Masked
         cycles FREEZE the network: no arrivals, no movement, no drain, no
         residency accumulation — so mixed-length cycle batches can pad the
@@ -138,10 +156,21 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
     if t_mask is None:
         t_mask = jnp.ones((t,), jnp.float32)
     t_mask = t_mask.astype(jnp.float32)
+    tv = valid_mask_t is not None
+    if tv:
+        if valid_mask_t.shape != (t, r_in):
+            raise ValueError(
+                f"valid_mask_t must be [T, R] = {(t, r_in)}, got "
+                f"{valid_mask_t.shape}")
+        # The static lane mask ANDs in here; the kernel sees ONE combined
+        # per-cycle mask plane.
+        mask_in = valid_mask_t.astype(jnp.float32) * valid_mask[None, :]
     t_pad = (-t) % t_chunk
     if t_pad:       # tail cycles arrive masked-out: frozen, zero residency
         arrivals = jnp.pad(arrivals, ((0, t_pad), (0, 0)))
         t_mask = jnp.pad(t_mask, (0, t_pad))
+        if tv:
+            mask_in = jnp.pad(mask_in, ((0, t_pad), (0, 0)))
         t += t_pad
     pad = (-r_in) % LANES if pad_lanes else 0
     if pad:
@@ -150,10 +179,17 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         drain_rate = jnp.pad(drain_rate, (0, pad))
         buf_cap = jnp.pad(buf_cap, (0, pad))
         valid_mask = jnp.pad(valid_mask, (0, pad))
+        if tv:
+            mask_in = jnp.pad(mask_in, ((0, 0), (0, pad)))
     r = r_in + pad
     n_steps = t // t_chunk
+    if not tv:
+        mask_in = valid_mask[None, :]
     kernel = functools.partial(_noc_kernel, t_chunk=t_chunk,
-                               link_rate=link_rate, n_steps=n_steps)
+                               link_rate=link_rate, n_steps=n_steps,
+                               tv_mask=tv)
+    mask_spec = pl.BlockSpec((t_chunk, r), lambda i: (i, 0)) if tv \
+        else pl.BlockSpec((1, r), lambda i: (0, 0))
     resid, occ, drained = pl.pallas_call(
         kernel,
         grid=(n_steps,),
@@ -166,7 +202,7 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
             pl.BlockSpec((r, r), lambda i: (0, 0)),
             pl.BlockSpec((1, r), lambda i: (0, 0)),
             pl.BlockSpec((1, r), lambda i: (0, 0)),
-            pl.BlockSpec((1, r), lambda i: (0, 0)),
+            mask_spec,
         ],
         out_specs=[
             pl.BlockSpec((1, r), lambda i: (0, 0)),
@@ -177,5 +213,5 @@ def noc_run_pallas(arrivals: jax.Array, next_mat: jax.Array,
         scratch_shapes=[pltpu.VMEM((1, r), jnp.float32)] * 3,
         interpret=interpret,
     )(arrivals, t_mask.reshape(n_steps, t_chunk), next_mat,
-      drain_rate[None, :], buf_cap[None, :], valid_mask[None, :])
+      drain_rate[None, :], buf_cap[None, :], mask_in)
     return resid[0, :r_in], occ[0, :r_in], drained[0, :r_in]

@@ -8,10 +8,13 @@ import jax.numpy as jnp
 def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
                       drain_rate: jax.Array, buf_cap: jax.Array,
                       *, valid_mask: jax.Array | None = None,
+                      valid_mask_t: jax.Array | None = None,
                       t_mask: jax.Array | None = None,
                       link_rate: float = 1.0):
     """Same contract as noc_run_pallas (dead-lane valid_mask + frozen-cycle
-    t_mask: a masked cycle leaves occupancy/residency/drain untouched)."""
+    t_mask + time-varying valid_mask_t [T, R] for mid-run lane faults: a
+    masked cycle leaves occupancy/residency/drain untouched; a lane whose
+    validity row drops to 0 is dead for exactly those cycles)."""
     t, r = arrivals.shape
     nmat = next_mat.astype(jnp.float32)
     is_router = jnp.sign(jnp.sum(nmat, axis=1))
@@ -19,12 +22,14 @@ def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
     buf = buf_cap.astype(jnp.float32)
     mask = jnp.ones((r,), jnp.float32) if valid_mask is None \
         else valid_mask.astype(jnp.float32)
+    maskt = jnp.broadcast_to(mask[None, :], (t, r)) if valid_mask_t is None \
+        else valid_mask_t.astype(jnp.float32) * mask[None, :]
     tmask = jnp.ones((t,), jnp.float32) if t_mask is None \
         else t_mask.astype(jnp.float32)
 
     def cycle(carry, x):
         occ0, resid, drained = carry
-        arr, tm = x
+        arr, tm, mask = x
         occ = (occ0 + arr.astype(jnp.float32)) * mask
         send = jnp.minimum(occ, link_rate) * is_router
         inflow_want = send @ nmat
@@ -35,7 +40,9 @@ def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
         scale_src = nmat @ scale_dst
         moved = send * scale_src
         inflow = moved @ nmat
-        occ = occ - moved + inflow
+        # Flits routed into a dead lane vanish at the broken link (kernel
+        # twin does the same); x 1.0 exactly on clean paths.
+        occ = occ - moved + inflow * mask
         sunk = jnp.minimum(occ, drain)
         occ = occ - sunk
         return (tm * occ + (1.0 - tm) * occ0,
@@ -43,5 +50,5 @@ def reference_noc_run(arrivals: jax.Array, next_mat: jax.Array,
 
     zeros = jnp.zeros((r,), jnp.float32)
     (occ, resid, drained), _ = jax.lax.scan(
-        cycle, (zeros, zeros, zeros), (arrivals, tmask))
+        cycle, (zeros, zeros, zeros), (arrivals, tmask, maskt))
     return resid, occ, drained

@@ -1,0 +1,184 @@
+"""Closed-loop self-healing reconfiguration (the ReSiPI run-time story).
+
+`ResilienceRuntime` closes the loop the open-loop layers left dangling:
+`SimSession` streams telemetry per chunk, a threshold+hysteresis policy
+detects degradation against an EWMA healthy-latency baseline, and a
+detected fault triggers a *warm-restarted* device placement search
+(`search_placement`, engine="device") seeded from the incumbent placement
+with the failed routers — as reported by the hardware status register
+(`faults.FaultInjector.failed_positions`) — masked out of the proposal
+space. The recovered placement swaps in live (`SimSession.swap_placement`
+is zero-recompile: placement reaches the executable only through traced
+selection tables) and every re-placement is billed its physical PCM
+switching cost (`faults.placement_reconfig_cost`).
+
+The control loop is deliberately host-side and cheap: one float of
+telemetry per chunk crosses the device boundary (the chunk summary the
+session already returns), and the expensive reaction — the search — is a
+single compiled dispatch.
+
+Driven by benchmarks/bench_faults.py (detection latency / recovery time /
+availability under a fault storm) and examples/noc_reconfig_demo.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.faults import placement_reconfig_cost, strip_faults
+from repro.core.search import repair_placement
+from repro.core.simulator import SimSession, search_placement
+
+
+@dataclasses.dataclass(frozen=True)
+class ResiliencePolicy:
+    """When to declare degradation and how hard to search for a fix.
+
+    A chunk breaches when its mean latency exceeds
+    ``(1 + threshold_frac) x baseline``; `hysteresis` consecutive breaches
+    trigger a re-placement (one noisy chunk never does); `cooldown` chunks
+    must pass after a re-placement before the next one (the PCM cells are
+    re-programming and the search needs fresh post-swap telemetry). The
+    baseline is an EWMA over *healthy* chunks only, so it remembers the
+    pre-fault level while the fault is biting — recovery is measured
+    against what the network used to deliver, not against the degraded
+    present.
+    """
+    threshold_frac: float = 0.15
+    hysteresis: int = 2
+    cooldown: int = 2
+    baseline_ewma: float = 0.25
+    search_generations: int = 8
+    search_population: int = 8
+    search_seed: int = 0
+
+    def __post_init__(self):
+        if not self.threshold_frac > 0:
+            raise ValueError(f"threshold_frac must be > 0, got "
+                             f"{self.threshold_frac}")
+        if self.hysteresis < 1:
+            raise ValueError(f"hysteresis must be >= 1, got "
+                             f"{self.hysteresis}")
+        if self.cooldown < 0:
+            raise ValueError(f"cooldown must be >= 0, got {self.cooldown}")
+        if not 0 < self.baseline_ewma <= 1:
+            raise ValueError(f"baseline_ewma must be in (0, 1], got "
+                             f"{self.baseline_ewma}")
+
+
+class ResilienceRuntime:
+    """Watch a `SimSession`, heal it by re-placing gateways around faults.
+
+    Usage (the closed loop, see examples/noc_reconfig_demo.py)::
+
+        runtime = ResilienceRuntime(SimSession.init(sim))
+        for t0, chunk in enumerate_chunks(trace):
+            faulted = injector.inject(chunk, current_cfg, t0)
+            runtime.report_failed_positions(injector.failed_positions(t0))
+            out = runtime.observe(faulted)
+            if out["healed"]:
+                ...  # placement moved; injector re-compiles vs new cfg
+
+    Accounting lives on the instance: `total_pcm_nj` / `total_stall_cycles`
+    accumulate the physical re-placement bill, `events` records one dict
+    per chunk (latency, baseline, breach, heal details) for the
+    detection-latency / recovery-time metrics in BENCH_faults.json.
+    """
+
+    def __init__(self, session: SimSession,
+                 policy: ResiliencePolicy = ResiliencePolicy()):
+        self.session = session
+        self.policy = policy
+        self.baseline: Optional[float] = None
+        self.events: List[dict] = []
+        self.total_pcm_nj = 0.0
+        self.total_stall_cycles = 0
+        self.replacements = 0
+        self._breaches = 0
+        self._cooldown = 0
+        self._blocked: Tuple[Tuple[int, int], ...] = ()
+        self._incumbent = None        # annealer state for warm restarts
+        self._last_clean_chunk: Optional[dict] = None
+
+    @property
+    def current_cfg(self):
+        """NetworkConfig carrying the session's LIVE placement — what a
+        placement-aware fault environment (FaultInjector.inject) should
+        compile against, so position-targeted faults stop biting once the
+        gateways have moved off the dead routers."""
+        return self.session.sim.cfg.with_placement(self.session.placement)
+
+    def report_failed_positions(
+            self, positions: Sequence[Tuple[int, int]]) -> None:
+        """Feed the hardware status register (FaultInjector.failed_positions
+        or a real BMC): routers listed here are masked out of the next
+        search's proposal space."""
+        self._blocked = tuple(sorted(
+            {(int(x), int(y)) for (x, y) in positions}))
+
+    def observe(self, chunk: dict) -> dict:
+        """Stream one chunk; detect degradation; heal when policy fires.
+
+        Returns {records, summary, latency, baseline, breach, healed} —
+        `healed` is None or the heal event dict (old/new placement, search
+        result, PCM bill).
+        """
+        out = self.session.step_chunk(chunk)
+        # Re-placement candidates are scored on the clean traffic model:
+        # the search explores placements for the demand, the fault frame
+        # only ever constrains WHERE via the blocked mask.
+        self._last_clean_chunk = strip_faults(chunk)
+        lat = float(out["summary"]["mean_latency"])
+        p = self.policy
+
+        if self.baseline is None:
+            self.baseline = lat
+        breach = lat > (1.0 + p.threshold_frac) * self.baseline
+        if breach:
+            self._breaches += 1
+        else:
+            self._breaches = 0
+            self.baseline = ((1.0 - p.baseline_ewma) * self.baseline
+                             + p.baseline_ewma * lat)
+
+        healed = None
+        if self._cooldown > 0:
+            self._cooldown -= 1
+        elif self._breaches >= p.hysteresis:
+            healed = self._heal()
+            self._breaches = 0
+            self._cooldown = p.cooldown
+
+        event = {"latency": lat, "baseline": float(self.baseline),
+                 "breach": bool(breach), "healed": healed}
+        self.events.append(event)
+        return dict(out, **event)
+
+    def _heal(self) -> dict:
+        """One live re-placement: warm-restarted blocked search + swap."""
+        p = self.policy
+        sim = self.session.sim
+        old = self.session.placement
+        # Warm restart from where annealing last left off (or from the
+        # live placement on the first heal), repaired off dead routers so
+        # the relocation shows up in the PCM bill, not in a search error.
+        start = self._incumbent if self._incumbent is not None else old
+        init = repair_placement(start, self._blocked, sim.cfg)
+        res = search_placement(
+            self._last_clean_chunk, sim, engine="device",
+            generations=p.search_generations, population=p.search_population,
+            seed=p.search_seed + self.replacements, init=init,
+            blocked_positions=self._blocked)
+        new_p = res["best_placement"]
+        cost = placement_reconfig_cost(old, new_p)
+        self.session.swap_placement(new_p)
+        self._incumbent = res.get("incumbent_placement", new_p)
+        self.total_pcm_nj += cost["pcm_nj"]
+        self.total_stall_cycles += cost["stall_cycles"]
+        self.replacements += 1
+        return {"old_placement": old, "new_placement": new_p,
+                "blocked_positions": self._blocked,
+                "search_best_score": res["best_score"],
+                "moved_gateways": cost["moved_gateways"],
+                "pcm_nj": cost["pcm_nj"],
+                "stall_cycles": cost["stall_cycles"]}

@@ -1,0 +1,173 @@
+"""Runtime fault-tolerance unit tests: Heartbeat, StepGuard, Straggler.
+
+These are the trainer-side counterparts of the interposer fault model in
+tests/test_faults.py: detection is EWMA/threshold-based (like the
+ResilienceRuntime), and the first response is *reconfiguration* (narrow
+lanes across the slow pod) rather than restart — the paper's PCM
+reconfiguration philosophy applied to failure handling.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.reconfig_runtime import (LANE_WIDTHS, LaneConfig,
+                                         nearest_compiled_width)
+from repro.runtime.fault_tolerance import (Heartbeat, StepGuard,
+                                           StragglerMonitor)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat: EWMA step-time watermark, spike -> degraded
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_steady_steps_stay_healthy():
+    hb = Heartbeat(timeout_factor=5.0)
+    assert all(hb.beat(0.1) for _ in range(50))
+    assert not hb.degraded
+
+
+def test_heartbeat_spike_marks_degraded_and_stays_degraded():
+    hb = Heartbeat(timeout_factor=5.0, ewma=0.3)
+    for _ in range(10):
+        assert hb.beat(0.1)
+    assert not hb.beat(1.0)          # 10x the EWMA mean -> degraded
+    assert hb.degraded
+    # Degradation is sticky: the supervisor must checkpoint/restart, a
+    # single later fast step cannot clear it.
+    assert not hb.beat(0.1)
+
+
+def test_heartbeat_first_beat_seeds_the_mean():
+    hb = Heartbeat(timeout_factor=2.0)
+    assert hb.beat(100.0)            # no baseline yet -> healthy by fiat
+    assert hb.beat(150.0)            # 1.5x: under factor
+    assert not hb.beat(10_000.0)
+
+
+def test_heartbeat_ewma_tracks_gradual_slowdown():
+    # A slow drift (each step 5% longer) never crosses 5x the EWMA, so the
+    # run stays healthy — drift is the StragglerMonitor's job, not the
+    # liveness watchdog's.
+    hb = Heartbeat(timeout_factor=5.0, ewma=0.3)
+    t = 0.1
+    for _ in range(60):
+        assert hb.beat(t)
+        t *= 1.05
+    assert not hb.degraded
+
+
+# ---------------------------------------------------------------------------
+# StepGuard: NaN / grad-spike skip-and-continue, bounded by max_skips
+# ---------------------------------------------------------------------------
+
+def test_step_guard_accepts_finite_steps():
+    g = StepGuard()
+    assert all(g.check(1.0, 0.5) for _ in range(20))
+    assert g.skips == 0
+
+
+@pytest.mark.parametrize("loss,gnorm", [
+    (float("nan"), 1.0), (float("inf"), 1.0),
+    (1.0, float("nan")), (1.0, float("inf"))])
+def test_step_guard_skips_non_finite(loss, gnorm):
+    g = StepGuard()
+    g.check(1.0, 1.0)
+    assert g.check(loss, gnorm) is False
+    assert g.skips == 1
+    # A bad step must not poison the EWMA: the next clean step applies.
+    assert g.check(1.0, 1.0) is True
+
+
+def test_step_guard_skips_grad_spike_but_not_first_step():
+    g = StepGuard(grad_spike_factor=50.0)
+    assert g.check(1.0, 1e9) is True       # no EWMA yet: no spike reference
+    g2 = StepGuard(grad_spike_factor=50.0)
+    g2.check(1.0, 1.0)
+    assert g2.check(1.0, 100.0) is False   # 100x the EWMA -> skipped
+    assert g2.skips == 1
+
+
+def test_step_guard_bounded_by_max_skips():
+    g = StepGuard(max_skips=3)
+    g.check(1.0, 1.0)
+    for _ in range(3):
+        assert g.check(float("nan"), 1.0) is False
+    with pytest.raises(RuntimeError, match="bad steps"):
+        g.check(float("nan"), 1.0)
+
+
+def test_step_guard_skip_budget_is_cumulative_not_consecutive():
+    # Interleaved good steps do NOT reset the budget — a slow trickle of
+    # SDC still aborts eventually.
+    g = StepGuard(max_skips=2)
+    g.check(1.0, 1.0)
+    g.check(float("inf"), 1.0)
+    g.check(1.0, 1.0)
+    g.check(float("inf"), 1.0)
+    g.check(1.0, 1.0)
+    with pytest.raises(RuntimeError):
+        g.check(float("inf"), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor: slow-pod detection -> lane narrowing -> escalation
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_slow_pod_and_names_lanes():
+    mon = StragglerMonitor(n_pods=4, threshold=1.3)
+    for step in range(8):
+        for pod in range(4):
+            mon.record(pod, 0.2 if pod != 2 else 0.5)
+    v = mon.epoch_verdict()
+    assert v["slow_pods"] == [2]
+    assert v["narrow_lanes_for"] == [2]
+    assert v["escalate"] == []
+    np.testing.assert_allclose(v["pod_means"][2], 0.5)
+
+
+def test_straggler_healthy_fleet_flags_nothing():
+    mon = StragglerMonitor(n_pods=3)
+    for pod in range(3):
+        mon.record(pod, 0.1)
+    v = mon.epoch_verdict()
+    assert v["slow_pods"] == [] and v["escalate"] == []
+
+
+def test_straggler_escalates_only_after_persistent_slowness():
+    mon = StragglerMonitor(n_pods=2, threshold=1.3, escalate_after=3)
+    for epoch in range(3):
+        mon.record(0, 0.1)
+        mon.record(1, 0.9)
+        v = mon.epoch_verdict()
+        assert v["slow_pods"] == [1]
+        # Reconfiguration-first: lanes narrow every epoch, restart only
+        # once the pod has been slow for escalate_after consecutive epochs.
+        assert v["escalate"] == ([1] if epoch == 2 else [])
+
+
+def test_straggler_recovery_resets_the_escalation_clock():
+    mon = StragglerMonitor(n_pods=2, escalate_after=2)
+    mon.record(0, 0.1)
+    mon.record(1, 0.9)
+    assert mon.epoch_verdict()["slow_pods"] == [1]
+    mon.record(0, 0.1)                      # pod 1 back to fleet speed
+    mon.record(1, 0.1)
+    assert mon.epoch_verdict()["slow_pods"] == []
+    mon.record(0, 0.1)
+    mon.record(1, 0.9)
+    assert mon.epoch_verdict()["escalate"] == []   # clock restarted
+
+
+def test_straggler_verdict_drives_lane_narrowing():
+    """End-to-end response path: slow pod -> snap to a narrower compiled
+    lane width through the ReSiPI controller's pre-compiled table."""
+    cfg = LaneConfig()
+    mon = StragglerMonitor(n_pods=2, threshold=1.3)
+    lanes = cfg.max_lanes
+    mon.record(0, 0.1)
+    mon.record(1, 0.8)
+    v = mon.epoch_verdict()
+    if v["narrow_lanes_for"]:
+        lanes = nearest_compiled_width(max(cfg.min_lanes, lanes // 2))
+    assert lanes in LANE_WIDTHS and lanes < cfg.max_lanes

@@ -105,3 +105,36 @@ def test_laned_psum_identity_outside_shard_map():
     for k in tree:
         np.testing.assert_array_equal(np.asarray(out[k]),
                                       np.asarray(tree[k]))
+
+
+# ---------------------------------------------------------------------------
+# lane_energy_report: cumulative reconfiguration audit trail
+# ---------------------------------------------------------------------------
+
+def test_lane_energy_report_cumulative_audit():
+    from repro.core.constants import PHOTONIC_POWER
+    from repro.core.reconfig_runtime import LaneConfig, lane_energy_report
+
+    hist = jnp.asarray([4, 4, 2, 2, 1, 4, 4], jnp.int32)
+    rep = lane_energy_report(hist, LaneConfig())
+    # 3 width changes: 4->2, 2->1, 1->4.
+    assert float(rep["switch_count"]) == 3.0
+    np.testing.assert_array_equal(
+        np.asarray(rep["cum_switches"]), [0, 0, 1, 1, 2, 3, 3])
+    # Totals are consistent: cum trails end at the scalar aggregates.
+    assert float(rep["cum_switches"][-1]) == float(rep["switch_count"])
+    np.testing.assert_allclose(
+        np.asarray(rep["cum_pcm_nj"]),
+        np.asarray(rep["cum_switches"]) * PHOTONIC_POWER.pcmc_reconfig_nj)
+    np.testing.assert_allclose(float(rep["cum_pcm_nj"][-1]),
+                               float(rep["reconfig_nj"]))
+
+
+def test_lane_energy_report_constant_schedule_is_free():
+    from repro.core.reconfig_runtime import LaneConfig, lane_energy_report
+
+    rep = lane_energy_report(jnp.full((5,), 2, jnp.int32), LaneConfig())
+    assert float(rep["switch_count"]) == 0.0
+    assert float(rep["reconfig_nj"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(rep["cum_pcm_nj"]),
+                                  np.zeros(5, np.float32))

@@ -1,0 +1,261 @@
+"""Closed-loop self-healing tests: detect -> blocked search -> swap -> bill.
+
+The acceptance scenario from the fault-injection issue: a fault storm
+kills routers under live gateways mid-stream; the ResilienceRuntime must
+detect the degradation from chunk telemetry (threshold + hysteresis over
+an EWMA healthy baseline), re-place gateways off the dead routers with a
+warm-restarted device search, swap the placement in live without a
+recompile, re-converge within 10% of the pre-fault latency, and charge
+the physical PCM switching cost for every move.
+
+Everything is seeded and deterministic — no flake tolerance needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults, traffic
+from repro.core.gateway_controller import ControllerConfig
+from repro.core.search import repair_placement
+from repro.core.simulator import Arch, SimConfig, SimSession, engine_stats, \
+    reset_engine_stats
+from repro.serve.resilience import ResiliencePolicy, ResilienceRuntime
+
+CHUNK = 8
+T_TOTAL = 64
+STORM_T0 = 32
+LOAD_SCALE = 2.0
+
+
+def _sim() -> SimConfig:
+    """ReSiPI datapath with the controller pinned at 4 gateways.
+
+    With the adaptive controller at light load, killing 2 of 4 slots is
+    absorbed by spare activation (g_eff unchanged) — correct behavior, but
+    useless for exercising detection. Pinning g=4 makes a dead slot a real
+    capacity loss.
+    """
+    base = SimConfig().with_arch(Arch.RESIPI)
+    return dataclasses.replace(base, ctl=ControllerConfig(
+        l_m=base.ctl.l_m, max_gateways=4, min_gateways=4))
+
+
+def _trace(seed: int = 0, t: int = T_TOTAL) -> dict:
+    # x2 load: enough offered traffic that halving the gateways congests
+    # the survivors past the 10% detection band (calibrated: storm chunks
+    # run 13-18% over baseline, healthy phase noise stays under 5%).
+    tr = traffic.generate_trace("dedup", t, jax.random.PRNGKey(seed))
+    for k in ("ext_load", "mem_load", "int_load"):
+        tr[k] = jnp.asarray(tr[k]) * LOAD_SCALE
+    return tr
+
+
+def _chunks(trace):
+    for i, ch in enumerate(traffic.chunk_trace(trace, CHUNK)):
+        yield i * CHUNK, ch
+
+
+def _storm_policy():
+    # 10% band: wide enough that workload phase noise never double-breaches,
+    # narrow enough that losing half the gateways always does.
+    return ResiliencePolicy(threshold_frac=0.10, hysteresis=2, cooldown=1,
+                            search_generations=4, search_population=6)
+
+
+# ---------------------------------------------------------------------------
+# Policy validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {"threshold_frac": 0.0}, {"threshold_frac": -0.1},
+    {"hysteresis": 0}, {"cooldown": -1},
+    {"baseline_ewma": 0.0}, {"baseline_ewma": 1.5}])
+def test_policy_rejects_bad_parameters(kw):
+    with pytest.raises(ValueError):
+        ResiliencePolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# repair_placement: the deterministic relocation primitive under _heal
+# ---------------------------------------------------------------------------
+
+def test_repair_placement_moves_only_blocked_gateways():
+    sim = SimConfig()
+    runtime = ResilienceRuntime(SimSession.init(sim))
+    placement = runtime.session.placement
+    blocked = (placement[0],)
+    repaired = repair_placement(placement, blocked, sim.cfg)
+    assert blocked[0] not in repaired
+    # Every survivor keeps its router; positions stay unique.
+    assert set(placement) - set(blocked) <= set(repaired)
+    assert len(set(repaired)) == len(repaired) == len(placement)
+    # The relocated gateway lands on the Manhattan-nearest free router.
+    moved = (set(repaired) - set(placement)).pop()
+    free = {(x, y) for x in range(sim.cfg.mesh_x) for y in range(sim.cfg.mesh_y)
+            } - set(placement) - set(blocked)
+    d = lambda a, b: abs(a[0] - b[0]) + abs(a[1] - b[1])
+    assert d(moved, blocked[0]) == min(d(f, blocked[0]) for f in free)
+
+
+def test_repair_placement_is_identity_when_nothing_blocked():
+    sim = SimConfig()
+    placement = SimSession.init(sim).placement
+    assert repair_placement(placement, (), sim.cfg) == placement
+    assert repair_placement(placement, ((0, 0),), sim.cfg) == placement \
+        or (0, 0) in placement
+
+
+# ---------------------------------------------------------------------------
+# The control loop itself
+# ---------------------------------------------------------------------------
+
+def test_healthy_stream_never_heals():
+    sim = _sim()
+    tr = _trace()
+    runtime = ResilienceRuntime(SimSession.init(sim))   # default 15% band
+    for _, ch in _chunks(tr):
+        out = runtime.observe(ch)
+        assert out["healed"] is None
+    assert runtime.replacements == 0
+    assert runtime.total_pcm_nj == 0.0
+    assert runtime.baseline is not None and runtime.baseline > 0
+    assert len(runtime.events) == T_TOTAL // CHUNK
+
+
+def test_report_failed_positions_dedups_and_sorts():
+    runtime = ResilienceRuntime(SimSession.init(SimConfig()))
+    runtime.report_failed_positions([(3, 1), (0, 2), (3, 1)])
+    assert runtime._blocked == ((0, 2), (3, 1))
+
+
+def test_fault_storm_detect_heal_recover_and_bill():
+    """The full acceptance loop, step by step."""
+    sim = _sim()
+    tr = _trace()
+    runtime = ResilienceRuntime(SimSession.init(sim), _storm_policy())
+    victims = runtime.session.placement[:2]
+    storm = [faults.GatewayFault(start=STORM_T0, position=pos)
+             for pos in victims]
+    injector = faults.FaultInjector(storm, T_TOTAL)
+
+    reset_engine_stats()
+    heal_chunk, prefault_baseline = None, None
+    for t0, ch in _chunks(tr):
+        if t0 == STORM_T0:
+            prefault_baseline = runtime.baseline
+        faulted = injector.inject(ch, runtime.current_cfg, t0)
+        runtime.report_failed_positions(injector.failed_positions(t0))
+        out = runtime.observe(faulted)
+        if out["healed"] is not None and heal_chunk is None:
+            heal_chunk = t0 // CHUNK
+            heal = out["healed"]
+
+    # Detection: the heal fired during the storm, within hysteresis+1
+    # chunks of onset (one to breach, one to confirm, one to fire).
+    assert heal_chunk is not None, "storm was never detected"
+    storm_chunk = STORM_T0 // CHUNK
+    assert storm_chunk <= heal_chunk <= storm_chunk + 3
+
+    # The recovered placement avoids every dead router and is live.
+    new_p = runtime.session.placement
+    assert heal["new_placement"] == new_p
+    assert not (set(new_p) & set(victims)), \
+        f"healed placement {new_p} still uses dead routers {victims}"
+    assert set(heal["blocked_positions"]) == set(victims)
+
+    # Physical bill: every moved gateway pays PCM energy + a stall.
+    assert runtime.replacements >= 1
+    assert heal["moved_gateways"] >= len(victims)
+    assert runtime.total_pcm_nj >= heal["pcm_nj"] > 0.0
+    assert runtime.total_stall_cycles >= 100
+
+    # Recovery: post-heal chunks re-converge within 10% of the pre-fault
+    # baseline (the EWMA frozen during the breach remembers it).
+    post = [e["latency"] for e in runtime.events[heal_chunk + 1:]]
+    assert post, "no post-heal telemetry"
+    assert np.mean(post) <= 1.10 * prefault_baseline, \
+        (np.mean(post), prefault_baseline)
+
+    # The loop never recompiled: chunk stepping traced at most its two
+    # executables (clean + faulted) and the search dispatched compiled.
+    stats = engine_stats()
+    assert stats["simulate_traces"] <= 3, stats
+
+
+def test_one_chunk_glitch_is_absorbed_by_hysteresis():
+    """A transient (single-chunk) fault breaches once; hysteresis=2 holds
+    fire and the baseline recovers on its own — no PCM spent."""
+    sim = _sim()
+    tr = _trace(1, 48)
+    runtime = ResilienceRuntime(
+        SimSession.init(sim),
+        ResiliencePolicy(threshold_frac=0.10, hysteresis=2, cooldown=1,
+                         search_generations=4, search_population=6))
+    victims = runtime.session.placement[:2]
+    glitch = [faults.GatewayFault(start=24, end=24 + CHUNK, position=p)
+              for p in victims]
+    injector = faults.FaultInjector(glitch, 48)
+    for i, ch in enumerate(traffic.chunk_trace(tr, CHUNK)):
+        t0 = i * CHUNK
+        faulted = injector.inject(ch, runtime.current_cfg, t0)
+        runtime.report_failed_positions(injector.failed_positions(t0))
+        runtime.observe(faulted)
+    assert runtime.replacements == 0
+    assert runtime.total_pcm_nj == 0.0
+
+
+def test_cooldown_blocks_back_to_back_heals():
+    """With cooldown=2, a persistent storm triggers ONE heal and then the
+    runtime holds fire for the cooldown window even if breaches continue
+    (it cannot help further once the survivors are placed)."""
+    sim = _sim()
+    tr = _trace()
+    runtime = ResilienceRuntime(
+        SimSession.init(sim),
+        ResiliencePolicy(threshold_frac=0.01, hysteresis=1, cooldown=2,
+                         search_generations=4, search_population=6))
+    victims = runtime.session.placement[:1]
+    injector = faults.FaultInjector(
+        [faults.GatewayFault(start=STORM_T0, position=victims[0])], T_TOTAL)
+    heal_chunks = []
+    for t0, ch in _chunks(tr):
+        faulted = injector.inject(ch, runtime.current_cfg, t0)
+        runtime.report_failed_positions(injector.failed_positions(t0))
+        out = runtime.observe(faulted)
+        if out["healed"] is not None:
+            heal_chunks.append(t0 // CHUNK)
+    for a, b in zip(heal_chunks, heal_chunks[1:]):
+        assert b - a > 2, f"heals {heal_chunks} violate the cooldown"
+
+
+def test_baseline_freezes_during_breach():
+    """The EWMA must not chase the degraded latency: during consecutive
+    breaches the baseline stays at its pre-fault value."""
+    sim = _sim()
+    tr = _trace()
+    runtime = ResilienceRuntime(
+        SimSession.init(sim),
+        # hysteresis high enough that the storm never triggers a heal —
+        # isolates the baseline dynamics.
+        ResiliencePolicy(threshold_frac=0.10, hysteresis=99))
+    victims = runtime.session.placement[:2]
+    injector = faults.FaultInjector(
+        [faults.GatewayFault(start=STORM_T0, position=p) for p in victims],
+        T_TOTAL)
+    baselines = []
+    for t0, ch in _chunks(tr):
+        faulted = injector.inject(ch, runtime.current_cfg, t0)
+        out = runtime.observe(faulted)
+        baselines.append((out["breach"], out["baseline"]))
+    breached = [b for br, b in baselines if br]
+    assert breached, "storm never breached — test setup is wrong"
+    frozen = baselines[STORM_T0 // CHUNK - 1][1]
+    for br, b in baselines[STORM_T0 // CHUNK:]:
+        if br:
+            assert b == pytest.approx(frozen), \
+                "baseline chased the degraded latency"

@@ -1,0 +1,127 @@
+"""Property tests for the validate_trace value gate.
+
+`validate_trace` is the pre-jit front door for every transform and engine
+entry point: malformed values (NaN, negative loads, non-numeric dtypes)
+must be rejected HERE with a named key, because past the boundary the
+compiled scan silently propagates them into every summary. Properties:
+
+  * any well-formed generated trace passes, wherever NaN-free and
+    non-negative — including zeros and large-but-finite loads;
+  * poisoning ANY single element of ANY core array with NaN raises and
+    names the key;
+  * making ANY single element negative raises and names the key;
+  * tracers (inside jit) skip the value scan — validation still succeeds
+    under jit where values are abstract.
+"""
+try:                                     # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal container: use shim
+    from hypothesis_fallback import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import traffic
+from repro.core.traffic.transform import TRACE_KEYS, validate_trace
+
+ARRAY_KEYS = ("ext_load", "mem_load", "int_load")
+
+
+def _trace(seed: int = 0, t: int = 6) -> dict:
+    return traffic.generate_trace("dedup", t, jax.random.PRNGKey(seed))
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       t=st.integers(min_value=1, max_value=16))
+@settings(max_examples=20, deadline=None)
+def test_generated_traces_always_validate(seed, t):
+    tr = _trace(seed, t)
+    assert validate_trace(tr) is tr
+
+
+@given(key=st.sampled_from(ARRAY_KEYS),
+       frac=st.floats(min_value=0.0, max_value=1.0),
+       seed=st.integers(min_value=0, max_value=1000))
+@settings(max_examples=25, deadline=None)
+def test_single_nan_anywhere_is_rejected_and_named(key, frac, seed):
+    tr = {k: np.asarray(v) if k in ARRAY_KEYS else v
+          for k, v in _trace(seed % 7).items()}
+    flat = tr[key].reshape(-1).copy()
+    flat[int(frac * (flat.size - 1))] = np.nan
+    tr[key] = flat.reshape(tr[key].shape)
+    with pytest.raises(ValueError, match=f"{key}.*NaN"):
+        validate_trace(tr)
+
+
+@given(key=st.sampled_from(ARRAY_KEYS),
+       frac=st.floats(min_value=0.0, max_value=1.0),
+       mag=st.floats(min_value=1e-6, max_value=1e6))
+@settings(max_examples=25, deadline=None)
+def test_single_negative_anywhere_is_rejected_and_named(key, frac, mag):
+    tr = {k: np.asarray(v) if k in ARRAY_KEYS else v
+          for k, v in _trace().items()}
+    flat = tr[key].reshape(-1).copy()
+    flat[int(frac * (flat.size - 1))] = -mag
+    tr[key] = flat.reshape(tr[key].shape)
+    with pytest.raises(ValueError, match=f"{key}.*negative"):
+        validate_trace(tr)
+
+
+@given(scale=st.floats(min_value=0.0, max_value=1e12))
+@settings(max_examples=15, deadline=None)
+def test_nonnegative_scaling_keeps_a_trace_valid(scale):
+    # Zero and huge-but-finite loads are legitimate (idle / stress traces):
+    # the gate rejects ill-formed values, not extreme ones.
+    tr = _trace()
+    scaled = dict(tr, **{k: jnp.asarray(tr[k]) * scale for k in ARRAY_KEYS})
+    assert validate_trace(scaled) is scaled
+
+
+def test_nan_ext_frac_is_rejected():
+    tr = dict(_trace(), ext_frac=float("nan"))
+    with pytest.raises(ValueError, match="ext_frac.*NaN"):
+        validate_trace(tr)
+
+
+def test_non_numeric_dtype_is_rejected():
+    tr = dict(_trace())
+    tr["mem_load"] = np.array(["a"] * int(np.shape(tr["mem_load"])[0]))
+    with pytest.raises(ValueError, match="mem_load.*numeric"):
+        validate_trace(tr)
+
+
+def test_missing_key_and_non_dict_still_raise():
+    with pytest.raises(TypeError, match="trace dict"):
+        validate_trace([1, 2, 3])
+    tr = dict(_trace())
+    del tr["int_load"]
+    with pytest.raises(ValueError, match="int_load"):
+        validate_trace(tr)
+
+
+def test_tracers_skip_the_value_scan_under_jit():
+    tr = _trace()
+
+    @jax.jit
+    def scale(ext, mem, intra, frac):
+        t = dict(tr, ext_load=ext, mem_load=mem, int_load=intra,
+                 ext_frac=frac)
+        validate_trace(t)            # abstract values: must not raise
+        return t["ext_load"].sum()
+
+    out = scale(tr["ext_load"], tr["mem_load"], tr["int_load"],
+                jnp.float32(tr["ext_frac"]))
+    assert np.isfinite(float(out))
+
+
+def test_validation_rejects_values_before_the_engine_sees_them():
+    """End-to-end: simulate() refuses a poisoned trace pre-jit."""
+    from repro.core.simulator import SimConfig, simulate
+
+    tr = {k: np.array(v) if k in ARRAY_KEYS else v
+          for k, v in _trace().items()}
+    tr["ext_load"][0, 0] = np.nan
+    with pytest.raises(ValueError, match="NaN"):
+        simulate(tr, SimConfig())
