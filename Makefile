@@ -3,7 +3,7 @@
 # `benchmarks` namespace package resolves when a bench runs standalone.
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults
+.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults bench-serve
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -35,3 +35,8 @@ bench-traffic:
 # Fault-injection + closed-loop self-healing (-> BENCH_faults.json).
 bench-faults:
 	$(PY) benchmarks/bench_faults.py
+
+# Continuous-batching session server: nominal / overload / fault-storm
+# phases (-> BENCH_serve.json).
+bench-serve:
+	$(PY) benchmarks/bench_serve.py

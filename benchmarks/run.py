@@ -25,9 +25,10 @@ def _run(name, fn, derived_fn):
 
 def main() -> None:
     from benchmarks import (bench_engine, bench_faults, bench_placement,
-                            bench_search, bench_topology, bench_traffic,
-                            fig10_lm_dse, fig11_main, fig12_adaptivity,
-                            fig13_residency, table2_overhead, lane_schedule)
+                            bench_search, bench_serve, bench_topology,
+                            bench_traffic, fig10_lm_dse, fig11_main,
+                            fig12_adaptivity, fig13_residency,
+                            table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
     eng = _run("bench_engine", bench_engine.run,
@@ -115,6 +116,25 @@ def main() -> None:
           f"{c['availability']:.0%}); PCM bill {c['total_pcm_nj']:.0f} nJ, "
           f"fault-path warm overhead "
           f"{flt['engine']['fault_overhead_frac']:+.1%}", flush=True)
+
+    def _serve_derived(r):
+        n, o, s = r["nominal"], r["overload"], r["storm"]
+        return (f"{n['sessions_per_s']:.1f}sess/s,"
+                f"bounded={o['queue_bounded']},"
+                f"storm_recovered={s['recovered_within_band']}")
+
+    srv = _run("bench_serve", bench_serve.run, _serve_derived)
+    n, o, s = srv["nominal"], srv["overload"], srv["storm"]
+    print(f"# serve: nominal {n['sessions_per_s']:.1f} sessions/s "
+          f"({n['intervals_per_s']:.0f} intervals/s, p50 "
+          f"{n['p50_chunk_s'] * 1e3:.1f}ms, {n['scan_body_traces']} "
+          f"scan-body trace); overload shed "
+          f"{o['shed_queue_full'] + o['shed_priority']} of "
+          f"{o['submitted']} bounded={o['queue_bounded']}; storm healed "
+          f"tick {s['heal_tick']} availability {s['availability']:.0%} "
+          f"dropped {s['healthy_dropped']} healthy; replay parity "
+          f"{n['parity_clean'] and o['parity_clean'] and s['parity_clean']}",
+          flush=True)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,10 @@
      host-oracle `simulate` of the found placement (device/host parity),
   6. the fault-injection path: a fault frame masked at t == T matches the
      fault-free `simulate`, a firing fault reuses the same executable, and
-     the fault grid vmaps as one more sweep axis (one scan-body trace).
+     the fault grid vmaps as one more sweep axis (one scan-body trace),
+  7. the session server: a short continuous-batching soak — nominal load
+     drops zero healthy sessions on one shared executable, an overload
+     burst sheds by policy with the queue staying bounded.
 
 `--smoke-only` skips the pytest stage (used by CI wrappers that already
 ran the suite, and for quick local iteration).
@@ -258,6 +261,65 @@ def fault_smoke() -> None:
           f"(t==T parity, 1 trace per entry point, fault grid vmaps)")
 
 
+def serve_soak_smoke() -> None:
+    """Session-server soak: shared executable, zero healthy drops at
+    nominal load, nonzero policy shed under an overload burst."""
+    import jax
+    import numpy as np
+
+    from repro.core import traffic
+    from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                      reset_engine_stats)
+    from repro.serve.engine import SessionServer, replay_standalone
+    from repro.serve.policies import ServerPolicy
+    from repro.serve.scheduler import SessionRequest
+
+    t0 = time.time()
+    base = SimConfig().with_arch(Arch.RESIPI)
+
+    # Nominal: a mixed-length mix well inside capacity — every admitted
+    # session completes, the whole run is ONE scan-body trace, and a
+    # sampled session bit-matches its standalone replay.
+    server = SessionServer(base, ServerPolicy(lanes=3, chunk_intervals=6,
+                                              queue_capacity=8))
+    reset_engine_stats()
+    for i in range(5):
+        tr = traffic.generate_trace("dedup", 5 + 3 * i, jax.random.PRNGKey(i))
+        server.submit(SessionRequest(trace=tr, priority=i % 3))
+    server.drain()
+    traces = engine_stats()["simulate_traces"]
+    assert traces <= 1, f"serve soak re-traced per tick: {traces}"
+    m = server.metrics()
+    assert m["completed"] == m["admitted"] == 5, \
+        f"nominal load dropped healthy sessions: {m}"
+    sess = server.completed[0]
+    ref = replay_standalone(base, sess)
+    for k in ("mean_latency", "mean_energy", "valid_intervals"):
+        assert float(ref[k]) == sess.summary()[k], \
+            f"packed lane diverged from standalone replay on {k}"
+
+    # Overload: a burst over queue capacity sheds by policy and the queue
+    # never grows past its bound.
+    over = SessionServer(base, ServerPolicy(lanes=2, chunk_intervals=6,
+                                            queue_capacity=3))
+    for i in range(10):
+        tr = traffic.generate_trace("canneal", 12, jax.random.PRNGKey(i))
+        over.submit(SessionRequest(trace=tr))
+    over.drain()
+    mo = over.metrics()
+    shed = mo["shed_queue_full"] + mo["shed_memory"] + mo["shed_priority"]
+    assert shed > 0, f"overload burst shed nothing: {mo}"
+    depths = [e["queue_depth"] for e in over.events]
+    assert max(depths) <= 3, f"queue grew past capacity: {max(depths)}"
+    assert mo["completed"] == mo["admitted"], \
+        f"overload dropped admitted sessions: {mo}"
+    assert np.isfinite([s.summary()["mean_latency"]
+                        for s in over.sessions.values()]).all()
+    print(f"serve soak smoke OK in {time.time() - t0:.1f}s "
+          f"(1 trace, 0 healthy drops, {shed} shed under overload, "
+          f"replay parity holds)")
+
+
 def main(argv) -> int:
     if "--smoke-only" not in argv:
         rc = subprocess.call(
@@ -270,6 +332,7 @@ def main(argv) -> int:
     traffic_stream_smoke()
     search_smoke()
     fault_smoke()
+    serve_soak_smoke()
     print("verify OK")
     return 0
 

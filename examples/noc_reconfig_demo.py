@@ -7,10 +7,12 @@ itself in a single dispatch (plus `search_placement_islands`: K annealed
 chains x a runtime-knob grid in one executable), sweep a mixed PARSEC +
 synthetic workload set of ragged lengths through one executable
 (`sweep_workload`), stream an unbounded trace through a fixed-memory
-`SimSession`, and finally survive a fault storm: injected router failures
-detected from session telemetry and healed by a live, blocked-search
-re-placement with the PCM switching cost charged (`repro.core.faults` +
-`repro.serve.resilience`).
+`SimSession`, survive a fault storm: injected router failures detected
+from session telemetry and healed by a live, blocked-search re-placement
+with the PCM switching cost charged (`repro.core.faults` +
+`repro.serve.resilience`), and finally serve a multi-tenant session mix
+through the continuous-batching `SessionServer` (admit -> overload shed ->
+fault storm -> heal -> drain, all on one packed executable).
 
     PYTHONPATH=src python examples/noc_reconfig_demo.py
 
@@ -288,6 +290,105 @@ def fault_storm_recovery_walkthrough():
           f"run within 10% of the pre-fault baseline")
 
 
+def session_server_walkthrough():
+    """The serving layer end to end: admit -> overload shed -> fault storm
+    -> heal -> drain.
+
+    A `SessionServer` packs every resident session's next padded chunk
+    into ONE `[lanes, chunk]` executable per tick (t_mask freeze semantics
+    make empty lanes and ragged tails exact, so lane k bit-matches a
+    standalone `SimSession`). Around that ride the robustness knobs: a
+    bounded admission queue that sheds a burst by priority, a mid-serve
+    router fault storm detected from packed-lane telemetry and healed by
+    a blocked re-placement swapped into every lane at once, and a clean
+    drain — zero healthy sessions dropped end to end.
+    """
+    import dataclasses
+
+    from repro.core import faults
+    from repro.core.gateway_controller import ControllerConfig
+    from repro.serve.engine import SessionServer, replay_standalone
+    from repro.serve.policies import (PRIORITY_BATCH, PRIORITY_PREMIUM,
+                                      ServerPolicy)
+    from repro.serve.resilience import ResiliencePolicy
+    from repro.serve.scheduler import SessionRequest
+
+    # Same pinned-g4 / x2-load calibration as the storm walkthrough above.
+    base = SimConfig().with_arch(Arch.RESIPI)
+    sim = dataclasses.replace(base, ctl=ControllerConfig(
+        l_m=base.ctl.l_m, max_gateways=4, min_gateways=4))
+
+    def stream(seed, t):
+        tr = traffic.generate_trace("dedup", t, jax.random.PRNGKey(seed))
+        for k in ("ext_load", "mem_load", "int_load"):
+            tr[k] = jnp.asarray(tr[k]) * 2.0
+        return tr
+
+    policy = ServerPolicy(lanes=2, chunk_intervals=8, queue_capacity=3)
+    victims = SessionServer(sim, policy).placement[:2]
+    env = faults.FaultInjector(
+        [faults.GatewayFault(start=32, position=p) for p in victims], 256)
+    server = SessionServer(
+        sim, policy, fault_env=env,
+        resilience=ResiliencePolicy(threshold_frac=0.10, hysteresis=2,
+                                    cooldown=1, search_generations=4,
+                                    search_population=6))
+
+    print("\nsession server (2 lanes, queue capacity 3, routers "
+          f"{victims[0]}/{victims[1]} die at hardware interval 32):")
+    # Admit: two long streams fill the lanes (one tick admits them), two
+    # more queue up behind.
+    for i in range(2):
+        out = server.submit(SessionRequest(trace=stream(i, 64)))
+        print(f"  submit s{i}: {out['signal']}")
+    server.run(1)
+    for i in range(2, 4):
+        out = server.submit(SessionRequest(trace=stream(i, 64)))
+        print(f"  submit s{i}: {out['signal']}")
+    # Overload: a burst past capacity — premium displaces queued batch
+    # work, the rest sheds at the door with a taxonomy reason.
+    print("  -- burst --")
+    for i, pr in enumerate([PRIORITY_BATCH, PRIORITY_PREMIUM,
+                            PRIORITY_BATCH, PRIORITY_BATCH]):
+        out = server.submit(SessionRequest(trace=stream(10 + i, 16),
+                                           priority=pr))
+        print(f"  submit burst[{i}] (priority {pr}): {out['signal']}"
+              + (f" ({out['reason']})" if out["reason"] else ""))
+
+    server.drain()
+    print("tick | in-flight | queue | deg | latency | breach | action")
+    for e in server.events:
+        lat = "      -" if e["latency"] is None else f"{e['latency']:7.2f}"
+        action = "-"
+        if e.get("healed"):
+            h = e["healed"]
+            if h["moved_gateways"]:
+                action = (f"HEAL: moved {h['moved_gateways']} gateways off "
+                          f"{list(h['blocked_positions'])} "
+                          f"({h['pcm_nj']:.0f} nJ PCM)")
+            else:
+                action = ("re-search: incumbent confirmed (capacity loss "
+                          "is real; 0 nJ)")
+        elif e["breach"]:
+            action = "breach (hysteresis holding)"
+        deg = "  *" if e["degraded"] else "   "    # coalesced double-chunks
+        print(f"{e['tick']:4d} | {e['in_flight']:9d} | "
+              f"{e['queue_depth']:5d} | {deg} | {lat} | "
+              f"{str(e['breach']):6s} | {action}")
+
+    m = server.metrics()
+    sess = server.completed[0]
+    parity = all(
+        float(replay_standalone(sim, sess)[k]) == sess.summary()[k]
+        for k in ("mean_latency", "mean_energy", "valid_intervals"))
+    print(f"drained: {m['completed']}/{m['admitted']} admitted sessions "
+          f"completed ({m['shed_queue_full'] + m['shed_priority']} shed, "
+          f"{m['displaced']} displaced), {m['heals']} heal(s), "
+          f"bill {m['total_pcm_nj']:.0f} nJ PCM")
+    print(f"replay parity: lane-packed {sess.id} bit-matches its "
+          f"standalone SimSession replay = {parity}")
+
+
 def main():
     reset_engine_stats()
     reconfiguration_walkthrough()
@@ -297,6 +398,7 @@ def main():
     mixed_workload_sweep()
     streaming_session_walkthrough()
     fault_storm_recovery_walkthrough()
+    session_server_walkthrough()
 
 
 if __name__ == "__main__":

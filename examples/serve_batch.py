@@ -1,5 +1,5 @@
-"""Batched serving example: prefill + lockstep decode with a KV cache on a
-GQA model (phi4-mini family, smoke scale).
+"""Continuous-batching session-server example: a bursty multi-tenant mix
+over shared lanes, with a deadline and an overload burst that sheds.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -7,10 +7,10 @@ from repro.launch.serve import main as serve_main
 
 
 def main():
-    serve_main(["--arch", "phi4-mini-3.8b", "--smoke",
-                "--requests", "8", "--batch", "4",
-                "--prompt-len", "24", "--new-tokens", "12",
-                "--max-len", "64"])
+    serve_main(["--ticks", "16", "--lanes", "4", "--chunk", "8",
+                "--queue-capacity", "8", "--arrival-rate", "1.5",
+                "--burst-at", "4", "--burst-size", "10",
+                "--deadline", "12"])
 
 
 if __name__ == "__main__":

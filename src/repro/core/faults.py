@@ -335,13 +335,21 @@ class FaultInjector:
     """
 
     def __init__(self, specs: Sequence[FaultSpec], horizon: int, *,
-                 seed: int = 0):
+                 seed: int = 0, cache_size: int = 8):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
+        if cache_size < 1:
+            raise ValueError(f"cache_size must be >= 1, got {cache_size}")
+        import collections
+
         self.specs = tuple(specs)
         self.horizon = int(horizon)
         self.seed = int(seed)
-        self._frames: dict = {}      # placement-keyed compiled frames
+        self.cache_size = int(cache_size)
+        # Placement-keyed compiled frames, LRU-bounded: a long-running
+        # serving loop that keeps re-placing gateways (every heal is a new
+        # placement key) would otherwise grow this dict without bound.
+        self._frames: "collections.OrderedDict" = collections.OrderedDict()
 
     def frame_for(self, cfg: NetworkConfig, t0: int, t1: int) -> dict:
         """The fault frame for intervals [t0, t1) under `cfg`'s placement."""
@@ -349,9 +357,13 @@ class FaultInjector:
             raise ValueError(f"window [{t0}, {t1}) outside horizon "
                              f"{self.horizon}")
         key = normalize_placement(resolve_gateway_positions(cfg), cfg)
-        if key not in self._frames:
+        if key in self._frames:
+            self._frames.move_to_end(key)
+        else:
             self._frames[key] = compile_faults(self.specs, cfg, self.horizon,
                                                seed=self.seed)
+            while len(self._frames) > self.cache_size:
+                self._frames.popitem(last=False)
         full = self._frames[key]
         return {k: full[k][t0:t1] for k in FAULT_KEYS}
 

@@ -514,7 +514,8 @@ def clear_engine_caches() -> None:
               _sweep_topology_batch_jit, _sweep_workload_jit,
               _sweep_workload_topo_jit, _session_chunk_jit,
               _simulate_faults_jit, _simulate_batch_faults_jit,
-              _sweep_faults_jit, _session_chunk_faults_jit):
+              _sweep_faults_jit, _session_chunk_faults_jit,
+              _session_tick_jit, _session_tick_faults_jit):
         f.clear_cache()
     clear_search_caches()
 
@@ -867,6 +868,44 @@ def _session_chunk_faults_jit(state, ext, mem, intra, ext_frac, t_mask,
           jnp.broadcast_to(ext_frac, mem.shape), t_mask) + tuple(flt)
     new_state, recs = _scan_trace(state, xs, sim, tables, None, faulted=True)
     return new_state, recs, _record_sums(recs, t_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _session_tick_jit(states, ext, mem, intra, ext_frac, t_mask, tables, *,
+                      sim: SimConfig):
+    """One continuous-batching server tick: B session carries advance
+    through B masked chunk scans as ONE vmapped executable.
+
+    Lane semantics are exactly `_session_chunk_jit` per lane (the vmap is
+    bit-transparent on CPU — pinned by tests/test_serve.py): a lane whose
+    `t_mask` row is all zeros injects nothing, records zeros, and FREEZES
+    its carry, so empty / backing-off / parked lanes ride along for free
+    and the executable's [B, T] shape never changes across ticks.
+    """
+    def one(st, e, m, i, f, t):
+        t = t.astype(jnp.float32)
+        xs = (e * t[:, None], m * t, i * t[:, None],
+              jnp.broadcast_to(f, m.shape), t)
+        new_state, recs = _scan_trace(st, xs, sim, tables, None)
+        return new_state, recs, _record_sums(recs, t)
+    return jax.vmap(one)(states, ext, mem, intra, ext_frac, t_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("sim",))
+def _session_tick_faults_jit(states, ext, mem, intra, ext_frac, t_mask,
+                             tables, flt, *, sim: SimConfig):
+    """Fault twin of `_session_tick_jit`: the tick's fault frame lives on
+    hardware time and is SHARED by every lane (closed over, not vmapped) —
+    all sessions experience the same interposer this tick. Its own
+    executable, so fault-free serving keeps the clean tick's cache."""
+    def one(st, e, m, i, f, t):
+        t = t.astype(jnp.float32)
+        xs = (e * t[:, None], m * t, i * t[:, None],
+              jnp.broadcast_to(f, m.shape), t) + tuple(flt)
+        new_state, recs = _scan_trace(st, xs, sim, tables, None,
+                                      faulted=True)
+        return new_state, recs, _record_sums(recs, t)
+    return jax.vmap(one)(states, ext, mem, intra, ext_frac, t_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -1484,6 +1523,88 @@ def simulate_stream(chunks, sim: SimConfig) -> dict:
     if n == 0:
         raise ValueError("simulate_stream() got an empty chunk iterable")
     return {"summary": session.summary(), "chunks": n, "session": session}
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching session packing (repro.serve.engine.SessionServer)
+# ---------------------------------------------------------------------------
+
+def init_session_states(sim: SimConfig, lanes: int) -> SimState:
+    """Batched fresh session carries: a SimState pytree with leading [lanes].
+
+    Every lane starts from the same `_initial_state` a standalone
+    `SimSession.init` would hold, so lane k of the batched tick replays a
+    standalone session exactly (the server resets a lane to row k of a
+    fresh batch on every admission).
+    """
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
+    one = _initial_state(sim)
+    return jax.tree.map(lambda a: jnp.stack([a] * lanes), one)
+
+
+def session_tick(states: SimState, batch: dict, tables: dict,
+                 sim: SimConfig, frame=None):
+    """Advance B packed session lanes one chunk: ONE vmapped executable.
+
+    `batch` is a lane-stacked chunk dict: ext_load [B, T, C], mem_load
+    [B, T], int_load [B, T, C], ext_frac [B], t_mask [B, T]. Lane k steps
+    exactly like `SimSession.step_chunk` on the same chunk (bit-parity
+    pinned by tests/test_serve.py); an all-masked lane freezes its carry
+    and contributes zero to every sum, so the server can park empty,
+    retrying, or draining lanes without changing the executable's shape.
+
+    `frame` (optional) is ONE fault frame (gw_ok [T, C, G] / stuck_on
+    [T, C, G] / drift_db [T]) shared by every lane — faults live on
+    hardware time, not session time — routed to the fault twin so clean
+    ticks keep their own executable and exact numerics.
+
+    Returns (new_states, records, sums), each with a leading [B] axis.
+    The carry is NOT donated: the caller may keep the previous states
+    pytree to roll back lanes whose step failed (retry path).
+    """
+    ext = jnp.asarray(batch["ext_load"])
+    mem = jnp.asarray(batch["mem_load"])
+    intra = jnp.asarray(batch["int_load"])
+    ext_frac = jnp.asarray(batch["ext_frac"])
+    t_mask = jnp.asarray(batch["t_mask"], jnp.float32)
+    if ext.ndim != 3 or mem.ndim != 2 or t_mask.ndim != 2:
+        raise ValueError(
+            f"session_tick takes lane-stacked chunks (ext_load [B, T, C], "
+            f"mem_load [B, T], t_mask [B, T]); got ext_load {ext.shape}, "
+            f"mem_load {mem.shape}, t_mask {t_mask.shape}")
+    if frame is None:
+        return _session_tick_jit(states, ext, mem, intra, ext_frac, t_mask,
+                                 tables, sim=sim)
+    missing = [k for k in FAULT_KEYS if k not in frame]
+    if missing:
+        raise ValueError(f"fault frame is missing {missing} "
+                         f"(build it with faults.compile_faults/no_faults)")
+    flt = tuple(jnp.asarray(frame[k], jnp.float32) for k in FAULT_KEYS)
+    if int(flt[0].shape[0]) != int(mem.shape[1]):
+        raise ValueError(
+            f"fault frame covers {int(flt[0].shape[0])} intervals but the "
+            f"tick chunk has {int(mem.shape[1])} — compile the frame at "
+            f"the server's chunk length")
+    return _session_tick_faults_jit(states, ext, mem, intra, ext_frac,
+                                    t_mask, tables, flt, sim=sim)
+
+
+def session_sums_zero() -> dict:
+    """The additive identity of `_record_sums` totals (a session that has
+    served nothing yet): partial summaries of never-served sessions come
+    out well-formed instead of raising."""
+    return {k: jnp.float32(0.0)
+            for k in ("latency", "power_mw", "energy", "gateways",
+                      "wavelengths", "saturated", "reconfig_nj",
+                      "valid_intervals")}
+
+
+def summary_from_sums(sums: dict, n_chiplets: int) -> dict:
+    """Public summary reduction over accumulated `_record_sums` totals —
+    the valid-intervals-only means every session summary (complete OR
+    partial) is computed from."""
+    return _summary_from_sums(sums, n_chiplets)
 
 
 # ---------------------------------------------------------------------------

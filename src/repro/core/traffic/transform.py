@@ -125,14 +125,15 @@ def pad_trace(trace: dict, n_intervals: int) -> dict:
     return out
 
 
-def chunk_trace(trace: dict, size: int):
+def chunk_trace(trace: dict, size: int, *, pad: bool = False):
     """Yield consecutive `size`-interval chunks of a trace (last may be
-    shorter — pad it with `pad_trace(chunk, size)` to reuse a streaming
-    session's steady executable).
+    shorter — pass `pad=True` to zero-pad it to `size` with a `t_mask`,
+    so every chunk reuses a streaming session's steady executable).
 
     Every per-interval key — the core loads, `t_mask`, and any extra array
     whose leading axis is T — is sliced; everything else is carried whole.
-    The streaming companion to `SimSession.step_chunk`.
+    The streaming companion to `SimSession.step_chunk` and the chunk feed
+    of the continuous-batching `SessionServer` (fixed-shape lanes).
     """
     validate_trace(trace)
     if size < 1:
@@ -143,8 +144,9 @@ def chunk_trace(trace: dict, size: int):
              or (hasattr(v, "ndim") and getattr(v, "ndim", 0) >= 1
                  and k != "app" and jnp.shape(v)[0] == t)]
     for s in range(0, t, size):
-        yield {k: (v[s:s + size] if k in per_t else v)
-               for k, v in trace.items()}
+        chunk = {k: (v[s:s + size] if k in per_t else v)
+                 for k, v in trace.items()}
+        yield pad_trace(chunk, size) if pad else chunk
 
 
 def concat_traces(traces: list) -> dict:

@@ -17,6 +17,12 @@ telemetry per chunk crosses the device boundary (the chunk summary the
 session already returns), and the expensive reaction — the search — is a
 single compiled dispatch.
 
+The detection core (`DegradationDetector`) and the reaction core
+(`plan_replacement`) are standalone so the continuous-batching
+`SessionServer` (serve.engine) runs the same closed loop over its packed
+lanes: one detector on the per-tick mean latency, one planned
+re-placement swapped into every lane at once.
+
 Driven by benchmarks/bench_faults.py (detection latency / recovery time /
 availability under a fault storm) and examples/noc_reconfig_demo.py.
 """
@@ -66,6 +72,84 @@ class ResiliencePolicy:
                              f"{self.baseline_ewma}")
 
 
+class DegradationDetector:
+    """The detection half of the closed loop, as a reusable state machine.
+
+    Feed it one latency sample per chunk/tick (`update`); it maintains the
+    healthy-EWMA baseline (frozen while breaching, so recovery is judged
+    against the pre-fault level), counts consecutive breaches against the
+    hysteresis, and reports `fire=True` exactly when the caller should
+    react — at which point the detector arms its own cooldown.
+    """
+
+    def __init__(self, policy: ResiliencePolicy = ResiliencePolicy()):
+        self.policy = policy
+        self.baseline: Optional[float] = None
+        self._breaches = 0
+        self._cooldown = 0
+
+    def in_band(self, latency: float) -> bool:
+        """Is this sample within the acceptance band of the baseline?"""
+        return self.baseline is None or \
+            latency <= (1.0 + self.policy.threshold_frac) * self.baseline
+
+    def update(self, latency: float) -> dict:
+        """One telemetry sample -> {latency, baseline, breach, fire}."""
+        p = self.policy
+        lat = float(latency)
+        if self.baseline is None:
+            self.baseline = lat
+        breach = lat > (1.0 + p.threshold_frac) * self.baseline
+        if breach:
+            self._breaches += 1
+        else:
+            self._breaches = 0
+            self.baseline = ((1.0 - p.baseline_ewma) * self.baseline
+                             + p.baseline_ewma * lat)
+        fire = False
+        if self._cooldown > 0:
+            self._cooldown -= 1
+        elif self._breaches >= p.hysteresis:
+            fire = True
+            self._breaches = 0
+            self._cooldown = p.cooldown
+        return {"latency": lat, "baseline": float(self.baseline),
+                "breach": bool(breach), "fire": fire}
+
+
+def plan_replacement(clean_chunk: dict, sim, current_placement,
+                     blocked: Sequence[Tuple[int, int]],
+                     policy: ResiliencePolicy, *,
+                     incumbent=None, seed_offset: int = 0) -> dict:
+    """The reaction half: one warm-restarted blocked re-placement plan.
+
+    Scores candidates on the CLEAN traffic model (the fault frame only
+    constrains WHERE, via `blocked`), warm-restarts from `incumbent` (or
+    the live placement) repaired off the dead routers, and returns the
+    swap-ready plan with its physical PCM bill. The caller applies it
+    (`SimSession.swap_placement` / `SessionServer` lane-wide swap) and
+    accumulates the accounting.
+    """
+    old = current_placement
+    start = incumbent if incumbent is not None else old
+    init = repair_placement(start, tuple(blocked), sim.cfg)
+    res = search_placement(
+        clean_chunk, sim, engine="device",
+        generations=policy.search_generations,
+        population=policy.search_population,
+        seed=policy.search_seed + seed_offset, init=init,
+        blocked_positions=tuple(blocked))
+    new_p = res["best_placement"]
+    cost = placement_reconfig_cost(old, new_p)
+    return {"old_placement": old, "new_placement": new_p,
+            "incumbent_placement": res.get("incumbent_placement", new_p),
+            "blocked_positions": tuple(blocked),
+            "search_best_score": res["best_score"],
+            "moved_gateways": cost["moved_gateways"],
+            "pcm_nj": cost["pcm_nj"],
+            "stall_cycles": cost["stall_cycles"]}
+
+
 class ResilienceRuntime:
     """Watch a `SimSession`, heal it by re-placing gateways around faults.
 
@@ -89,16 +173,19 @@ class ResilienceRuntime:
                  policy: ResiliencePolicy = ResiliencePolicy()):
         self.session = session
         self.policy = policy
-        self.baseline: Optional[float] = None
+        self.detector = DegradationDetector(policy)
         self.events: List[dict] = []
         self.total_pcm_nj = 0.0
         self.total_stall_cycles = 0
         self.replacements = 0
-        self._breaches = 0
-        self._cooldown = 0
         self._blocked: Tuple[Tuple[int, int], ...] = ()
         self._incumbent = None        # annealer state for warm restarts
         self._last_clean_chunk: Optional[dict] = None
+
+    @property
+    def baseline(self) -> Optional[float]:
+        """Healthy-EWMA latency baseline (the detector's view)."""
+        return self.detector.baseline
 
     @property
     def current_cfg(self):
@@ -128,57 +215,25 @@ class ResilienceRuntime:
         # the search explores placements for the demand, the fault frame
         # only ever constrains WHERE via the blocked mask.
         self._last_clean_chunk = strip_faults(chunk)
-        lat = float(out["summary"]["mean_latency"])
-        p = self.policy
-
-        if self.baseline is None:
-            self.baseline = lat
-        breach = lat > (1.0 + p.threshold_frac) * self.baseline
-        if breach:
-            self._breaches += 1
-        else:
-            self._breaches = 0
-            self.baseline = ((1.0 - p.baseline_ewma) * self.baseline
-                             + p.baseline_ewma * lat)
-
-        healed = None
-        if self._cooldown > 0:
-            self._cooldown -= 1
-        elif self._breaches >= p.hysteresis:
-            healed = self._heal()
-            self._breaches = 0
-            self._cooldown = p.cooldown
-
-        event = {"latency": lat, "baseline": float(self.baseline),
-                 "breach": bool(breach), "healed": healed}
+        det = self.detector.update(float(out["summary"]["mean_latency"]))
+        healed = self._heal() if det["fire"] else None
+        event = {"latency": det["latency"], "baseline": det["baseline"],
+                 "breach": det["breach"], "healed": healed}
         self.events.append(event)
         return dict(out, **event)
 
     def _heal(self) -> dict:
         """One live re-placement: warm-restarted blocked search + swap."""
-        p = self.policy
-        sim = self.session.sim
-        old = self.session.placement
-        # Warm restart from where annealing last left off (or from the
-        # live placement on the first heal), repaired off dead routers so
-        # the relocation shows up in the PCM bill, not in a search error.
-        start = self._incumbent if self._incumbent is not None else old
-        init = repair_placement(start, self._blocked, sim.cfg)
-        res = search_placement(
-            self._last_clean_chunk, sim, engine="device",
-            generations=p.search_generations, population=p.search_population,
-            seed=p.search_seed + self.replacements, init=init,
-            blocked_positions=self._blocked)
-        new_p = res["best_placement"]
-        cost = placement_reconfig_cost(old, new_p)
-        self.session.swap_placement(new_p)
-        self._incumbent = res.get("incumbent_placement", new_p)
-        self.total_pcm_nj += cost["pcm_nj"]
-        self.total_stall_cycles += cost["stall_cycles"]
+        plan = plan_replacement(
+            self._last_clean_chunk, self.session.sim,
+            self.session.placement, self._blocked, self.policy,
+            incumbent=self._incumbent, seed_offset=self.replacements)
+        self.session.swap_placement(plan["new_placement"])
+        self._incumbent = plan["incumbent_placement"]
+        self.total_pcm_nj += plan["pcm_nj"]
+        self.total_stall_cycles += plan["stall_cycles"]
         self.replacements += 1
-        return {"old_placement": old, "new_placement": new_p,
-                "blocked_positions": self._blocked,
-                "search_best_score": res["best_score"],
-                "moved_gateways": cost["moved_gateways"],
-                "pcm_nj": cost["pcm_nj"],
-                "stall_cycles": cost["stall_cycles"]}
+        return {k: plan[k] for k in
+                ("old_placement", "new_placement", "blocked_positions",
+                 "search_best_score", "moved_gateways", "pcm_nj",
+                 "stall_cycles")}

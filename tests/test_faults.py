@@ -322,6 +322,39 @@ def test_fault_injector_chunks_and_status_register():
     assert np.all(np.asarray(chunk["gw_ok"][:, 0, 0]) == 0.0)
 
 
+def test_fault_injector_frame_cache_is_lru_bounded():
+    """The placement-keyed frame cache is LRU with a hard bound: a serving
+    loop that heals repeatedly (every heal = a new placement key) cannot
+    grow it without bound, the least-recently-USED key is the one evicted,
+    and an evicted placement recompiles to an identical frame."""
+    cfg = SimConfig().cfg
+    inj = faults.FaultInjector(
+        [faults.GatewayFault(start=0, chiplet=0, position=(0, 0))], 8,
+        cache_size=2)
+    base = faults.normalize_placement(
+        faults.resolve_gateway_positions(cfg), cfg)
+    placements = [base, ((1, 1), (2, 2), (1, 2), (2, 1)),
+                  ((0, 0), (3, 3), (0, 3), (3, 0))]
+    cfgs = [cfg.with_placement(p) for p in placements]
+
+    first = {k: np.asarray(v)
+             for k, v in inj.frame_for(cfgs[0], 0, 8).items()}
+    inj.frame_for(cfgs[1], 0, 8)
+    assert len(inj._frames) == 2
+    inj.frame_for(cfgs[0], 0, 8)          # touch: placements[0] is now MRU
+    inj.frame_for(cfgs[2], 0, 8)          # evicts placements[1], not [0]
+    assert len(inj._frames) == 2
+    keys = list(inj._frames)
+    assert faults.normalize_placement(placements[0], cfg) in keys
+    assert faults.normalize_placement(placements[1], cfg) not in keys
+    # The evicted placement recompiles bit-identically on re-request.
+    again = inj.frame_for(cfgs[0], 0, 8)
+    for k in first:
+        np.testing.assert_array_equal(first[k], np.asarray(again[k]))
+    with pytest.raises(ValueError, match="cache_size"):
+        faults.FaultInjector([], 8, cache_size=0)
+
+
 def test_placement_reconfig_cost():
     a = ((1, 0), (2, 3), (0, 2), (3, 1))
     b = ((1, 1), (2, 3), (0, 2), (3, 1))
