@@ -3,7 +3,7 @@
 # `benchmarks` namespace package resolves when a bench runs standalone.
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults bench-serve
+.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults bench-serve bench-kernels
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -40,3 +40,8 @@ bench-faults:
 # phases (-> BENCH_serve.json).
 bench-serve:
 	$(PY) benchmarks/bench_serve.py
+
+# Fused epoch_step Pallas body vs the XLA scan body
+# (-> BENCH_kernels.json; interpret off-TPU, compiled on TPU).
+bench-kernels:
+	$(PY) benchmarks/bench_kernels.py

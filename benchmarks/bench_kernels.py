@@ -1,0 +1,92 @@
+"""Kernel benchmark: fused `epoch_step` Pallas body vs the XLA scan body.
+
+Times the same RESIPI workloads through both engines — `SimConfig.
+epoch_kernel=False` (the `lax.scan(make_step)` body) and `=True` (the
+fused `kernels.epoch_step` pallas_call) — as warm-call medians through the
+public `simulate` / `sweep` / `simulate_batch` entry points, so the numbers
+include exactly what users pay: jit dispatch, record assembly, summary
+reductions.
+
+Off-TPU the kernel runs in interpret mode, which is a *correctness* vehicle
+(every grid step is re-evaluated in Python), so the interpret column is
+expected to be slow — it is reported for the trajectory, not as a win. On a
+TPU backend the kernel compiles through Mosaic and the compiled column is
+the number that matters; `backend` in the JSON says which regime a history
+entry measured. Results append to benchmarks/results/BENCH_kernels.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import traffic
+from repro.core.simulator import (SimConfig, clear_engine_caches, simulate,
+                                  simulate_batch, sweep)
+from benchmarks.common import save_json_history, timed_s, warm_median
+
+
+def _engine_pair(run_fn, n_intervals: int) -> dict:
+    """cold/warm seconds + warm intervals/s for scan body vs fused kernel."""
+    out = {}
+    for name, kernel in (("scan_body", False), ("fused_kernel", True)):
+        sim = dataclasses.replace(SimConfig(), epoch_kernel=kernel)
+        clear_engine_caches()
+        cold_s = timed_s(lambda: run_fn(sim))
+        warm_s = warm_median(lambda: run_fn(sim))
+        out[name] = {"cold_s": cold_s, "warm_s": warm_s,
+                     "warm_intervals_per_sec": n_intervals / warm_s}
+    out["warm_ratio_kernel_over_scan"] = (
+        out["fused_kernel"]["warm_s"] / out["scan_body"]["warm_s"])
+    return out
+
+
+def run(n_intervals: int = 96, seed: int = 7) -> dict:
+    key = jax.random.PRNGKey(seed)
+    tr = traffic.generate(
+        traffic.UniformSpec(mean_load=0.03, n_intervals=n_intervals), key)
+    tr_dest = traffic.generate(
+        traffic.PermutationSpec(pattern="transpose", mean_load=0.03,
+                                n_intervals=n_intervals),
+        key, dest=True)
+    batch = [traffic.generate(traffic.UniformSpec(mean_load=0.03,
+                                                  n_intervals=n_intervals),
+                              jax.random.PRNGKey(seed + i))
+             for i in range(8)]
+    lm_grid = jnp.linspace(0.004, 0.032, 16)
+
+    result = {
+        "backend": jax.default_backend(),
+        # off-TPU the pallas_call runs interpreted: correctness regime, the
+        # timing is a floor check, not a speedup claim (see module doc)
+        "kernel_mode": "compiled" if jax.default_backend() == "tpu"
+        else "interpret",
+        "n_intervals": n_intervals,
+        "single": _engine_pair(
+            lambda sim: simulate(tr, sim)["summary"]["mean_latency"],
+            n_intervals),
+        "single_dest": _engine_pair(
+            lambda sim: simulate(tr_dest, sim)["summary"]["mean_latency"],
+            n_intervals),
+        "sweep_16": _engine_pair(
+            lambda sim: sweep(tr, sim, l_m=lm_grid)
+            ["summary"]["mean_latency"],
+            16 * n_intervals),
+        "batch_8": _engine_pair(
+            lambda sim: simulate_batch(batch, sim)
+            ["summary"]["mean_latency"],
+            8 * n_intervals),
+    }
+    save_json_history("BENCH_kernels.json", result)
+    return result
+
+
+if __name__ == "__main__":
+    r = run()
+    s = r["single"]
+    print(f"epoch_step [{r['kernel_mode']}/{r['backend']}]: scan body "
+          f"{s['scan_body']['warm_intervals_per_sec']:.0f} intervals/s, "
+          f"fused kernel "
+          f"{s['fused_kernel']['warm_intervals_per_sec']:.0f} intervals/s "
+          f"(ratio {s['warm_ratio_kernel_over_scan']:.2f}x warm)")

@@ -24,10 +24,10 @@ def _run(name, fn, derived_fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_engine, bench_faults, bench_placement,
-                            bench_search, bench_serve, bench_topology,
-                            bench_traffic, fig10_lm_dse, fig11_main,
-                            fig12_adaptivity, fig13_residency,
+    from benchmarks import (bench_engine, bench_faults, bench_kernels,
+                            bench_placement, bench_search, bench_serve,
+                            bench_topology, bench_traffic, fig10_lm_dse,
+                            fig11_main, fig12_adaptivity, fig13_residency,
                             table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
@@ -116,6 +116,23 @@ def main() -> None:
           f"{c['availability']:.0%}); PCM bill {c['total_pcm_nj']:.0f} nJ, "
           f"fault-path warm overhead "
           f"{flt['engine']['fault_overhead_frac']:+.1%}", flush=True)
+
+    def _kernels_derived(r):
+        s = r["single"]
+        return (f"mode={r['kernel_mode']},"
+                f"scan={s['scan_body']['warm_intervals_per_sec']:.0f}i/s,"
+                f"fused={s['fused_kernel']['warm_intervals_per_sec']:.0f}"
+                f"i/s")
+
+    ker = _run("bench_kernels", bench_kernels.run, _kernels_derived)
+    ks = ker["single"]
+    print(f"# kernels: epoch_step [{ker['kernel_mode']}/{ker['backend']}] "
+          f"warm scan body "
+          f"{ks['scan_body']['warm_intervals_per_sec']:.0f} -> fused "
+          f"{ks['fused_kernel']['warm_intervals_per_sec']:.0f} intervals/s "
+          f"(ratio {ks['warm_ratio_kernel_over_scan']:.2f}x; interpret "
+          f"mode is the correctness regime, compiled numbers need a TPU)",
+          flush=True)
 
     def _serve_derived(r):
         n, o, s = r["nominal"], r["overload"], r["storm"]

@@ -20,7 +20,10 @@
      the fault grid vmaps as one more sweep axis (one scan-body trace),
   7. the session server: a short continuous-batching soak — nominal load
      drops zero healthy sessions on one shared executable, an overload
-     burst sheds by policy with the queue staying bounded.
+     burst sheds by policy with the queue staying bounded,
+  8. the fused epoch_step kernel: `epoch_kernel=True` reproduces the scan
+     body at 1e-6 through `simulate` — clean, destination-aware, and
+     faulted — in interpret mode (the engine-parity gate off-TPU).
 
 `--smoke-only` skips the pytest stage (used by CI wrappers that already
 ran the suite, and for quick local iteration).
@@ -320,6 +323,42 @@ def serve_soak_smoke() -> None:
           f"replay parity holds)")
 
 
+def kernel_parity_smoke() -> None:
+    """Fused epoch_step kernel vs the lax.scan body through `simulate`:
+    summaries agree at 1e-6 on the clean, destination-aware, and faulted
+    paths (interpret mode — the off-TPU engine-parity gate)."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core import traffic
+    from repro.core.faults import GatewayFault, attach_faults, compile_faults
+    from repro.core.simulator import SUMMARY_KEYS, SimConfig, simulate
+
+    t0 = time.time()
+    sim = SimConfig()
+    sim_k = dataclasses.replace(sim, epoch_kernel=True)
+    clean = traffic.generate(traffic.UniformSpec(n_intervals=24),
+                             jax.random.PRNGKey(0))
+    dest = traffic.generate(
+        traffic.PermutationSpec(pattern="transpose", mean_load=0.05,
+                                n_intervals=24),
+        jax.random.PRNGKey(1), dest=True)
+    frame = compile_faults((GatewayFault(chiplet=0, slot=0, start=4),),
+                           sim.cfg, 24, seed=3)
+    for name, tr in (("clean", clean), ("dest", dest),
+                     ("faults", attach_faults(dict(clean), frame))):
+        a, b = simulate(tr, sim_k), simulate(tr, sim)
+        for k in SUMMARY_KEYS:
+            np.testing.assert_allclose(
+                np.asarray(a["summary"][k]), np.asarray(b["summary"][k]),
+                rtol=1e-6, atol=1e-6,
+                err_msg=f"kernel parity broke: {name} summary[{k}]")
+    print(f"epoch_step kernel parity smoke OK in {time.time() - t0:.1f}s "
+          f"(clean/dest/faulted summaries match the scan body at 1e-6)")
+
+
 def main(argv) -> int:
     if "--smoke-only" not in argv:
         rc = subprocess.call(
@@ -333,6 +372,7 @@ def main(argv) -> int:
     search_smoke()
     fault_smoke()
     serve_soak_smoke()
+    kernel_parity_smoke()
     print("verify OK")
     return 0
 

@@ -89,19 +89,30 @@ class NocModel:
                 + self.photonic_flight_cycles)
 
     def access_latency(self, hops: jax.Array,
-                       load_pkts_per_cycle: jax.Array) -> jax.Array:
+                       load_pkts_per_cycle: jax.Array,
+                       burst_scale=None) -> jax.Array:
         """Segments (1)/(3): mesh walk to/from the gateway.
 
         Convergence congestion: all of a gateway's traffic (L pkts/cycle *
         packet_flits flits) crosses ~feed_links mesh links of 1 flit/cycle
         next to the gateway router; local through-traffic is folded into
         buffer_sat.
+
+        `burst_scale` (optional) rescales the queueing term's effective
+        burstiness relative to the model default: the destination-aware path
+        passes the fan-in concentration factor (a single-source fan-in is
+        near-deterministic arrival, b_eff -> 1; a many-source fan-in keeps
+        the full PARSEC batch factor). `None` leaves the term untouched —
+        the uniform-destination path is bit-identical to the pre-dest model.
         """
         walk = hops * self.router_pipeline_cycles
         flits_per_cycle = load_pkts_per_cycle * self.cfg.packet_flits
         rho_link = jnp.clip(flits_per_cycle / self.feed_links, 0.0, 1.0)
         link_service = jnp.float32(self.cfg.packet_flits)  # 1 flit/cycle links
-        return walk + self._md1_wait(rho_link, link_service)
+        wait = self._md1_wait(rho_link, link_service)
+        if burst_scale is not None:
+            wait = wait * burst_scale
+        return walk + wait
 
     def mesh_latency(self, mean_hops: jax.Array,
                      link_load_flits: jax.Array) -> jax.Array:

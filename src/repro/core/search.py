@@ -141,8 +141,8 @@ HISTORY_KEYS = ("generation", "parent_score", "best_candidate_score",
 
 def _search_core(carry0: dict, key: jax.Array, ext, mem, intra, ext_frac,
                  t_mask, default_pos: jax.Array, hyper: dict,
-                 ov: Dict[str, jax.Array], blocked: jax.Array, *, sim,
-                 generations: int, population: int, objective: str,
+                 ov: Dict[str, jax.Array], blocked: jax.Array, dest=None,
+                 *, sim, generations: int, population: int, objective: str,
                  inject_default: bool, moves_hi: int) -> dict:
     """The whole annealed search as ONE `lax.scan` over generations.
 
@@ -198,7 +198,7 @@ def _search_core(carry0: dict, key: jax.Array, ext, mem, intra, ext_frac,
 
         def score_one(tbl):
             out = _sim._simulate_impl(ext, mem, intra, ext_frac, t_mask,
-                                      sim, tbl, ov)
+                                      sim, tbl, ov, dest=dest)
             return (_objective_value(out, objective),
                     jnp.stack([out["summary"][k] for k in SUMMARY_KEYS]))
 
@@ -271,10 +271,11 @@ _SEARCH_STATICS = ("sim", "generations", "population", "objective",
 @functools.partial(jax.jit, static_argnames=_SEARCH_STATICS,
                    donate_argnums=(0,))
 def _search_jit(carry0, key, ext, mem, intra, ext_frac, t_mask,
-                default_pos, hyper, ov, blocked, *, sim, generations,
-                population, objective, inject_default, moves_hi):
+                default_pos, hyper, ov, blocked, dest=None, *, sim,
+                generations, population, objective, inject_default,
+                moves_hi):
     return _search_core(carry0, key, ext, mem, intra, ext_frac, t_mask,
-                        default_pos, hyper, ov, blocked, sim=sim,
+                        default_pos, hyper, ov, blocked, dest, sim=sim,
                         generations=generations, population=population,
                         objective=objective, inject_default=inject_default,
                         moves_hi=moves_hi)
@@ -283,14 +284,14 @@ def _search_jit(carry0, key, ext, mem, intra, ext_frac, t_mask,
 @functools.partial(jax.jit, static_argnames=_SEARCH_STATICS,
                    donate_argnums=(0,))
 def _search_islands_jit(carry0, key, ext, mem, intra, ext_frac, t_mask,
-                        default_pos, hyper, ov, blocked, *, sim,
+                        default_pos, hyper, ov, blocked, dest=None, *, sim,
                         generations, population, objective, inject_default,
                         moves_hi):
     """K chains, ONE executable: vmap over (carry, key, overrides)."""
     return jax.vmap(
         lambda c0, ks, o: _search_core(
             c0, ks, ext, mem, intra, ext_frac, t_mask, default_pos, hyper,
-            o, blocked, sim=sim, generations=generations,
+            o, blocked, dest, sim=sim, generations=generations,
             population=population, objective=objective,
             inject_default=inject_default, moves_hi=moves_hi)
     )(carry0, key, ov)
@@ -434,14 +435,14 @@ def search_placement_device(trace: dict, sim, *,
     from repro.core import simulator as _sim
 
     _check_search_params(generations, population, objective)
-    (ext, mem, intra, ext_frac, t_mask), default_pos, init_pos, default_p, \
-        inject_default, blocked = _prepare_search(trace, sim, init,
-                                                  blocked_positions)
+    (ext, mem, intra, ext_frac, t_mask, dest), default_pos, init_pos, \
+        default_p, inject_default, blocked = _prepare_search(
+            trace, sim, init, blocked_positions)
 
     res = _search_jit(
         _init_carry(init_pos), jax.random.PRNGKey(seed), ext, mem, intra,
         ext_frac, t_mask, default_pos,
-        _hyper(temperature, cooling, restart_frac), {}, blocked,
+        _hyper(temperature, cooling, restart_frac), {}, blocked, dest,
         sim=sim, generations=generations, population=population,
         objective=objective, inject_default=inject_default,
         moves_hi=max(1, generations // 3))
@@ -496,9 +497,9 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
     from repro.core import simulator as _sim
 
     _check_search_params(generations, population, objective)
-    (ext, mem, intra, ext_frac, t_mask), default_pos, init_pos, default_p, \
-        inject_default, blocked = _prepare_search(trace, sim, init,
-                                                  blocked_positions)
+    (ext, mem, intra, ext_frac, t_mask, dest), default_pos, init_pos, \
+        default_p, inject_default, blocked = _prepare_search(
+            trace, sim, init, blocked_positions)
 
     unknown = set(grids) - set(_sim.SWEEPABLE_FIELDS)
     if unknown:
@@ -554,7 +555,7 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
             res = _search_islands_jit(
                 jax.tree.map(put, carry0), put(keys_s), ext, mem, intra,
                 ext_frac, t_mask, default_pos, hyper,
-                jax.tree.map(put, ov_s), blocked, **static)
+                jax.tree.map(put, ov_s), blocked, dest, **static)
             if pad:
                 res = jax.tree.map(lambda a: a[:islands], res)
         except Exception as e:  # pragma: no cover - depends on device layout
@@ -567,7 +568,7 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
     if res is None:
         res = _search_islands_jit(carry0, keys, ext, mem, intra, ext_frac,
                                   t_mask, default_pos, hyper, ov, blocked,
-                                  **static)
+                                  dest, **static)
     # Counted once per *successful* launch (a failed sharded attempt that
     # fell back above raised before dispatching), preserving the
     # one-search == one-dispatch accounting on every device layout.

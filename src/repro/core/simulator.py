@@ -111,6 +111,12 @@ class SimConfig:
     # utilization hysteresis (reactive approximation of [16]'s epoch policy).
     prowaves_rho_hi: float = 0.5
     prowaves_rho_lo: float = 0.30
+    # Run the interval-scan body as the fused `kernels.epoch_step` Pallas
+    # kernel (interpret on CPU, compiled on TPU) instead of the XLA lax.scan
+    # body. Applies to the RESIPI/RESIPI_ALL unpadded-topology paths; other
+    # configurations fall back to the scan body, which doubles as the
+    # kernel's 1e-6 parity oracle (kernels/epoch_step/ref.py).
+    epoch_kernel: bool = False
 
     def with_arch(self, arch: Arch) -> "SimConfig":
         w = {Arch.RESIPI: RESIPI_WAVELENGTHS,
@@ -151,7 +157,8 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
                       sim: SimConfig, tables: dict,
                       topo: Optional[dict] = None,
                       t_valid: jax.Array | float = 1.0,
-                      extra_db: Optional[jax.Array] = None) -> dict:
+                      extra_db: Optional[jax.Array] = None,
+                      dest: Optional[jax.Array] = None) -> dict:
     """Latency/load metrics for one interval given activity (g, lambda).
 
     With `topo` (the padded topology-sweep path) the chiplet axis is padded
@@ -169,6 +176,14 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     added to the placement's access loss so the laser power manager
     compensates for device aging; None (and the 0.0 a never-firing fault
     frame compiles to) leaves the fault-free math bit-identical.
+
+    `dest` (destination-aware path) is the trace's row-stochastic [C, C]
+    destination matrix: the destination leg of each inter-chiplet packet is
+    then priced at the *actual* destination's gateway pressure (received
+    load over its active gateways, with a fan-in concentration factor on
+    the ejection queueing) instead of the uniform-destination mean-hop
+    approximation. `dest=None` keeps the pre-dest math verbatim —
+    bit-identical numbers for every existing trace.
     """
     noc = sim.noc
     # Per-gateway load after the Fig. 8 balanced selection. ext traffic of a
@@ -208,12 +223,32 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     if extra_db is not None:
         access_db = access_db + extra_db
 
-    # Destination side: packets land on a uniformly random other chiplet;
-    # the destination hop count mixes the other chiplets' activation levels.
-    dst_hops = mean_src_hops * jnp.ones_like(src_hops)
-
-    inter_lat = noc.inter_chiplet_latency(gw_load, lam,
-                                          src_hops, dst_hops)          # [C]
+    if dest is None:
+        # Destination side: packets land on a uniformly random other chiplet;
+        # the destination hop count mixes the other chiplets' activation
+        # levels.
+        dst_hops = mean_src_hops * jnp.ones_like(src_hops)
+        inter_lat = noc.inter_chiplet_latency(gw_load, lam,
+                                              src_hops, dst_hops)      # [C]
+    else:
+        # Destination-aware: resolve the actual source->destination gateway
+        # pressure. recv_j is the load *received* by chiplet j; phi_j is the
+        # fan-in concentration (inverse participation ratio of the arrival
+        # mix — 1 for a single-source permutation, ~1/(C-1) for uniform),
+        # which scales the ejection queue's effective burstiness: one
+        # dominant source is a near-deterministic arrival process, many
+        # interleaved sources keep the full batch factor.
+        w_ij = ext_load[:, None] * dest                            # [C, C]
+        recv = jnp.sum(w_ij, axis=0)                               # [C]
+        phi = jnp.sum(w_ij * w_ij, axis=0) / jnp.maximum(recv * recv, 1e-12)
+        burst_scale = (1.0 + (noc.burstiness - 1.0) * phi) / noc.burstiness
+        dst_gw_load = recv / jnp.maximum(g.astype(jnp.float32), 1.0)  # [C]
+        dst_leg = noc.access_latency(src_hops, dst_gw_load, burst_scale)
+        if chip_mask is not None:
+            dst_leg = jnp.where(chip_mask > 0, dst_leg, 0.0)
+        inter_lat = (noc.access_latency(src_hops, gw_load)
+                     + noc.gateway_latency(gw_load, lam)
+                     + dest @ dst_leg)                                 # [C]
     if chip_mask is not None:
         inter_lat = jnp.where(chip_mask > 0, inter_lat, 0.0)
     mem_lat = noc.inter_chiplet_latency(mem_gw_load, lam_mem,
@@ -230,13 +265,18 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
     tot_mem = mem_load + 1e-9
     lat = (jnp.sum(inter_lat * w_ext) + jnp.sum(intra_lat * int_load)
            + mem_lat * tot_mem) / (tot_ext + tot_int + tot_mem)
-    return {"latency": lat * t_valid, "gw_load": gw_load * t_valid,
-            "inter_latency": inter_lat * t_valid,
-            "mean_inter_latency": jnp.sum(inter_lat * w_ext) / tot_ext
-                                  * t_valid,
-            "access_db": access_db,
-            "saturated": jnp.any(noc.saturated(gw_load, lam))
-                         & (t_valid > 0)}
+    out = {"latency": lat * t_valid, "gw_load": gw_load * t_valid,
+           "inter_latency": inter_lat * t_valid,
+           "mean_inter_latency": jnp.sum(inter_lat * w_ext) / tot_ext
+                                 * t_valid,
+           "access_db": access_db,
+           "saturated": jnp.any(noc.saturated(gw_load, lam))
+                        & (t_valid > 0)}
+    if dest is not None:
+        # Raw (un-time-masked, like ext_load itself): the controller's
+        # pressure term consumes it inside the same step.
+        out["recv_load"] = recv
+    return out
 
 
 def _prowaves_update(lam: jax.Array, inter_latency: jax.Array,
@@ -264,7 +304,7 @@ def _prowaves_update(lam: jax.Array, inter_latency: jax.Array,
 
 
 def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None,
-              faulted: bool = False):
+              faulted: bool = False, dest: Optional[jax.Array] = None):
     """Build the per-interval scan body for the chosen architecture.
 
     `topo` switches on the padded topology-sweep path: the chiplet/gateway
@@ -282,6 +322,13 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None,
     controller cannot gate, and drift_db erodes the optical budget. An
     all-healthy frame reproduces the fault-free step bit-for-bit, so the
     fault executables share every masking invariant with the clean ones.
+
+    `dest` is the trace's optional [C, C] destination matrix, a per-trace
+    constant closed over the step (not a per-interval xs): it re-prices the
+    destination leg in `_interval_metrics` and feeds the gateway controller
+    a received-load pressure term, so congestion-aware deployment reacts to
+    where packets actually *land*. `dest=None` is the pre-dest step,
+    bit-for-bit.
     """
     cfg, ctl_cfg = sim.cfg, sim.ctl
     interval = float(cfg.reconfig_interval_cycles)
@@ -339,7 +386,7 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None,
 
         m = _interval_metrics(g_eff, lam, ext, mem, intra, ext_frac, sim,
                               tables, topo, t_valid=t_valid,
-                              extra_db=drift_db)
+                              extra_db=drift_db, dest=dest)
 
         # --- power ---------------------------------------------------------
         active = active_eff if faulted else _activity_mask(g, sim)
@@ -383,7 +430,16 @@ def make_step(sim: SimConfig, tables: dict, topo: Optional[dict] = None,
         # --- controller update ----------------------------------------------
         reconf_nj = jnp.float32(0.0)
         if sim.arch == Arch.RESIPI:
-            packets = ext * interval
+            if dest is None:
+                pressure = ext
+            else:
+                # Destination-aware deployment pressure: a gateway group
+                # serves both the chiplet's injected and received packets,
+                # so the controller meters the hotter of the two — transpose
+                # hot-destinations activate spares even though their own
+                # injection is modest.
+                pressure = jnp.maximum(ext, m["recv_load"])
+            packets = pressure * interval
             if faulted:
                 # The controller meters load per USABLE gateway: failures
                 # concentrate the same packets on fewer lanes, so the
@@ -508,6 +564,7 @@ def clear_engine_caches() -> None:
     point can't silently leave a warm cache in a 'cold' measurement.
     """
     from repro.core.search import clear_search_caches
+    from repro.core.traffic.dest import clear_destination_caches
 
     for f in (_simulate_jit, _simulate_batch_jit, _sweep_jit,
               _sweep_batch_jit, _sweep_topology_jit,
@@ -518,6 +575,7 @@ def clear_engine_caches() -> None:
               _session_tick_jit, _session_tick_faults_jit):
         f.clear_cache()
     clear_search_caches()
+    clear_destination_caches()
 
 
 def _grid_len(name: str, values) -> int:
@@ -581,11 +639,23 @@ def _initial_state(sim: SimConfig) -> SimState:
 
 
 def _scan_trace(state: SimState, xs, sim: SimConfig, tables: Optional[dict],
-                topo: Optional[dict],
-                faulted: bool = False) -> Tuple[SimState, dict]:
-    """Run the per-interval scan; the ONE place the trace counter bumps."""
+                topo: Optional[dict], faulted: bool = False,
+                dest: Optional[jax.Array] = None) -> Tuple[SimState, dict]:
+    """Run the per-interval scan; the ONE place the trace counter bumps.
+
+    With `sim.epoch_kernel` set the whole interval scan runs as the fused
+    `kernels.epoch_step` Pallas kernel (one kernel launch for T intervals)
+    on the configurations it supports; everything else — and every parity
+    oracle — takes the lax.scan body below. Both bodies share this counter:
+    one trace per scan, whichever engine executes it.
+    """
     _STATS["traces"] += 1
-    step = make_step(sim, tables, topo, faulted=faulted)
+    if sim.epoch_kernel and topo is None \
+            and sim.arch in (Arch.RESIPI, Arch.RESIPI_ALL):
+        from repro.kernels.epoch_step.ops import epoch_run_pallas
+        return epoch_run_pallas(state, xs, sim, tables,
+                                dest=dest, faulted=faulted)
+    step = make_step(sim, tables, topo, faulted=faulted, dest=dest)
     return jax.lax.scan(step, state, xs)
 
 
@@ -657,7 +727,8 @@ def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
                    ext_frac: jax.Array, t_mask: jax.Array, sim: SimConfig,
                    tables: dict, ov: Optional[Dict[str, jax.Array]] = None,
                    topo: Optional[dict] = None,
-                   faults: Optional[Tuple[jax.Array, ...]] = None) -> dict:
+                   faults: Optional[Tuple[jax.Array, ...]] = None,
+                   dest: Optional[jax.Array] = None) -> dict:
     """Scan body shared by every entry point (single / batch / sweep).
 
     With `topo` the trace/state is padded on the chiplet axis: `sim.cfg`
@@ -685,6 +756,14 @@ def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
         topo = dict(topo, chip_mask=chip_mask)
         ext = ext * chip_mask
         intra = intra * chip_mask
+        if dest is not None:
+            # Padded chiplet columns receive nothing and padded rows send
+            # nothing; surviving rows re-normalize to row-stochastic with
+            # the same formula as traffic.slice_trace, so the padded view
+            # prices destinations exactly like the sliced one.
+            d = dest * chip_mask[None, :] * chip_mask[:, None]
+            row = jnp.sum(d, axis=-1, keepdims=True)
+            dest = jnp.where(row > 0.0, d / jnp.maximum(row, 1e-12), 0.0)
         g0 = jnp.where(valid,
                        jnp.asarray(sim.ctl.max_gateways).astype(jnp.int32),
                        0)
@@ -707,7 +786,7 @@ def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
                              "config, or sweep them with sweep_faults)")
         xs = xs + tuple(faults)
     _, recs = _scan_trace(state0, xs, sim, tables, topo,
-                          faulted=faults is not None)
+                          faulted=faults is not None, dest=dest)
 
     # Masked chiplet lanes record lambda=0 and must not dilute the
     # per-chiplet average on padded-topology paths.
@@ -718,13 +797,18 @@ def _simulate_impl(ext: jax.Array, mem: jax.Array, intra: jax.Array,
 
 
 def _trace_arrays(trace: dict) -> Tuple[jax.Array, ...]:
+    """(ext, mem, intra, ext_frac, t_mask, dest) — dest is None (an empty
+    jit/vmap pytree, so destination-free traces keep their exact executable
+    signatures) unless the trace carries a destination matrix."""
     traffic.validate_trace(trace)
     mem = trace["mem_load"]
     t_mask = trace.get("t_mask")
     t_mask = jnp.ones(jnp.shape(mem), jnp.float32) if t_mask is None \
         else jnp.asarray(t_mask, jnp.float32)
+    dest = trace.get("dest")
+    dest = None if dest is None else jnp.asarray(dest, jnp.float32)
     return (trace["ext_load"], mem, trace["int_load"],
-            jnp.asarray(trace["ext_frac"]), t_mask)
+            jnp.asarray(trace["ext_frac"]), t_mask, dest)
 
 
 def _trace_faults(trace: dict) -> Optional[Tuple[jax.Array, ...]]:
@@ -746,133 +830,144 @@ def _trace_faults(trace: dict) -> Optional[Tuple[jax.Array, ...]]:
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _simulate_jit(ext, mem, intra, ext_frac, t_mask, tables, *,
+def _simulate_jit(ext, mem, intra, ext_frac, t_mask, tables, dest=None, *,
                   sim: SimConfig):
-    return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables)
+    return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables,
+                          dest=dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _simulate_faults_jit(ext, mem, intra, ext_frac, t_mask, tables, flt, *,
-                         sim: SimConfig):
+def _simulate_faults_jit(ext, mem, intra, ext_frac, t_mask, tables, flt,
+                         dest=None, *, sim: SimConfig):
     """Fault twin of `_simulate_jit` (its own executable: the no-fault
     entry points keep their exact shapes and caches)."""
     return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables,
-                          faults=flt)
+                          faults=flt, dest=dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
 def _simulate_batch_faults_jit(ext, mem, intra, ext_frac, t_mask, tables,
-                               flt, *, sim: SimConfig):
+                               flt, dest=None, *, sim: SimConfig):
     return jax.vmap(
-        lambda e, m, i, f, t, fl: _simulate_impl(e, m, i, f, t, sim, tables,
-                                                 faults=fl)
-    )(ext, mem, intra, ext_frac, t_mask, flt)
+        lambda e, m, i, f, t, fl, d: _simulate_impl(e, m, i, f, t, sim,
+                                                    tables, faults=fl,
+                                                    dest=d)
+    )(ext, mem, intra, ext_frac, t_mask, flt, dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_faults_jit(ext, mem, intra, ext_frac, t_mask, tables, flt, ov, *,
-                      sim: SimConfig):
+def _sweep_faults_jit(ext, mem, intra, ext_frac, t_mask, tables, flt, ov,
+                      dest=None, *, sim: SimConfig):
     """K fault frames (zipped with optional K runtime overrides) over one
     trace — the fault grid vmaps exactly like every other sweep axis."""
     return jax.vmap(
         lambda fl, o: _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim,
-                                     tables, o, faults=fl)
+                                     tables, o, faults=fl, dest=dest)
     )(flt, ov)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _simulate_batch_jit(ext, mem, intra, ext_frac, t_mask, tables, *,
-                        sim: SimConfig):
+def _simulate_batch_jit(ext, mem, intra, ext_frac, t_mask, tables, dest=None,
+                        *, sim: SimConfig):
     return jax.vmap(
-        lambda e, m, i, f, t: _simulate_impl(e, m, i, f, t, sim, tables)
-    )(ext, mem, intra, ext_frac, t_mask)
+        lambda e, m, i, f, t, d: _simulate_impl(e, m, i, f, t, sim, tables,
+                                                dest=d)
+    )(ext, mem, intra, ext_frac, t_mask, dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_jit(ext, mem, intra, ext_frac, t_mask, tables, ov, *,
+def _sweep_jit(ext, mem, intra, ext_frac, t_mask, tables, ov, dest=None, *,
                sim: SimConfig):
     return jax.vmap(
         lambda o: _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim,
-                                 tables, o)
+                                 tables, o, dest=dest)
     )(ov)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_batch_jit(ext, mem, intra, ext_frac, t_mask, tables, ov, *,
-                     sim: SimConfig):
-    def one_trace(e, m, i, f, t):
+def _sweep_batch_jit(ext, mem, intra, ext_frac, t_mask, tables, ov,
+                     dest=None, *, sim: SimConfig):
+    def one_trace(e, m, i, f, t, d):
         return jax.vmap(
-            lambda o: _simulate_impl(e, m, i, f, t, sim, tables, o))(ov)
-    return jax.vmap(one_trace)(ext, mem, intra, ext_frac, t_mask)
+            lambda o: _simulate_impl(e, m, i, f, t, sim, tables, o,
+                                     dest=d))(ov)
+    return jax.vmap(one_trace)(ext, mem, intra, ext_frac, t_mask, dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_topology_jit(ext, mem, intra, ext_frac, t_mask, topo, ov, *,
-                        sim: SimConfig):
+def _sweep_topology_jit(ext, mem, intra, ext_frac, t_mask, topo, ov,
+                        dest=None, *, sim: SimConfig):
+    # `dest` is the one generated-at-c_max matrix, closed over the K-point
+    # vmap: each point masks/re-normalizes it to its own chiplet count
+    # inside `_simulate_impl` (traced chip_mask), so one matrix serves the
+    # whole padded grid.
     return jax.vmap(
         lambda tp, o: _simulate_impl(ext, mem, intra, ext_frac, t_mask,
-                                     sim, None, o, topo=tp))(topo, ov)
+                                     sim, None, o, topo=tp,
+                                     dest=dest))(topo, ov)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
 def _sweep_topology_batch_jit(ext, mem, intra, ext_frac, t_mask, topo, ov,
-                              *, sim: SimConfig):
-    def one_trace(e, m, i, f, t):
+                              dest=None, *, sim: SimConfig):
+    def one_trace(e, m, i, f, t, d):
         return jax.vmap(
             lambda tp, o: _simulate_impl(e, m, i, f, t, sim, None,
-                                         o, topo=tp))(topo, ov)
-    return jax.vmap(one_trace)(ext, mem, intra, ext_frac, t_mask)
+                                         o, topo=tp, dest=d))(topo, ov)
+    return jax.vmap(one_trace)(ext, mem, intra, ext_frac, t_mask, dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _sweep_workload_jit(ext, mem, intra, ext_frac, t_mask, tables, ov, *,
-                        sim: SimConfig):
+def _sweep_workload_jit(ext, mem, intra, ext_frac, t_mask, tables, ov,
+                        dest=None, *, sim: SimConfig):
     """K workload lanes zipped with K runtime-override lanes (one scan)."""
     return jax.vmap(
-        lambda e, m, i, f, t, o: _simulate_impl(e, m, i, f, t, sim,
-                                                tables, o)
-    )(ext, mem, intra, ext_frac, t_mask, ov)
+        lambda e, m, i, f, t, o, d: _simulate_impl(e, m, i, f, t, sim,
+                                                   tables, o, dest=d)
+    )(ext, mem, intra, ext_frac, t_mask, ov, dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
 def _sweep_workload_topo_jit(ext, mem, intra, ext_frac, t_mask, topo, ov,
-                             *, sim: SimConfig):
+                             dest=None, *, sim: SimConfig):
     """K workload lanes zipped with K padded-topology/placement lanes."""
     return jax.vmap(
-        lambda e, m, i, f, t, tp, o: _simulate_impl(e, m, i, f, t, sim,
-                                                    None, o, topo=tp)
-    )(ext, mem, intra, ext_frac, t_mask, topo, ov)
+        lambda e, m, i, f, t, tp, o, d: _simulate_impl(e, m, i, f, t, sim,
+                                                       None, o, topo=tp,
+                                                       dest=d)
+    )(ext, mem, intra, ext_frac, t_mask, topo, ov, dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",), donate_argnums=(0,))
-def _session_chunk_jit(state, ext, mem, intra, ext_frac, t_mask, tables, *,
-                       sim: SimConfig):
+def _session_chunk_jit(state, ext, mem, intra, ext_frac, t_mask, tables,
+                       dest=None, *, sim: SimConfig):
     """One streaming chunk: scan from the carried state, return the new
     carry (donated — the old state's buffers are reused in place), the
     chunk's records, and mask-correct running totals."""
     t_mask = t_mask.astype(jnp.float32)
     xs = (ext * t_mask[:, None], mem * t_mask, intra * t_mask[:, None],
           jnp.broadcast_to(ext_frac, mem.shape), t_mask)
-    new_state, recs = _scan_trace(state, xs, sim, tables, None)
+    new_state, recs = _scan_trace(state, xs, sim, tables, None, dest=dest)
     return new_state, recs, _record_sums(recs, t_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",), donate_argnums=(0,))
 def _session_chunk_faults_jit(state, ext, mem, intra, ext_frac, t_mask,
-                              tables, flt, *, sim: SimConfig):
+                              tables, flt, dest=None, *, sim: SimConfig):
     """Fault twin of `_session_chunk_jit`: the chunk's fault-frame slice
     (aligned by chunk_trace, which slices FAULT_KEYS with the loads) rides
     as extra scan xs; clean chunks keep their own executable."""
     t_mask = t_mask.astype(jnp.float32)
     xs = (ext * t_mask[:, None], mem * t_mask, intra * t_mask[:, None],
           jnp.broadcast_to(ext_frac, mem.shape), t_mask) + tuple(flt)
-    new_state, recs = _scan_trace(state, xs, sim, tables, None, faulted=True)
+    new_state, recs = _scan_trace(state, xs, sim, tables, None, faulted=True,
+                                  dest=dest)
     return new_state, recs, _record_sums(recs, t_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
-def _session_tick_jit(states, ext, mem, intra, ext_frac, t_mask, tables, *,
-                      sim: SimConfig):
+def _session_tick_jit(states, ext, mem, intra, ext_frac, t_mask, tables,
+                      dest=None, *, sim: SimConfig):
     """One continuous-batching server tick: B session carries advance
     through B masked chunk scans as ONE vmapped executable.
 
@@ -882,30 +977,30 @@ def _session_tick_jit(states, ext, mem, intra, ext_frac, t_mask, tables, *,
     its carry, so empty / backing-off / parked lanes ride along for free
     and the executable's [B, T] shape never changes across ticks.
     """
-    def one(st, e, m, i, f, t):
+    def one(st, e, m, i, f, t, d):
         t = t.astype(jnp.float32)
         xs = (e * t[:, None], m * t, i * t[:, None],
               jnp.broadcast_to(f, m.shape), t)
-        new_state, recs = _scan_trace(st, xs, sim, tables, None)
+        new_state, recs = _scan_trace(st, xs, sim, tables, None, dest=d)
         return new_state, recs, _record_sums(recs, t)
-    return jax.vmap(one)(states, ext, mem, intra, ext_frac, t_mask)
+    return jax.vmap(one)(states, ext, mem, intra, ext_frac, t_mask, dest)
 
 
 @functools.partial(jax.jit, static_argnames=("sim",))
 def _session_tick_faults_jit(states, ext, mem, intra, ext_frac, t_mask,
-                             tables, flt, *, sim: SimConfig):
+                             tables, flt, dest=None, *, sim: SimConfig):
     """Fault twin of `_session_tick_jit`: the tick's fault frame lives on
     hardware time and is SHARED by every lane (closed over, not vmapped) —
     all sessions experience the same interposer this tick. Its own
     executable, so fault-free serving keeps the clean tick's cache."""
-    def one(st, e, m, i, f, t):
+    def one(st, e, m, i, f, t, d):
         t = t.astype(jnp.float32)
         xs = (e * t[:, None], m * t, i * t[:, None],
               jnp.broadcast_to(f, m.shape), t) + tuple(flt)
         new_state, recs = _scan_trace(st, xs, sim, tables, None,
-                                      faulted=True)
+                                      faulted=True, dest=d)
         return new_state, recs, _record_sums(recs, t)
-    return jax.vmap(one)(states, ext, mem, intra, ext_frac, t_mask)
+    return jax.vmap(one)(states, ext, mem, intra, ext_frac, t_mask, dest)
 
 
 # ---------------------------------------------------------------------------
@@ -923,14 +1018,14 @@ def simulate(trace: dict, sim: SimConfig) -> dict:
     fault twin of the scan automatically; traces without one never pay for
     the fault arithmetic and keep their own executables.
     """
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(trace)
     flt = _trace_faults(trace)
     if flt is not None:
         return _simulate_faults_jit(ext, mem, intra, ext_frac, t_mask,
                                     selection_tables_jax(sim.cfg), flt,
-                                    sim=sim)
+                                    dest, sim=sim)
     return _simulate_jit(ext, mem, intra, ext_frac, t_mask,
-                         selection_tables_jax(sim.cfg), sim=sim)
+                         selection_tables_jax(sim.cfg), dest, sim=sim)
 
 
 def simulate_eager(trace: dict, sim: SimConfig) -> dict:
@@ -939,8 +1034,9 @@ def simulate_eager(trace: dict, sim: SimConfig) -> dict:
     Kept as the benchmark baseline (bench_engine.py) — do not use in sweeps.
     """
     tables = rebuild_selection_tables(sim.cfg)
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
-    return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables)
+    ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(trace)
+    return _simulate_impl(ext, mem, intra, ext_frac, t_mask, sim, tables,
+                          dest=dest)
 
 
 def rebuild_selection_tables(cfg: NetworkConfig) -> dict:
@@ -990,8 +1086,16 @@ def stack_traces(traces: List[dict], *, pad: bool = False) -> dict:
             f"{n_faulted}/{len(traces)} traces carry fault frames; a "
             f"batch must be uniformly faulted or uniformly clean (attach "
             f"faults.no_faults frames to the clean ones)")
+    n_dest = sum(tr.get("dest") is not None for tr in traces)
+    if n_dest not in (0, len(traces)):
+        raise ValueError(
+            f"{n_dest}/{len(traces)} traces carry destination matrices; a "
+            f"batch must be uniformly destination-aware or uniformly "
+            f"uniform-destination (generate every trace with dest=True, "
+            f"or none)")
     keys = ("ext_load", "mem_load", "int_load", "ext_frac") \
         + (("t_mask",) if masked else ()) \
+        + (("dest",) if n_dest else ()) \
         + (FAULT_KEYS if n_faulted else ())
     out = {k: jnp.stack([jnp.asarray(tr[k]) for tr in traces])
            for k in keys}
@@ -1010,14 +1114,14 @@ def simulate_batch(traces, sim: SimConfig) -> dict:
     """
     batch = stack_traces(traces, pad=True) \
         if isinstance(traces, (list, tuple)) else traces
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
+    ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(batch)
     flt = _trace_faults(batch)
     if flt is not None:
         return _simulate_batch_faults_jit(ext, mem, intra, ext_frac, t_mask,
                                           selection_tables_jax(sim.cfg),
-                                          flt, sim=sim)
+                                          flt, dest, sim=sim)
     return _simulate_batch_jit(ext, mem, intra, ext_frac, t_mask,
-                               selection_tables_jax(sim.cfg), sim=sim)
+                               selection_tables_jax(sim.cfg), dest, sim=sim)
 
 
 def sweep(trace: dict, sim: SimConfig, **fields) -> dict:
@@ -1033,9 +1137,9 @@ def sweep(trace: dict, sim: SimConfig, **fields) -> dict:
     the space is compile-free.
     """
     ov = _check_sweep_fields(fields)
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(trace)
     return _sweep_jit(ext, mem, intra, ext_frac, t_mask,
-                      selection_tables_jax(sim.cfg), ov, sim=sim)
+                      selection_tables_jax(sim.cfg), ov, dest, sim=sim)
 
 
 def _check_sweep_fields(fields) -> Dict[str, jax.Array]:
@@ -1060,9 +1164,9 @@ def sweep_batch(traces, sim: SimConfig, **fields) -> dict:
     batch = stack_traces(traces, pad=True) \
         if isinstance(traces, (list, tuple)) else traces
     ov = _check_sweep_fields(fields)
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
+    ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(batch)
     return _sweep_batch_jit(ext, mem, intra, ext_frac, t_mask,
-                            selection_tables_jax(sim.cfg), ov, sim=sim)
+                            selection_tables_jax(sim.cfg), ov, dest, sim=sim)
 
 
 def sweep_faults(trace: dict, sim: SimConfig, frames, **fields) -> dict:
@@ -1087,7 +1191,7 @@ def sweep_faults(trace: dict, sim: SimConfig, frames, **fields) -> dict:
         raise ValueError(f"fault frames are missing keys {missing}")
     flt = tuple(jnp.asarray(stacked[k], jnp.float32) for k in FAULT_KEYS)
     k = int(flt[0].shape[0])
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace)
+    ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(trace)
     t = int(jnp.shape(mem)[0])
     if int(flt[0].shape[1]) != t:
         raise ValueError(
@@ -1105,7 +1209,7 @@ def sweep_faults(trace: dict, sim: SimConfig, frames, **fields) -> dict:
         # comes from the fault frame alone.
         ov = {}
     return _sweep_faults_jit(ext, mem, intra, ext_frac, t_mask,
-                             selection_tables_jax(sim.cfg), flt, ov,
+                             selection_tables_jax(sim.cfg), flt, ov, dest,
                              sim=sim)
 
 
@@ -1239,13 +1343,18 @@ def _topo_trace_arrays(trace_or_batch, c_max: int):
             "against ONE topology's [C, G] slot grid and cannot be "
             "re-padded per grid point. strip_faults(trace) first, or use "
             "simulate / sweep_faults on a fixed topology.")
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(trace_or_batch)
+    ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(trace_or_batch)
     if ext.shape[-1] < c_max:
         raise ValueError(
             f"trace covers {ext.shape[-1]} chiplets but the grid needs "
             f"{c_max}; generate it with cfg.with_topology(n_chiplets="
             f"{c_max}) (see traffic.generate_trace)")
-    return ext[..., :c_max], mem, intra[..., :c_max], ext_frac, t_mask
+    if dest is not None:
+        # Narrow to the padded chiplet axis; per-grid-point masking and row
+        # re-normalization happen inside _simulate_impl against chip_mask.
+        from repro.core.traffic.transform import _renormalize_rows
+        dest = _renormalize_rows(dest[..., :c_max, :c_max])
+    return ext[..., :c_max], mem, intra[..., :c_max], ext_frac, t_mask, dest
 
 
 def sweep_topology(trace: dict, sim: SimConfig, **grids) -> dict:
@@ -1276,9 +1385,9 @@ def sweep_topology(trace: dict, sim: SimConfig, **grids) -> dict:
     gateway count (see `topology_point_config`).
     """
     sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
-    ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(trace, c_max)
+    ext, mem, intra, ext_frac, t_mask, dest = _topo_trace_arrays(trace, c_max)
     return _sweep_topology_jit(ext, mem, intra, ext_frac, t_mask, topo, ov,
-                               sim=sim_p)
+                               dest, sim=sim_p)
 
 
 def sweep_topology_batch(traces, sim: SimConfig, **grids) -> dict:
@@ -1290,9 +1399,9 @@ def sweep_topology_batch(traces, sim: SimConfig, **grids) -> dict:
     batch = stack_traces(traces, pad=True) \
         if isinstance(traces, (list, tuple)) else traces
     sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
-    ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(batch, c_max)
+    ext, mem, intra, ext_frac, t_mask, dest = _topo_trace_arrays(batch, c_max)
     return _sweep_topology_batch_jit(ext, mem, intra, ext_frac, t_mask,
-                                     topo, ov, sim=sim_p)
+                                     topo, ov, dest, sim=sim_p)
 
 
 def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
@@ -1323,7 +1432,8 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
         sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
         batch = stack_traces(traces, pad=True) \
             if isinstance(traces, (list, tuple)) else traces
-        ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(batch, c_max)
+        ext, mem, intra, ext_frac, t_mask, dest = _topo_trace_arrays(
+            batch, c_max)
 
         k = int(topo["n_chiplets"].shape[0])
         pad = (-k) % len(devices)
@@ -1338,7 +1448,8 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
         topo = jax.tree.map(lambda a: jax.device_put(a, sharding), topo)
         ov = jax.tree.map(lambda a: jax.device_put(a, sharding), ov)
         fn = _sweep_topology_batch_jit if batched else _sweep_topology_jit
-        out = fn(ext, mem, intra, ext_frac, t_mask, topo, ov, sim=sim_p)
+        out = fn(ext, mem, intra, ext_frac, t_mask, topo, ov, dest,
+                 sim=sim_p)
         if pad:
             out = jax.tree.map(
                 lambda a: a[:, :k] if batched else a[:k], out)
@@ -1355,7 +1466,7 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
 # ---------------------------------------------------------------------------
 
 def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
-                   **grids) -> dict:
+                   dest: bool = False, **grids) -> dict:
     """Workload DSE: K traffic specs, ONE compiled executable.
 
     ::
@@ -1375,6 +1486,11 @@ def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
     (n_chiplets / mesh_radix / gateway_positions / ...) or SWEEPABLE_FIELDS
     grids of length K pair element-wise with the specs, so "workload i on
     topology i with runtime knobs i" is still one compiled call.
+
+    `dest=True` attaches each spec's destination matrix to its generated
+    trace (`traffic.generate(..., dest=True)`), so every lane resolves
+    actual source->destination gateway pressure — this is what separates
+    transpose/tornado from uniform at the same mean load.
     """
     specs = [traffic.as_spec(s) for s in specs]
     if not specs:
@@ -1397,13 +1513,14 @@ def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
         c_gen = max(int(c) for c in topo_grids.get(
             "n_chiplets", [sim.cfg.n_chiplets]))
         gen_cfg = sim.cfg.with_topology(n_chiplets=c_gen)
-        traces = [traffic.generate(s, ky, gen_cfg)
+        traces = [traffic.generate(s, ky, gen_cfg, dest=dest)
                   for s, ky in zip(specs, keys)]
         batch = stack_traces(traces, pad=True)
         sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
-        ext, mem, intra, ext_frac, t_mask = _topo_trace_arrays(batch, c_max)
+        ext, mem, intra, ext_frac, t_mask, dmat = _topo_trace_arrays(
+            batch, c_max)
         return _sweep_workload_topo_jit(ext, mem, intra, ext_frac, t_mask,
-                                        topo, ov, sim=sim_p)
+                                        topo, ov, dmat, sim=sim_p)
 
     unknown = set(grids) - set(SWEEPABLE_FIELDS)
     if unknown:
@@ -1411,11 +1528,13 @@ def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
             f"non-sweepable fields: {sorted(unknown)} (topology: "
             f"{TOPOLOGY_SWEEPABLE_FIELDS}, runtime: {SWEEPABLE_FIELDS})")
     ov = {g: jnp.asarray(v) for g, v in grids.items()}
-    traces = [traffic.generate(s, ky, sim.cfg) for s, ky in zip(specs, keys)]
+    traces = [traffic.generate(s, ky, sim.cfg, dest=dest)
+              for s, ky in zip(specs, keys)]
     batch = stack_traces(traces, pad=True)
-    ext, mem, intra, ext_frac, t_mask = _trace_arrays(batch)
+    ext, mem, intra, ext_frac, t_mask, dmat = _trace_arrays(batch)
     return _sweep_workload_jit(ext, mem, intra, ext_frac, t_mask,
-                               selection_tables_jax(sim.cfg), ov, sim=sim)
+                               selection_tables_jax(sim.cfg), ov, dmat,
+                               sim=sim)
 
 
 class SimSession:
@@ -1482,7 +1601,7 @@ class SimSession:
         Masked intervals freeze the carry (the controller never reacts to
         padded idle epochs), so padding mid-stream is exact too.
         """
-        ext, mem, intra, ext_frac, t_mask = _trace_arrays(chunk)
+        ext, mem, intra, ext_frac, t_mask, dest = _trace_arrays(chunk)
         if ext.ndim != 2:
             raise ValueError(
                 f"step_chunk takes one unbatched trace chunk "
@@ -1491,11 +1610,11 @@ class SimSession:
         if flt is not None:
             self._state, recs, sums = _session_chunk_faults_jit(
                 self._state, ext, mem, intra, ext_frac, t_mask,
-                self._tables, flt, sim=self.sim)
+                self._tables, flt, dest, sim=self.sim)
         else:
             self._state, recs, sums = _session_chunk_jit(
                 self._state, ext, mem, intra, ext_frac, t_mask,
-                self._tables, sim=self.sim)
+                self._tables, dest, sim=self.sim)
         self._sums = sums if self._sums is None else jax.tree.map(
             lambda a, b: a + b, self._sums, sums)
         return {"records": recs,
@@ -1559,6 +1678,11 @@ def session_tick(states: SimState, batch: dict, tables: dict,
     hardware time, not session time — routed to the fault twin so clean
     ticks keep their own executable and exact numerics.
 
+    An optional `batch["dest"]` [B, C, C] (per-lane destination matrices,
+    e.g. from `stack_traces` over `generate(..., dest=True)` chunks) routes
+    every lane through the destination-aware latency path; absent, the
+    tick bit-matches the pre-dest executable.
+
     Returns (new_states, records, sums), each with a leading [B] axis.
     The carry is NOT donated: the caller may keep the previous states
     pytree to roll back lanes whose step failed (retry path).
@@ -1568,6 +1692,8 @@ def session_tick(states: SimState, batch: dict, tables: dict,
     intra = jnp.asarray(batch["int_load"])
     ext_frac = jnp.asarray(batch["ext_frac"])
     t_mask = jnp.asarray(batch["t_mask"], jnp.float32)
+    dest = batch.get("dest")
+    dest = None if dest is None else jnp.asarray(dest, jnp.float32)
     if ext.ndim != 3 or mem.ndim != 2 or t_mask.ndim != 2:
         raise ValueError(
             f"session_tick takes lane-stacked chunks (ext_load [B, T, C], "
@@ -1575,7 +1701,7 @@ def session_tick(states: SimState, batch: dict, tables: dict,
             f"mem_load {mem.shape}, t_mask {t_mask.shape}")
     if frame is None:
         return _session_tick_jit(states, ext, mem, intra, ext_frac, t_mask,
-                                 tables, sim=sim)
+                                 tables, dest, sim=sim)
     missing = [k for k in FAULT_KEYS if k not in frame]
     if missing:
         raise ValueError(f"fault frame is missing {missing} "
@@ -1587,7 +1713,7 @@ def session_tick(states: SimState, batch: dict, tables: dict,
             f"tick chunk has {int(mem.shape[1])} — compile the frame at "
             f"the server's chunk length")
     return _session_tick_faults_jit(states, ext, mem, intra, ext_frac,
-                                    t_mask, tables, flt, sim=sim)
+                                    t_mask, tables, flt, dest, sim=sim)
 
 
 def session_sums_zero() -> dict:

@@ -26,6 +26,9 @@ from repro.core.traffic.specs import (ALL_SYNTHETIC_SPECS, APP_NAMES,
                                       TrafficSpec, UniformSpec, as_spec,
                                       expected_mean_ext_load,
                                       permutation_destinations)
+from repro.core.traffic.dest import (clear_destination_caches,
+                                     destination_matrix,
+                                     destination_matrix_jax)
 from repro.core.traffic.generators import (all_app_traces, generate,
                                            generate_trace)
 from repro.core.traffic.transform import (TRACE_KEYS, chunk_trace,
@@ -37,7 +40,8 @@ __all__ = [
     "ALL_SYNTHETIC_SPECS", "APP_NAMES", "AppProfile", "BurstySpec",
     "HotspotSpec", "PARSEC", "PERMUTATION_PATTERNS", "ParsecSpec",
     "PermutationSpec", "TRACE_KEYS", "TrafficSpec", "UniformSpec",
-    "all_app_traces", "as_spec", "chunk_trace", "concat_traces",
+    "all_app_traces", "as_spec", "chunk_trace", "clear_destination_caches",
+    "concat_traces", "destination_matrix", "destination_matrix_jax",
     "expected_mean_ext_load", "generate", "generate_trace", "pad_trace",
     "permutation_destinations", "slice_trace", "trace_length",
     "validate_trace",

@@ -1,0 +1,121 @@
+"""Spec-conditioned destination matrices: who sends to whom.
+
+The epoch model consumed only per-chiplet *injected* load through PR 7, so
+permutation workloads (transpose / tornado / bit-complement) were scenario-
+diverse in load but invisible to routing — exactly the congestion structure
+ReSiPI's traffic-driven gateway deployment is supposed to exploit. This
+module builds the row-stochastic destination distribution ``dest`` [C, C]
+for every spec family:
+
+  * `UniformSpec` / `BurstySpec` — uniform over the C-1 other chiplets
+    (the canonical uniform-random destination model).
+  * `HotspotSpec` — uniform as well: the hotspot *set* is drawn from the
+    PRNG key at generation time, so a spec-keyed (deterministic) matrix
+    cannot name it; spatial concentration still enters through the load
+    columns.
+  * `PermutationSpec` — one-hot rows onto the fixed partner chiplet.
+    Self-paired chiplets (transpose diagonal, bit-complement middle) keep
+    their one-hot on the *diagonal*: the generator diverts their ext load
+    to `int_load`, so the diagonal rows mark exactly the chiplets whose
+    ext column is zero — the divert-parity invariant the property tests
+    pin (`dest` diagonal == generator self-pair mask).
+  * `ParsecSpec` — calibrated spread: ring-distance exponential decay with
+    a per-app locality scale derived from the profile's `ext_frac` (more
+    interposer-bound apps spread further), zero diagonal, row-normalized.
+
+Matrices are memoized per ``(spec, cfg)`` exactly like the selection
+tables — both spec and cfg are frozen/hashable — so repeated `generate`
+calls and `sweep_workload` re-keys never rebuild them, and
+`simulator.clear_engine_caches()` clears these caches too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constants import NETWORK, NetworkConfig
+from repro.core.traffic.specs import (ParsecSpec, PermutationSpec,
+                                      TrafficSpec, as_spec,
+                                      permutation_destinations)
+
+
+def _uniform_offdiag(c: int) -> np.ndarray:
+    if c <= 1:
+        return np.ones((c, c), np.float32)
+    d = np.full((c, c), 1.0 / (c - 1), np.float32)
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def _permutation_dest(spec: PermutationSpec, c: int) -> np.ndarray:
+    dst = permutation_destinations(spec.pattern, c)
+    d = np.zeros((c, c), np.float32)
+    d[np.arange(c), dst] = 1.0
+    return d
+
+
+def _parsec_dest(spec: ParsecSpec, c: int) -> np.ndarray:
+    if c <= 1:
+        return np.ones((c, c), np.float32)
+    # Ring distance on the chiplet index: adjacent chiplets are cheap to
+    # reach, so low-ext_frac (locality-heavy) apps concentrate there while
+    # interposer-bound apps spread nearly uniformly.
+    i = np.arange(c)
+    hops = np.abs(i[:, None] - i[None, :])
+    hops = np.minimum(hops, c - hops)
+    tau = 1.0 + 4.0 * spec.profile.ext_frac
+    d = np.exp(-hops / tau).astype(np.float32)
+    np.fill_diagonal(d, 0.0)
+    return d / d.sum(axis=1, keepdims=True)
+
+
+@functools.lru_cache(maxsize=None)
+def _destination_matrix(spec: TrafficSpec, cfg: NetworkConfig) -> np.ndarray:
+    c = cfg.n_chiplets
+    if isinstance(spec, PermutationSpec):
+        d = _permutation_dest(spec, c)
+    elif isinstance(spec, ParsecSpec):
+        d = _parsec_dest(spec, c)
+    else:                       # Uniform / Hotspot / Bursty (see module doc)
+        d = _uniform_offdiag(c)
+    d.setflags(write=False)
+    return d
+
+
+def destination_matrix(spec, cfg: NetworkConfig = NETWORK) -> np.ndarray:
+    """Row-stochastic destination distribution for a spec ([C, C], numpy).
+
+    ``dest[i, j]`` is the fraction of chiplet i's inter-chiplet packets
+    destined to chiplet j. Memoized per (spec, cfg); the returned array is
+    read-only (shared across callers).
+    """
+    return _destination_matrix(as_spec(spec), cfg)
+
+
+destination_matrix.cache_info = _destination_matrix.cache_info
+destination_matrix.cache_clear = _destination_matrix.cache_clear
+destination_matrix.__wrapped__ = _destination_matrix
+
+
+@functools.lru_cache(maxsize=None)
+def _destination_matrix_jax(spec: TrafficSpec, cfg: NetworkConfig):
+    return jnp.asarray(_destination_matrix(spec, cfg))
+
+
+def destination_matrix_jax(spec, cfg: NetworkConfig = NETWORK):
+    """Device-resident view of `destination_matrix` (memoized separately so
+    the device array is placed once per (spec, cfg), not per trace)."""
+    return _destination_matrix_jax(as_spec(spec), cfg)
+
+
+destination_matrix_jax.cache_info = _destination_matrix_jax.cache_info
+destination_matrix_jax.cache_clear = _destination_matrix_jax.cache_clear
+destination_matrix_jax.__wrapped__ = _destination_matrix_jax
+
+
+def clear_destination_caches() -> None:
+    """Drop both memoized views (wired into `clear_engine_caches`)."""
+    _destination_matrix_jax.cache_clear()
+    _destination_matrix.cache_clear()

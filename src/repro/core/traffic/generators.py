@@ -155,16 +155,27 @@ def _generate_jit(spec: TrafficSpec, key: jax.Array,
 
 
 def generate(spec, key: jax.Array, cfg: NetworkConfig = NETWORK, *,
-             jit: bool = True) -> dict:
+             jit: bool = True, dest: bool = False) -> dict:
     """Generate one trace from a spec (or PARSEC app name) and a PRNG key.
 
     `spec` and `cfg` are static jit arguments — the compiled generator is
     cached per (spec, cfg) and re-keying is compile-free. `jit=False` runs
     the eager path (the property tests pin jit/eager parity).
+
+    `dest=True` attaches the spec's row-stochastic destination matrix
+    (`dest` [C, C], see `traffic.dest`) so the simulator resolves actual
+    source->destination gateway pressure. Opt-in: traces without `dest`
+    ride the uniform-destination path, bit-matching pre-dest numbers. The
+    matrix is memoized per (spec, cfg) and attached outside the compiled
+    generator, so the jit cache and eager parity are unaffected.
     """
     spec = as_spec(spec)
     arrays = (_generate_jit if jit else _generate)(spec, key, cfg)
-    return dict(arrays, app=spec.name)
+    out = dict(arrays, app=spec.name)
+    if dest:
+        from repro.core.traffic.dest import destination_matrix_jax
+        out["dest"] = destination_matrix_jax(spec, cfg)
+    return out
 
 
 def generate_trace(app: str, n_intervals: int, key: jax.Array,

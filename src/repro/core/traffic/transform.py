@@ -13,10 +13,25 @@ import jax.core as jax_core
 import jax.numpy as jnp
 import numpy as np
 
-# The array keys every trace must carry (plus the "app" label and, for
-# time-padded traces, "t_mask").
+# The array keys every trace must carry (plus the "app" label, the ragged-T
+# "t_mask", and the optional "dest" destination matrix). "dest" is [C, C] and
+# time-free: it must never be sliced/padded along T (with C == T the shape
+# check alone could not tell them apart), so it lives in the meta set and is
+# carried whole by every transform; only `slice_trace` touches it (chiplet
+# axis) and `concat_traces` mixes it load-weighted.
 TRACE_KEYS = ("ext_load", "mem_load", "int_load", "ext_frac")
-_META_KEYS = ("app", "t_mask")
+_META_KEYS = ("app", "t_mask", "dest")
+
+
+def _renormalize_rows(dest):
+    """Re-normalize a destination matrix's rows after masking/slicing.
+
+    Rows whose mass was entirely masked away go to all-zero (their sources
+    inject nothing in that view, so the row is never consulted).
+    """
+    dest = jnp.asarray(dest, jnp.float32)
+    row = jnp.sum(dest, axis=-1, keepdims=True)
+    return jnp.where(row > 0.0, dest / jnp.maximum(row, 1e-12), 0.0)
 
 
 def validate_trace(trace, who: str = "trace") -> dict:
@@ -60,6 +75,24 @@ def validate_trace(trace, who: str = "trace") -> dict:
                 f"{who}[{k!r}] contains negative values (min "
                 f"{float(arr.min()):g}) — loads are non-negative "
                 f"flit rates")
+    d = trace.get("dest")
+    if d is not None and not isinstance(d, jax_core.Tracer):
+        arr = np.asarray(d)
+        c = int(np.shape(np.asarray(trace["ext_load"]))[-1]) \
+            if not isinstance(trace["ext_load"], jax_core.Tracer) else None
+        # Stacked batches (stack_traces) carry one leading [K] axis; the
+        # trailing two dims must still be square and match the chiplet axis.
+        if arr.ndim not in (2, 3) or arr.shape[-2] != arr.shape[-1] \
+                or (c is not None and arr.shape[-1] != c):
+            raise ValueError(
+                f"{who}['dest'] must be a square [C, C] destination matrix "
+                f"(optionally with one leading batch axis) matching the "
+                f"trace's chiplet axis"
+                f"{'' if c is None else f' (C={c})'}, got shape {arr.shape}")
+        if not np.isfinite(arr).all() or (arr < 0).any():
+            raise ValueError(
+                f"{who}['dest'] must be finite and non-negative (a "
+                f"row-stochastic destination distribution)")
     return trace
 
 
@@ -82,9 +115,13 @@ def slice_trace(trace: dict, n_chiplets: int) -> dict:
     c = trace["ext_load"].shape[-1]
     if n_chiplets > c:
         raise ValueError(f"trace has {c} chiplets, needs >= {n_chiplets}")
-    return dict(trace,
-                ext_load=trace["ext_load"][..., :n_chiplets],
-                int_load=trace["int_load"][..., :n_chiplets])
+    out = dict(trace,
+               ext_load=trace["ext_load"][..., :n_chiplets],
+               int_load=trace["int_load"][..., :n_chiplets])
+    if trace.get("dest") is not None:
+        out["dest"] = _renormalize_rows(
+            trace["dest"][..., :n_chiplets, :n_chiplets])
+    return out
 
 
 def pad_trace(trace: dict, n_intervals: int) -> dict:
@@ -142,7 +179,7 @@ def chunk_trace(trace: dict, size: int, *, pad: bool = False):
     per_t = [k for k, v in trace.items()
              if k in ("ext_load", "mem_load", "int_load", "t_mask")
              or (hasattr(v, "ndim") and getattr(v, "ndim", 0) >= 1
-                 and k != "app" and jnp.shape(v)[0] == t)]
+                 and k not in ("app", "dest") and jnp.shape(v)[0] == t)]
     for s in range(0, t, size):
         chunk = {k: (v[s:s + size] if k in per_t else v)
                  for k, v in trace.items()}
@@ -182,6 +219,22 @@ def concat_traces(traces: list) -> dict:
         out["t_mask"] = jnp.concatenate(
             [jnp.asarray(tr.get("t_mask", jnp.ones((n,), jnp.float32)),
                          jnp.float32) for tr, n in zip(traces, lens)])
+
+    if any(tr.get("dest") is not None for tr in traces):
+        if not all(tr.get("dest") is not None for tr in traces):
+            raise ValueError(
+                "'dest' present in only some segments — concat_traces "
+                "cannot stitch a partial destination matrix (attach one to "
+                "every segment via generate(..., dest=True) or drop it)")
+        # One composite matrix for the whole run: each segment's destination
+        # rows weighted by its total ext load (mirrors the ext_frac mix),
+        # then re-normalized to row-stochastic.
+        dests = jnp.stack([jnp.asarray(tr["dest"], jnp.float32)
+                           for tr in traces])
+        w = jnp.where(total > 0.0, weights / jnp.maximum(total, 1e-12),
+                      jnp.full_like(weights, 1.0 / len(traces)))
+        out["dest"] = _renormalize_rows(
+            jnp.sum(dests * w[:, None, None], axis=0))
 
     known = set(TRACE_KEYS) | set(_META_KEYS)
     extras = sorted(set().union(*(set(tr) for tr in traces)) - known)

@@ -3,6 +3,7 @@
 flash_attention — blockwise softmax attention (prefill path)
 ssd_scan        — Mamba2 SSD intra-chunk compute (the roofline memory fix)
 noc_step        — flit-level NoC router sim (Fig. 13 residency)
+epoch_step      — fused RESIPI interval scan (metrics + power + controller)
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes with

@@ -1,0 +1,23 @@
+"""Reference implementation: the XLA lax.scan interval loop, verbatim.
+
+The oracle the fused kernel is validated against (1e-6 in interpret mode):
+exactly `simulator.make_step` scanned over the trace, i.e. what every entry
+point runs when `SimConfig.epoch_kernel` is off. Kept as a thin named
+function so parity tests and benchmarks compare the two engines through one
+symmetric interface.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def epoch_run_reference(state, xs, sim, tables: dict, *,
+                        dest: Optional[jax.Array] = None,
+                        faulted: bool = False) -> Tuple[object, dict]:
+    """lax.scan over make_step — the unfused engine, same call contract."""
+    from repro.core.simulator import make_step
+
+    step = make_step(sim, tables, None, faulted=faulted, dest=dest)
+    return jax.lax.scan(step, state, xs)

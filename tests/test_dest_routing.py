@@ -1,0 +1,317 @@
+"""Destination-aware routing fidelity: spec-conditioned `dest` matrices.
+
+Through PR 7 the epoch model consumed only per-chiplet *injected* load, so
+permutation workloads were invisible to routing. `traffic.generate(...,
+dest=True)` now attaches the spec's row-stochastic destination matrix and
+the engine resolves actual source->destination gateway pressure. Pinned
+here:
+
+  * opt-in contract: `dest=False` traces are bit-identical to pre-dest
+    generation and both engines (jit + eager) agree bitwise on them;
+  * the fidelity itself: destination matrices *measurably* move the
+    inter-chiplet latency/power numbers, and transpose/tornado separate
+    from uniform at the same calibrated mean load — the congestion
+    structure ReSiPI's traffic-driven deployment exploits;
+  * matrix properties (row-stochastic, self-pair divert parity) across
+    every spec family and chiplet count, property-based;
+  * memoization per (spec, cfg) and `clear_engine_caches` wiring;
+  * transform carry: concat mixes load-weighted, slice renormalizes,
+    pad/chunk carry `dest` whole, stacking demands uniformity;
+  * padded-topology paths: masked chiplet columns contribute zero with a
+    destination matrix attached;
+  * the session server refuses dest-carrying traces instead of silently
+    serving them as uniform traffic.
+"""
+try:                                     # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # minimal container: use shim
+    from hypothesis_fallback import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import simulator as S
+from repro.core import traffic
+from repro.core.constants import NETWORK
+from repro.core.simulator import Arch, SimConfig
+from repro.core.traffic import (ParsecSpec, PermutationSpec, UniformSpec,
+                                destination_matrix, destination_matrix_jax,
+                                permutation_destinations)
+
+SIM = SimConfig()
+MEAN_LOAD, T = 0.05, 40
+
+
+def _spec_of(kind: str, c: int):
+    if kind == "uniform":
+        return UniformSpec(mean_load=0.02)
+    if kind == "bursty":
+        return traffic.BurstySpec(mean_load=0.02)
+    if kind == "hotspot":
+        return traffic.HotspotSpec(mean_load=0.02)
+    if kind == "parsec":
+        return ParsecSpec(app="dedup")
+    pats = traffic.PERMUTATION_PATTERNS
+    return PermutationSpec(pattern=pats[c % len(pats)], mean_load=0.02)
+
+
+# -- opt-in contract ---------------------------------------------------------
+
+def test_dest_is_opt_in():
+    key = jax.random.PRNGKey(0)
+    spec = PermutationSpec(pattern="transpose", mean_load=MEAN_LOAD,
+                           n_intervals=12)
+    plain = traffic.generate(spec, key)
+    with_d = traffic.generate(spec, key, dest=True)
+    assert "dest" not in plain
+    assert np.asarray(with_d["dest"]).shape == (NETWORK.n_chiplets,) * 2
+    # attaching the matrix must not perturb the load columns at all
+    for k in traffic.TRACE_KEYS:
+        np.testing.assert_array_equal(np.asarray(plain[k]),
+                                      np.asarray(with_d[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("arch", list(Arch))
+def test_dest_none_bitmatch_per_arch(arch):
+    """Destination-free traces ride the exact uniform branch: the jit and
+    eager engines agree bitwise, dest threading adds zero numeric drift."""
+    sim = SIM.with_arch(arch)
+    tr = traffic.generate(UniformSpec(mean_load=MEAN_LOAD, n_intervals=14),
+                          jax.random.PRNGKey(1))
+    jit_out = S.simulate(tr, sim)
+    eager_out = S.simulate_eager(tr, sim)
+    for k in S.SUMMARY_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(jit_out["summary"][k]),
+            np.asarray(eager_out["summary"][k]), err_msg=f"summary[{k}]")
+
+
+@pytest.mark.parametrize("arch", list(Arch))
+def test_dest_oracle_parity_per_arch(arch):
+    """With a destination matrix, the compiled engine matches the eager
+    per-call-retrace oracle at 1e-6 for every architecture."""
+    sim = SIM.with_arch(arch)
+    tr = traffic.generate(
+        PermutationSpec(pattern="transpose", mean_load=MEAN_LOAD,
+                        n_intervals=14),
+        jax.random.PRNGKey(2), dest=True)
+    jit_out = S.simulate(tr, sim)
+    eager_out = S.simulate_eager(tr, sim)
+    for k in S.SUMMARY_KEYS:
+        np.testing.assert_allclose(
+            np.asarray(jit_out["summary"][k]),
+            np.asarray(eager_out["summary"][k]),
+            rtol=1e-6, atol=1e-6, err_msg=f"summary[{k}]")
+
+
+# -- the fidelity: destinations move the numbers -----------------------------
+
+def _inter_latency(trace):
+    out = S.simulate(trace, SIM)
+    tm = np.asarray(trace.get("t_mask", np.ones((T,))))
+    mi = np.asarray(out["records"]["mean_inter_latency"])
+    return float(mi.sum() / tm.sum()), \
+        float(out["summary"]["mean_power_mw"])
+
+
+@pytest.mark.parametrize("pattern", ["transpose", "tornado"])
+def test_dest_changes_the_numbers(pattern):
+    """Same trace with/without its destination matrix: the resolved
+    gateway pressure must move the inter-chiplet latency measurably
+    (routing was destination-blind before, so identical numbers would
+    mean the matrix is decorative)."""
+    tr = traffic.generate(
+        PermutationSpec(pattern=pattern, mean_load=MEAN_LOAD,
+                        n_intervals=T),
+        jax.random.PRNGKey(3), dest=True)
+    with_d, _ = _inter_latency(tr)
+    without, _ = _inter_latency({k: v for k, v in tr.items()
+                                 if k != "dest"})
+    assert abs(with_d - without) / without > 0.02, (with_d, without)
+
+
+def test_permutation_separates_from_uniform_at_equal_load():
+    """The acceptance pin: transpose/tornado vs uniform at the same
+    calibrated mean load land on visibly different latency/power points
+    once destinations are resolved."""
+    def run(spec):
+        lat, pw = zip(*[_inter_latency(
+            traffic.generate(spec, jax.random.PRNGKey(s), dest=True))
+            for s in range(4)])
+        return float(np.mean(lat)), float(np.mean(pw))
+    u_lat, u_pow = run(UniformSpec(mean_load=MEAN_LOAD, n_intervals=T))
+    t_lat, t_pow = run(PermutationSpec(pattern="transpose",
+                                       mean_load=MEAN_LOAD, n_intervals=T))
+    o_lat, o_pow = run(PermutationSpec(pattern="tornado",
+                                       mean_load=MEAN_LOAD, n_intervals=T))
+    assert abs(t_lat - u_lat) / u_lat > 0.01, (t_lat, u_lat)
+    assert abs(o_lat - u_lat) / u_lat > 0.01, (o_lat, u_lat)
+    # transpose self-pairs divert to intra: far fewer lit gateways
+    assert abs(t_pow - u_pow) / u_pow > 0.10, (t_pow, u_pow)
+
+
+# -- matrix properties (property-based) --------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(["uniform", "bursty", "hotspot", "parsec",
+                        "permutation"]),
+       st.sampled_from([4, 9, 16]))
+def test_dest_row_stochastic(kind, c):
+    cfg = NETWORK.with_topology(n_chiplets=c)
+    d = destination_matrix(_spec_of(kind, c), cfg)
+    assert d.shape == (c, c)
+    assert (d >= 0).all()
+    np.testing.assert_allclose(d.sum(axis=1), np.ones((c,)),
+                               rtol=1e-5, atol=1e-5)
+    if kind != "permutation":       # permutation self-pairs sit on the diag
+        assert np.all(np.diag(d) == 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([4, 9, 16]),
+       st.integers(min_value=0, max_value=1 << 16))
+def test_permutation_self_pair_divert_parity(c, seed):
+    """The divert-parity invariant: the dest diagonal marks exactly the
+    self-paired chiplets, and those are exactly the chiplets whose ext
+    column the generator diverted to intra traffic (all-zero ext)."""
+    pats = traffic.PERMUTATION_PATTERNS
+    pattern = pats[seed % len(pats)]
+    cfg = NETWORK.with_topology(n_chiplets=c)
+    spec = PermutationSpec(pattern=pattern, mean_load=MEAN_LOAD,
+                           n_intervals=10)
+    d = destination_matrix(spec, cfg)
+    dst = np.asarray(permutation_destinations(pattern, c))
+    self_pair = dst == np.arange(c)
+    np.testing.assert_array_equal(np.diag(d) == 1.0, self_pair)
+    # one-hot rows onto the partner
+    np.testing.assert_array_equal(np.argmax(d, axis=1), dst)
+    tr = traffic.generate(spec, jax.random.PRNGKey(seed), cfg, dest=True)
+    ext = np.asarray(tr["ext_load"])
+    np.testing.assert_array_equal(np.all(ext == 0.0, axis=0), self_pair)
+
+
+# -- memoization -------------------------------------------------------------
+
+def test_dest_matrices_are_memoized():
+    S.clear_engine_caches()
+    spec = PermutationSpec(pattern="transpose", mean_load=MEAN_LOAD)
+    a = destination_matrix(spec, NETWORK)
+    b = destination_matrix(
+        PermutationSpec(pattern="transpose", mean_load=MEAN_LOAD), NETWORK)
+    assert a is b, "equal (spec, cfg) keys must share one matrix"
+    assert not a.flags.writeable
+    j1 = destination_matrix_jax(spec, NETWORK)
+    j2 = destination_matrix_jax(spec, NETWORK)
+    assert j1 is j2
+    assert destination_matrix.cache_info().currsize >= 1
+    S.clear_engine_caches()
+    assert destination_matrix.cache_info().currsize == 0
+    assert destination_matrix_jax.cache_info().currsize == 0
+
+
+# -- transform carry ---------------------------------------------------------
+
+def test_concat_mixes_dest_load_weighted():
+    k = jax.random.PRNGKey(5)
+    a = traffic.generate(UniformSpec(mean_load=MEAN_LOAD, n_intervals=8),
+                         k, dest=True)
+    b = traffic.generate(
+        PermutationSpec(pattern="transpose", mean_load=MEAN_LOAD,
+                        n_intervals=8), k, dest=True)
+    out = traffic.concat_traces([a, b])
+    d = np.asarray(out["dest"])
+    assert d.shape == (NETWORK.n_chiplets,) * 2
+    row = d.sum(axis=1)
+    np.testing.assert_allclose(row[row > 0], 1.0, rtol=1e-5)
+    with pytest.raises(ValueError, match="dest"):
+        traffic.concat_traces([a, {k2: v for k2, v in b.items()
+                                   if k2 != "dest"}])
+
+
+def test_slice_pad_chunk_carry_dest():
+    cfg9 = NETWORK.with_topology(n_chiplets=9)
+    tr = traffic.generate(
+        PermutationSpec(pattern="transpose", mean_load=MEAN_LOAD,
+                        n_intervals=9),
+        jax.random.PRNGKey(6), cfg9, dest=True)
+    sl = traffic.slice_trace(tr, 4)
+    d = np.asarray(sl["dest"])
+    assert d.shape == (4, 4)
+    row = d.sum(axis=1)                  # renormalized after the cut
+    np.testing.assert_allclose(row[row > 0], 1.0, rtol=1e-5)
+    padded = traffic.pad_trace(tr, 16)
+    np.testing.assert_array_equal(np.asarray(padded["dest"]),
+                                  np.asarray(tr["dest"]))
+    for ch in traffic.chunk_trace(tr, 4, pad=True):
+        np.testing.assert_array_equal(np.asarray(ch["dest"]),
+                                      np.asarray(tr["dest"]))
+
+
+def test_stack_traces_demands_dest_uniformity():
+    k = jax.random.PRNGKey(7)
+    a = traffic.generate(UniformSpec(n_intervals=8), k, dest=True)
+    b = traffic.generate(UniformSpec(n_intervals=8), k)
+    with pytest.raises(ValueError, match="destination"):
+        S.stack_traces([a, b])
+    out = S.stack_traces([a, a])
+    assert np.asarray(out["dest"]).shape == (2, 4, 4)
+    S.simulate_batch([a, a], SIM)        # batched dest passes validation
+
+
+def test_validate_trace_dest_errors():
+    tr = traffic.generate(UniformSpec(n_intervals=6), jax.random.PRNGKey(8))
+    with pytest.raises(ValueError, match="square"):
+        traffic.validate_trace(dict(tr, dest=np.ones((4, 3), np.float32)))
+    with pytest.raises(ValueError, match="square"):
+        traffic.validate_trace(dict(tr, dest=np.ones((3, 3), np.float32)))
+    with pytest.raises(ValueError, match="non-negative"):
+        traffic.validate_trace(
+            dict(tr, dest=-np.ones((4, 4), np.float32)))
+
+
+# -- padded topology ---------------------------------------------------------
+
+def test_padded_topology_zero_contribution_with_dest():
+    """Masked chiplet columns stay exactly zero and the real columns match
+    unpadded simulate when the trace carries a destination matrix."""
+    cfg9 = NETWORK.with_topology(n_chiplets=9)
+    tr = traffic.generate(
+        PermutationSpec(pattern="transpose", mean_load=MEAN_LOAD,
+                        n_intervals=12),
+        jax.random.PRNGKey(9), cfg9, dest=True)
+    out = S.sweep_topology(tr, SIM, n_chiplets=[4, 9])
+    for i, c in enumerate([4, 9]):
+        point = S.topology_point_config(SIM, n_chiplets=c)
+        single = S.simulate(traffic.slice_trace(tr, c), point)
+        for k in S.SUMMARY_KEYS:
+            np.testing.assert_allclose(
+                np.asarray(out["summary"][k][i]),
+                np.asarray(single["summary"][k]),
+                rtol=1e-4, atol=1e-4, err_msg=f"summary[{k}] point {i}")
+        gl = np.asarray(out["records"]["gw_load"][i])
+        assert np.all(gl[:, c:] == 0), f"padded lanes carried load at {c}"
+
+
+def test_sweep_workload_dest_separates_patterns():
+    """One compiled workload sweep, destinations resolved per lane."""
+    specs = [UniformSpec(mean_load=MEAN_LOAD, n_intervals=20),
+             PermutationSpec(pattern="tornado", mean_load=MEAN_LOAD,
+                             n_intervals=20)]
+    out = S.sweep_workload(specs, SIM, seed=0, dest=True)
+    lat = np.asarray(out["summary"]["mean_latency"])
+    assert lat.shape == (2,)
+    assert abs(lat[1] - lat[0]) / lat[0] > 0.005, lat
+
+
+# -- serve guard -------------------------------------------------------------
+
+def test_serve_session_rejects_dest_traces():
+    from repro.serve.policies import ServerPolicy
+    from repro.serve.scheduler import ServeSession, SessionRequest
+    tr = traffic.generate(UniformSpec(n_intervals=8), jax.random.PRNGKey(10),
+                          dest=True)
+    with pytest.raises(ValueError, match="destination matrix"):
+        ServeSession(SessionRequest(trace=tr), ServerPolicy(),
+                     NETWORK.n_chiplets, now=0)
