@@ -3,7 +3,7 @@
 # `benchmarks` namespace package resolves when a bench runs standalone.
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults bench-serve bench-kernels
+.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults bench-serve bench-kernels bench-distributed
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -45,3 +45,8 @@ bench-serve:
 # (-> BENCH_kernels.json; interpret off-TPU, compiled on TPU).
 bench-kernels:
 	$(PY) benchmarks/bench_kernels.py
+
+# Fleet: emulated-host scaling, real 2-process jax.distributed parity,
+# AOT/persistent-cache cold-start removal (-> BENCH_distributed.json).
+bench-distributed:
+	$(PY) benchmarks/bench_distributed.py

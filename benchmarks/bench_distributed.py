@@ -1,0 +1,223 @@
+"""Fleet benchmark: host scaling, distributed parity, cold-start removal.
+
+Three measurements, all subprocess-based (each worker is a REAL fresh
+process — the regime a fleet actually runs in), landing in
+benchmarks/results/BENCH_distributed.json with an appended history entry:
+
+  * emulated-hosts scaling — the co-design grid split into the exact
+    contiguous shards a 1- and 2-worker fleet owns
+    (`python -m repro.launch.fleet --shard i:n`), each shard run to its
+    warm sweep wall. On a box with enough cores the workers co-schedule
+    and the fleet wall is max(worker walls); here every worker gets the
+    whole machine sequentially, so max(worker walls) is the faithful
+    stand-in for that wall and aggregate grid-points/sec is
+    K / max(walls). The JSON says so (`mode: emulated-hosts`) and records
+    the core count — no silent claims of concurrency the hardware
+    cannot host.
+  * distributed parity — a REAL 2-process `jax.distributed` fleet
+    (gloo collectives, local coordinator) over a small grid, compared
+    per-point against the single-process run: the GSPMD-sharded
+    executable must reproduce the single-host numbers.
+  * cold vs cache-warm first dispatch — a fresh process compiles
+    `simulate` + `sweep_topology` into an empty persistent cache (cold
+    wall), then a second fresh process repeats the identical calls
+    against the now-populated cache (warm wall). The acceptance bar is
+    warm <= 25% of cold on both entry points.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# The scaling grid: 4 chiplet counts x 8 placements x 4 workloads = 128
+# co-design points (the same axes a full-scale thousands-of-points fleet
+# run sweeps, sized so per-worker walls dwarf dispatch overhead + timer
+# noise on a CI box).
+SCALING = ["--chiplets", "4,9,16,25", "--placements", "8",
+           "--workloads", "uniform,bursty,dedup,canneal",
+           "--intervals", "12", "--reps", "7", "--seed", "0"]
+SCALING_K = 4 * 8 * 4
+
+# The parity grid: small enough that the 2-process run stays fast.
+PARITY = ["--chiplets", "4,9", "--placements", "2",
+          "--workloads", "uniform,bursty", "--intervals", "8",
+          "--seed", "0", "--dump-points"]
+
+
+def _fleet(extra, out_path, cache_dir, timeout=900) -> dict:
+    env = dict(os.environ, PYTHONPATH=f"{REPO}/src")
+    cmd = [sys.executable, "-m", "repro.launch.fleet",
+           "--cache-dir", str(cache_dir), "--out", str(out_path)] + extra
+    proc = subprocess.run(cmd, cwd=REPO, env=env, timeout=timeout,
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"fleet run failed ({cmd}):\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    return json.loads(Path(out_path).read_text())
+
+
+def emulated_scaling(cache_dir, tmp) -> dict:
+    """Warm sweep walls for the 1-worker and 2-worker shardings of the
+    same grid; aggregate points/sec = K / max(worker walls)."""
+    out = {"mode": "emulated-hosts", "grid_points": SCALING_K,
+           "host_cpu_count": os.cpu_count(),
+           "host_cores_available": len(os.sched_getaffinity(0))
+           if hasattr(os, "sched_getaffinity") else os.cpu_count(),
+           "workers": {}}
+    for n in (1, 2):
+        shards = []
+        for i in range(n):
+            j = _fleet(SCALING + ["--shard", f"{i}:{n}"],
+                       tmp / f"scale_{n}_{i}.json", cache_dir)
+            shards.append({"shard": f"{i}:{n}",
+                           "grid_points": j["grid_points"],
+                           "first_call_s": j["first_call_s"],
+                           "sweep_wall_s": j["sweep_wall_s"],
+                           "points_per_sec": j["points_per_sec"]})
+        wall = max(s["sweep_wall_s"] for s in shards)
+        out["workers"][str(n)] = {
+            "shards": shards, "fleet_wall_s": wall,
+            "aggregate_points_per_sec": SCALING_K / wall}
+    a1 = out["workers"]["1"]["aggregate_points_per_sec"]
+    a2 = out["workers"]["2"]["aggregate_points_per_sec"]
+    out["ratio_2v1"] = a2 / a1
+    out["meets_1p7x"] = out["ratio_2v1"] >= 1.7
+    return out
+
+
+def distributed_parity(cache_dir, tmp) -> dict:
+    """One real 2-process jax.distributed run vs the single-process run."""
+    single = _fleet(PARITY + ["--shard", "0:1"],
+                    tmp / "par_single.json", cache_dir)
+    dist = _fleet(PARITY + ["--processes", "2"],
+                  tmp / "par_dist.json", cache_dir)
+    diffs = [abs(a - b) / max(abs(a), 1e-12) for a, b in
+             zip(single["mean_latency"], dist["mean_latency"])]
+    return {"grid_points": single["grid_points"],
+            "process_count": dist["process_count"],
+            "device_count": dist["device_count"],
+            "pad_lanes": dist["pad_lanes"],
+            "first_call_s": dist["first_call_s"],
+            "sweep_wall_s": dist["sweep_wall_s"],
+            "max_rel_diff": max(diffs),
+            "parity": max(diffs) < 1e-6}
+
+
+_CHILD_SRC = r"""
+import json, sys, time
+sys.path.insert(0, sys.argv[2])
+from repro.runtime import cache as rcache
+rcache.enable_persistent_cache(sys.argv[1])
+import jax
+from repro.core import traffic
+from repro.core.simulator import Arch, SimConfig, simulate, sweep_topology
+sim = SimConfig().with_arch(Arch.RESIPI)
+mode = sys.argv[3]   # "aot" (serialized executables) | "jit" (jit + cache)
+# Traces are prepared BEFORE the timers: each wall is that entry point's
+# first dispatch in a fresh process. Cold = trace + XLA compile (+ AOT
+# serialize). Warm/aot = deserialize the persisted executable (no tracing,
+# no XLA); warm/jit = re-trace + persistent-cache hit.
+grid = [4, 9, 16, 25, 36, 49]
+tr49 = traffic.generate(traffic.UniformSpec(n_intervals=24),
+                        jax.random.PRNGKey(0),
+                        sim.cfg.with_topology(n_chiplets=max(grid)))
+tr = traffic.generate(traffic.UniformSpec(n_intervals=64),
+                      jax.random.PRNGKey(0), sim.cfg)
+walls = {}
+t0 = time.perf_counter()
+if mode == "aot":
+    exe = rcache.aot_compile("sweep_topology", tr49, sim, n_chiplets=grid)
+    jax.block_until_ready(exe(tr49, sim, n_chiplets=grid))
+else:
+    jax.block_until_ready(sweep_topology(tr49, sim, n_chiplets=grid))
+walls["sweep_topology"] = time.perf_counter() - t0
+t0 = time.perf_counter()
+if mode == "aot":
+    exe = rcache.aot_compile("simulate", tr, sim)
+    jax.block_until_ready(exe(tr, sim))
+else:
+    jax.block_until_ready(simulate(tr, sim))
+walls["simulate"] = time.perf_counter() - t0
+print("WALLS " + json.dumps(walls))
+"""
+
+
+def _coldwarm_child(cache_dir, mode) -> dict:
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD_SRC, str(cache_dir),
+         str(REPO / "src"), mode],
+        cwd=REPO, timeout=900, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise RuntimeError(f"cold/warm child failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("WALLS "):
+            return json.loads(line[len("WALLS "):])
+    raise RuntimeError(f"no WALLS line in child output:\n{proc.stdout}")
+
+
+def cold_vs_warm(tmp) -> dict:
+    """First-dispatch wall in a fresh process: empty cache vs populated.
+
+    The acceptance measurement is the AOT path (serialized executables —
+    the second process neither traces nor compiles); the jit-level
+    persistent cache is measured alongside for context (it removes XLA
+    compilation but still pays re-tracing).
+    """
+    out = {}
+    for mode in ("aot", "jit"):
+        cdir = tmp / f"coldwarm-cache-{mode}"
+        cold = _coldwarm_child(cdir, mode)   # populates the empty cache
+        warm = _coldwarm_child(cdir, mode)   # fresh process, cache hits
+        out[mode] = {k: {"cold_s": cold[k], "warm_s": warm[k],
+                         "warm_over_cold": warm[k] / cold[k]}
+                     for k in cold}
+    return {"method": "aot serialized executables "
+                      "(jit+persistent-cache shown for context)",
+            "entries": out["aot"],
+            "jit_cache_only": out["jit"],
+            "meets_25pct": all(e["warm_over_cold"] <= 0.25
+                               for e in out["aot"].values())}
+
+
+def run() -> dict:
+    t0 = time.time()
+    with tempfile.TemporaryDirectory(prefix="bench-dist-") as td:
+        tmp = Path(td)
+        cache_dir = tmp / "fleet-cache"
+        scaling = emulated_scaling(cache_dir, tmp)
+        parity = distributed_parity(cache_dir, tmp)
+        coldwarm = cold_vs_warm(tmp)
+    result = {
+        "scaling": scaling,
+        "distributed_2proc": parity,
+        "cold_vs_warm": coldwarm,
+        "total_bench_s": time.time() - t0,
+    }
+    from benchmarks.common import save_json_history
+    save_json_history("BENCH_distributed.json", result)
+    return result
+
+
+if __name__ == "__main__":
+    r = run()
+    s, p, c = r["scaling"], r["distributed_2proc"], r["cold_vs_warm"]
+    print(f"scaling [{s['mode']}]: {s['grid_points']} points, "
+          f"1w {s['workers']['1']['aggregate_points_per_sec']:.0f} -> "
+          f"2w {s['workers']['2']['aggregate_points_per_sec']:.0f} "
+          f"points/s (ratio {s['ratio_2v1']:.2f}x, "
+          f">=1.7x: {s['meets_1p7x']})")
+    print(f"distributed 2-proc: {p['process_count']} proc x "
+          f"{p['device_count']} dev, parity={p['parity']} "
+          f"(max rel diff {p['max_rel_diff']:.2e})")
+    for k, e in c["entries"].items():
+        print(f"cold/warm {k}: {e['cold_s']:.2f}s -> {e['warm_s']:.2f}s "
+              f"({e['warm_over_cold']:.0%})")
+    print(f"cache-warm first dispatch <=25% of cold: {c['meets_25pct']}")

@@ -24,11 +24,11 @@ def _run(name, fn, derived_fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_engine, bench_faults, bench_kernels,
-                            bench_placement, bench_search, bench_serve,
-                            bench_topology, bench_traffic, fig10_lm_dse,
-                            fig11_main, fig12_adaptivity, fig13_residency,
-                            table2_overhead, lane_schedule)
+    from benchmarks import (bench_distributed, bench_engine, bench_faults,
+                            bench_kernels, bench_placement, bench_search,
+                            bench_serve, bench_topology, bench_traffic,
+                            fig10_lm_dse, fig11_main, fig12_adaptivity,
+                            fig13_residency, table2_overhead, lane_schedule)
 
     print("name,us_per_call,derived")
     eng = _run("bench_engine", bench_engine.run,
@@ -139,6 +139,25 @@ def main() -> None:
         return (f"{n['sessions_per_s']:.1f}sess/s,"
                 f"bounded={o['queue_bounded']},"
                 f"storm_recovered={s['recovered_within_band']}")
+
+    def _dist_derived(r):
+        s, c = r["scaling"], r["cold_vs_warm"]
+        worst = max(e["warm_over_cold"] for e in c["entries"].values())
+        return (f"scale_2w={s['ratio_2v1']:.2f}x,"
+                f"parity={r['distributed_2proc']['parity']},"
+                f"warm_frac={worst:.0%}")
+
+    dst = _run("bench_distributed", bench_distributed.run, _dist_derived)
+    ds, dp, dc = (dst["scaling"], dst["distributed_2proc"],
+                  dst["cold_vs_warm"])
+    print(f"# distributed: {ds['grid_points']}-point fleet grid "
+          f"[{ds['mode']}] 1w "
+          f"{ds['workers']['1']['aggregate_points_per_sec']:.0f} -> 2w "
+          f"{ds['workers']['2']['aggregate_points_per_sec']:.0f} points/s "
+          f"({ds['ratio_2v1']:.2f}x); real 2-proc mesh parity={dp['parity']}"
+          f"; AOT cache-warm first dispatch "
+          f"{max(e['warm_over_cold'] for e in dc['entries'].values()):.0%} "
+          f"of cold", flush=True)
 
     srv = _run("bench_serve", bench_serve.run, _serve_derived)
     n, o, s = srv["nominal"], srv["overload"], srv["storm"]

@@ -23,7 +23,11 @@
      burst sheds by policy with the queue staying bounded,
   8. the fused epoch_step kernel: `epoch_kernel=True` reproduces the scan
      body at 1e-6 through `simulate` — clean, destination-aware, and
-     faulted — in interpret mode (the engine-parity gate off-TPU).
+     faulted — in interpret mode (the engine-parity gate off-TPU),
+  9. the fleet: a REAL 2-process `jax.distributed` CPU mesh (gloo
+     collectives, local coordinator) runs a small co-design grid through
+     `python -m repro.launch.fleet` and must reproduce the single-process
+     run per-point at 1e-6 (the GSPMD-sharded-executable parity gate).
 
 `--smoke-only` skips the pytest stage (used by CI wrappers that already
 ran the suite, and for quick local iteration).
@@ -359,6 +363,43 @@ def kernel_parity_smoke() -> None:
           f"(clean/dest/faulted summaries match the scan body at 1e-6)")
 
 
+def distributed_smoke() -> None:
+    """Real 2-process jax.distributed fleet vs the single-process run:
+    the same small co-design grid, per-point parity at 1e-6."""
+    import json
+    import os
+    import tempfile
+
+    t0 = time.time()
+    grid = ["--chiplets", "4,9", "--placements", "2",
+            "--workloads", "uniform,bursty", "--intervals", "6",
+            "--seed", "0", "--dump-points"]
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    with tempfile.TemporaryDirectory(prefix="fleet-smoke-") as td:
+        outs = {}
+        for tag, extra in (("single", ["--shard", "0:1"]),
+                           ("dist", ["--processes", "2"])):
+            out = Path(td) / f"{tag}.json"
+            cmd = [sys.executable, "-m", "repro.launch.fleet",
+                   "--cache-dir", f"{td}/cache", "--out", str(out)] \
+                + grid + extra
+            proc = subprocess.run(cmd, cwd=REPO, env=env, timeout=600,
+                                  capture_output=True, text=True)
+            assert proc.returncode == 0, \
+                f"fleet {tag} run failed:\n{proc.stdout}\n{proc.stderr}"
+            outs[tag] = json.loads(out.read_text())
+    single, dist = outs["single"], outs["dist"]
+    assert dist["process_count"] == 2 and dist["device_count"] >= 2, dist
+    assert single["labels"] == dist["labels"]
+    for lbl, a, b in zip(single["labels"], single["mean_latency"],
+                         dist["mean_latency"]):
+        assert abs(a - b) <= 1e-6 * max(abs(a), 1.0), \
+            f"fleet point {lbl} diverged: single {a} vs 2-process {b}"
+    print(f"distributed smoke OK in {time.time() - t0:.1f}s "
+          f"({single['grid_points']} grid points, 2-process gloo mesh, "
+          f"per-point parity holds)")
+
+
 def main(argv) -> int:
     if "--smoke-only" not in argv:
         rc = subprocess.call(
@@ -373,6 +414,7 @@ def main(argv) -> int:
     fault_smoke()
     serve_soak_smoke()
     kernel_parity_smoke()
+    distributed_smoke()
     print("verify OK")
     return 0
 

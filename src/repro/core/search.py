@@ -537,27 +537,23 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
     res = None
     if len(devices) > 1:
         try:
-            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+            from repro.core.distributed import GridSharding
 
-            pad = (-islands) % len(devices)
-            if pad:
-                def _pad(a):
-                    return jnp.concatenate(
-                        [a, jnp.repeat(a[-1:], pad, axis=0)])
-                keys_s = _pad(keys)
-                carry0 = jax.tree.map(_pad, carry0)
-                ov_s = jax.tree.map(_pad, ov)
-            else:
-                keys_s, ov_s = keys, ov
-            sharding = NamedSharding(Mesh(np.array(devices), ("islands",)),
-                                     PartitionSpec("islands"))
-            put = lambda a: jax.device_put(a, sharding)
+            # The island axis shards over the fleet's "grid" mesh axis —
+            # with init_distributed up, across every host's devices. The
+            # shared trace/search inputs replicate fleet-wide; the result
+            # pytree is all-gathered so every process sees all islands.
+            gs = GridSharding(islands, devices=devices,
+                              logical_axis="islands")
+            carry_s, keys_s, ov_s = gs.shard((carry0, keys, ov))
+            ext_r, mem_r, intra_r, frac_r, mask_r, dpos_r, hyper_r, \
+                blocked_r, dest_r = gs.replicate(
+                    (ext, mem, intra, ext_frac, t_mask, default_pos,
+                     hyper, blocked, dest))
             res = _search_islands_jit(
-                jax.tree.map(put, carry0), put(keys_s), ext, mem, intra,
-                ext_frac, t_mask, default_pos, hyper,
-                jax.tree.map(put, ov_s), blocked, dest, **static)
-            if pad:
-                res = jax.tree.map(lambda a: a[:islands], res)
+                carry_s, keys_s, ext_r, mem_r, intra_r, frac_r, mask_r,
+                dpos_r, hyper_r, ov_s, blocked_r, dest_r, **static)
+            res = gs.gather(res)
         except Exception as e:  # pragma: no cover - depends on device layout
             import warnings
             warnings.warn(f"sharded island search failed ({e!r}); falling "

@@ -1390,12 +1390,17 @@ def sweep_topology(trace: dict, sim: SimConfig, **grids) -> dict:
                                dest, sim=sim_p)
 
 
-def sweep_topology_batch(traces, sim: SimConfig, **grids) -> dict:
+def sweep_topology_batch(traces, sim: SimConfig, *, devices=None,
+                         **grids) -> dict:
     """N traces x K topologies in ONE compiled call ([N, K] results).
 
     The topology analogue of `sweep_batch`: `traces` is a list of same-shape
-    trace dicts or an already-stacked dict from `stack_traces`.
+    trace dicts or an already-stacked dict from `stack_traces`. Pass
+    `devices` (more than one — e.g. the fleet's global device list) to
+    shard the K axis via `shard_sweep`.
     """
+    if devices is not None and len(list(devices)) > 1:
+        return shard_sweep(traces, sim, devices=devices, **grids)
     batch = stack_traces(traces, pad=True) \
         if isinstance(traces, (list, tuple)) else traces
     sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
@@ -1404,31 +1409,52 @@ def sweep_topology_batch(traces, sim: SimConfig, **grids) -> dict:
                                      topo, ov, dest, sim=sim_p)
 
 
-def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
-    """Multi-device topology sweep: the [N x K] grid sharded over devices.
+def _sharding_note(out: dict, describe: dict) -> dict:
+    """Attach sharding metadata to a sweep result (no silent pads): the
+    pad-lane count lands in the returned summary and the full placement
+    description under a top-level "sharding" key."""
+    out = dict(out)
+    if "summary" in out and isinstance(out["summary"], dict):
+        out["summary"] = dict(out["summary"],
+                              pad_lanes=int(describe["pad_lanes"]))
+    out["sharding"] = dict(describe)
+    return out
 
-    The K (topology) axis of the padded grid is device_put with a 1-D
-    `NamedSharding`, so the SAME compiled executable partitions the vmapped
-    scans across all available devices (GSPMD); N-trace batches replicate
-    the trace and shard the topology axis. K is padded to a multiple of the
-    device count by repeating the last grid point (sliced off the results).
-    Degrades gracefully to the single-device `sweep_topology` path when one
-    device is present or sharding fails.
+
+def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
+    """Multi-device / multi-host topology sweep: the [N x K] grid sharded.
+
+    The K (topology) axis of the padded grid is placed with a 1-D
+    `NamedSharding` over the fleet's "grid" mesh axis, so the SAME compiled
+    executable partitions the vmapped scans across all available devices
+    (GSPMD); N-trace batches replicate the trace and shard the topology
+    axis. After `repro.core.distributed.init_distributed` the default
+    device list spans every fleet process and the same placement shards
+    across hosts (trace arrays are then replicated fleet-wide and results
+    all-gathered, so every process returns the full grid). K is padded to
+    a multiple of the device count by repeating the last grid point —
+    logged, sliced off the results, and reported as `summary["pad_lanes"]`
+    plus a top-level `"sharding"` dict (no silent caps). Degrades
+    gracefully to the single-device `sweep_topology` path when one device
+    is present or sharding fails.
 
     Accepts a single trace dict or a list/stacked batch (leading [N] axis
     in the results, as `sweep_topology_batch`).
     """
+    from repro.core.distributed import GridSharding
+
     batched = not (isinstance(traces, dict)
                    and jnp.ndim(traces["ext_load"]) == 2)
     single_call = sweep_topology_batch if batched else sweep_topology
     devices = list(devices if devices is not None else jax.devices())
     if len(devices) <= 1:
-        return single_call(traces, sim, **grids)
+        out = single_call(traces, sim, **grids)
+        return _sharding_note(out, {
+            "grid_points": int(np.asarray(
+                out["summary"]["mean_latency"]).shape[-1]),
+            "pad_lanes": 0, "devices": 1, "processes": 1})
 
     try:
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec
-        import numpy as _np
-
         sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
         batch = stack_traces(traces, pad=True) \
             if isinstance(traces, (list, tuple)) else traces
@@ -1436,29 +1462,25 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
             batch, c_max)
 
         k = int(topo["n_chiplets"].shape[0])
-        pad = (-k) % len(devices)
-        if pad:
-            def _pad(a):
-                return jnp.concatenate(
-                    [a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
-            topo = jax.tree.map(_pad, topo)
-            ov = jax.tree.map(_pad, ov)
-        mesh = Mesh(_np.array(devices), ("sweep",))
-        sharding = NamedSharding(mesh, PartitionSpec("sweep"))
-        topo = jax.tree.map(lambda a: jax.device_put(a, sharding), topo)
-        ov = jax.tree.map(lambda a: jax.device_put(a, sharding), ov)
+        gs = GridSharding(k, devices=devices)
+        topo = gs.shard(topo)
+        ov = gs.shard(ov)
+        ext, mem, intra, ext_frac, t_mask, dest = gs.replicate(
+            (ext, mem, intra, ext_frac, t_mask, dest))
         fn = _sweep_topology_batch_jit if batched else _sweep_topology_jit
         out = fn(ext, mem, intra, ext_frac, t_mask, topo, ov, dest,
                  sim=sim_p)
-        if pad:
-            out = jax.tree.map(
-                lambda a: a[:, :k] if batched else a[:k], out)
-        return out
+        out = gs.gather(out, axis=1 if batched else 0)
+        return _sharding_note(out, gs.describe())
     except Exception as e:  # pragma: no cover - depends on device layout
         import warnings
         warnings.warn(f"sharded sweep failed ({e!r}); falling back to "
                       f"single-device path")
-        return single_call(traces, sim, **grids)
+        out = single_call(traces, sim, **grids)
+        return _sharding_note(out, {
+            "grid_points": int(np.asarray(
+                out["summary"]["mean_latency"]).shape[-1]),
+            "pad_lanes": 0, "devices": 1, "processes": 1})
 
 
 # ---------------------------------------------------------------------------
@@ -1466,7 +1488,8 @@ def shard_sweep(traces, sim: SimConfig, *, devices=None, **grids) -> dict:
 # ---------------------------------------------------------------------------
 
 def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
-                   dest: bool = False, **grids) -> dict:
+                   dest: bool = False, devices=None, gen_chiplets=None,
+                   **grids) -> dict:
     """Workload DSE: K traffic specs, ONE compiled executable.
 
     ::
@@ -1491,6 +1514,20 @@ def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
     trace (`traffic.generate(..., dest=True)`), so every lane resolves
     actual source->destination gateway pressure — this is what separates
     transpose/tornado from uniform at the same mean load.
+
+    `devices` (more than one — e.g. the fleet's global device list after
+    `distributed.init_distributed`) shards the K workload axis with a 1-D
+    NamedSharding: every lane-leading array (generated traces, topology
+    grids, overrides, destination matrices) partitions over the "grid"
+    mesh axis, K padded to a device multiple by repeating the last lane
+    (logged; reported as `summary["pad_lanes"]` + a `"sharding"` dict and
+    sliced off the results). Falls back to the unsharded call on failure.
+
+    `gen_chiplets` pins the chiplet count traces are generated at (default:
+    the largest `n_chiplets` in the grid). An emulated-host worker running
+    a slice of a bigger grid passes the FULL grid's maximum here (plus the
+    full run's sliced `keys`), so its lanes reproduce the full run's rows
+    bit-for-bit even when its slice misses the global maximum.
     """
     specs = [traffic.as_spec(s) for s in specs]
     if not specs:
@@ -1507,11 +1544,18 @@ def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
                 f"grid {name!r} has length {n} but {k} workload specs "
                 f"were given — workload zips element-wise with every grid")
 
+    devices = list(devices) if devices is not None else None
     topo_grids = {g: v for g, v in grids.items()
                   if g in TOPOLOGY_SWEEPABLE_FIELDS}
     if topo_grids:
         c_gen = max(int(c) for c in topo_grids.get(
             "n_chiplets", [sim.cfg.n_chiplets]))
+        if gen_chiplets is not None:
+            if int(gen_chiplets) < c_gen:
+                raise ValueError(
+                    f"gen_chiplets={gen_chiplets} is smaller than the "
+                    f"grid's largest n_chiplets ({c_gen})")
+            c_gen = int(gen_chiplets)
         gen_cfg = sim.cfg.with_topology(n_chiplets=c_gen)
         traces = [traffic.generate(s, ky, gen_cfg, dest=dest)
                   for s, ky in zip(specs, keys)]
@@ -1519,6 +1563,12 @@ def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
         sim_p, topo, ov, c_max = _prepare_topology_sweep(sim, grids)
         ext, mem, intra, ext_frac, t_mask, dmat = _topo_trace_arrays(
             batch, c_max)
+        if devices is not None and len(devices) > 1:
+            out = _shard_workload(
+                (ext, mem, intra, ext_frac, t_mask, topo, ov, dmat),
+                devices, lambda a, _: _sweep_workload_topo_jit(*a, sim=sim_p))
+            if out is not None:
+                return out
         return _sweep_workload_topo_jit(ext, mem, intra, ext_frac, t_mask,
                                         topo, ov, dmat, sim=sim_p)
 
@@ -1532,9 +1582,41 @@ def sweep_workload(specs, sim: SimConfig, *, seed: int = 0, keys=None,
               for s, ky in zip(specs, keys)]
     batch = stack_traces(traces, pad=True)
     ext, mem, intra, ext_frac, t_mask, dmat = _trace_arrays(batch)
+    tables = selection_tables_jax(sim.cfg)
+    if devices is not None and len(devices) > 1:
+        out = _shard_workload(
+            (ext, mem, intra, ext_frac, t_mask, ov, dmat), devices,
+            lambda a, rep: _sweep_workload_jit(
+                a[0], a[1], a[2], a[3], a[4], rep[0], a[5], a[6], sim=sim),
+            replicated=(tables,))
+        if out is not None:
+            return out
     return _sweep_workload_jit(ext, mem, intra, ext_frac, t_mask,
-                               selection_tables_jax(sim.cfg), ov, dmat,
-                               sim=sim)
+                               tables, ov, dmat, sim=sim)
+
+
+def _shard_workload(args, devices, call, replicated=()):
+    """Shard every lane-leading array of a workload sweep over `devices`.
+
+    `args` is a tuple of leading-K pytrees (None leaves welcome);
+    `replicated` holds fleet-global extras (e.g. selection tables).
+    `call(sharded_args, replicated_extras)` launches the jitted entry
+    point. Returns the gathered result dict with sharding metadata, or
+    None to signal fallback to the unsharded path.
+    """
+    from repro.core.distributed import GridSharding
+
+    try:
+        k = int(args[0].shape[0])
+        gs = GridSharding(k, devices=devices)
+        out = call(gs.shard(args), gs.replicate(replicated))
+        out = gs.gather(out)
+        return _sharding_note(out, gs.describe())
+    except Exception as e:  # pragma: no cover - depends on device layout
+        import warnings
+        warnings.warn(f"sharded workload sweep failed ({e!r}); falling "
+                      f"back to the unsharded path")
+        return None
 
 
 class SimSession:

@@ -35,3 +35,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests (axis sizes 1)."""
     return _make_mesh((1, 1), ("data", "model"))
+
+
+def make_fleet_mesh(devices=None):
+    """1-D ("grid",) mesh over every device in the fleet.
+
+    The DSE mesh: `jax.devices()` spans all processes after
+    `repro.core.distributed.init_distributed`, so the sweep axes that the
+    rules table maps to "grid" (logical "sweep" / "islands") shard across
+    hosts. With one local device this is a size-1 mesh and every sharding
+    resolves to a placement no-op — the single-host fallback.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = list(devices) if devices is not None else list(jax.devices())
+    return Mesh(np.asarray(devices), ("grid",))

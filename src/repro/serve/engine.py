@@ -8,10 +8,13 @@ single vmapped dispatch (`simulator.session_tick`); the `t_mask` freeze
 semantics make every irregularity exact — an empty lane, a session
 backing off after a transient failure, or a final partial chunk all ride
 along as masked rows that inject nothing, record zeros, and freeze their
-carry. Lane k of the batched tick is bit-identical to a standalone
-`SimSession` stepping the same chunks (pinned by `replay_standalone` and
-tests/test_serve.py), so sharing the executable costs nothing in
-fidelity.
+carry. Destination-aware traces (a `dest` [C, C] matrix) serve too: each
+tick packs the dest-carrying lanes as their own group with a per-lane
+`dest` [B, C, C] batch (the dest path is all-or-nothing per executable,
+and mixing would silently change dest-free lanes' numbers). Lane k of
+the batched tick is bit-identical to a standalone `SimSession` stepping
+the same chunks (pinned by `replay_standalone` and tests/test_serve.py),
+so sharing the executable costs nothing in fidelity.
 
 Around that hot loop sits the robustness envelope, every decision a
 `policies.ServerPolicy` knob:
@@ -187,15 +190,26 @@ class SessionServer:
         served_lanes = 0
         lat_sum, valid_sum = 0.0, 0.0
         for rep in range(reps):
-            packed = self._pack(now)
-            if packed is None:
+            # Ready lanes split into destination-free and destination-
+            # carrying groups: `session_tick`'s dest path is all-or-nothing
+            # per batch, and serving a dest-free lane through a uniform
+            # matrix would silently change its numbers (replay parity).
+            # Each group is its own (cached) executable; pure workloads
+            # still dispatch exactly once per tick.
+            dispatched = 0
+            for want_dest in (False, True):
+                packed = self._pack(now, want_dest=want_dest)
+                if packed is None:
+                    continue
+                dispatched += 1
+                s_lat, s_valid, n = self._dispatch(packed, now)
+                lat_sum += s_lat
+                valid_sum += s_valid
+                served_lanes += n
+            if dispatched == 0:
                 break
             if rep > 0:
                 self.counters["coalesced_dispatches"] += 1
-            s_lat, s_valid, n = self._dispatch(packed, now)
-            lat_sum += s_lat
-            valid_sum += s_valid
-            served_lanes += n
         det = self._observe(lat_sum, valid_sum, served_lanes)
         self.tick_count += 1
         event = {"tick": now, "admitted": admitted,
@@ -368,9 +382,15 @@ class SessionServer:
         if self._degraded:
             self.counters["degraded_ticks"] += 1
 
-    def _pack(self, now: int) -> Optional[dict]:
+    def _pack(self, now: int, *, want_dest: bool = False) -> Optional[dict]:
         """Stack each ready lane's next padded chunk into the [B, T] batch
-        (idle lanes ride as all-masked rows); None if nothing to serve."""
+        (idle lanes ride as all-masked rows); None if nothing to serve.
+
+        `want_dest` selects the destination-carrying lane group: those
+        batches add a per-lane `dest` [B, C, C] and route through the
+        dest-aware tick executable. Non-member rows get a valid uniform
+        matrix but are fully masked (zero injection, frozen carry), so the
+        filler never contributes."""
         p = self.policy
         b, t, c = p.lanes, p.chunk_intervals, self.sim.cfg.n_chiplets
         ext = np.zeros((b, t, c), np.float32)
@@ -378,23 +398,34 @@ class SessionServer:
         intra = np.zeros((b, t, c), np.float32)
         frac = np.zeros((b,), np.float32)
         mask = np.zeros((b, t), np.float32)
+        dmat = None
+        if want_dest:
+            uniform = np.full((c, c), 1.0 / max(c - 1, 1), np.float32)
+            np.fill_diagonal(uniform, 0.0)
+            dmat = np.broadcast_to(uniform, (b, c, c)).copy()
         ready = []
         for lane, sess in enumerate(self._lanes):
             if sess is None or not sess.ready(now):
                 continue
             ch = sess.pending[0]
+            if (ch.get("dest") is not None) != want_dest:
+                continue
             ext[lane] = np.asarray(ch["ext_load"], np.float32)
             mem[lane] = np.asarray(ch["mem_load"], np.float32)
             intra[lane] = np.asarray(ch["int_load"], np.float32)
             frac[lane] = float(np.asarray(ch["ext_frac"]))
             mask[lane] = np.asarray(
                 ch.get("t_mask", np.ones((t,), np.float32)), np.float32)
+            if want_dest:
+                dmat[lane] = np.asarray(ch["dest"], np.float32)
             ready.append(lane)
         if not ready:
             return None
-        return {"batch": {"ext_load": ext, "mem_load": mem,
-                          "int_load": intra, "ext_frac": frac,
-                          "t_mask": mask}, "ready": ready}
+        batch = {"ext_load": ext, "mem_load": mem, "int_load": intra,
+                 "ext_frac": frac, "t_mask": mask}
+        if want_dest:
+            batch["dest"] = dmat
+        return {"batch": batch, "ready": ready}
 
     def _tick_frame(self) -> Optional[dict]:
         """The shared hardware-time fault frame for this dispatch window

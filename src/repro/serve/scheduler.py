@@ -104,15 +104,14 @@ class ServeSession:
         if self.closed:
             raise ValueError(f"session {self.id} is closed to new input")
         validate_trace(trace, who=f"session {self.id} trace")
-        if trace.get("dest") is not None:
-            # The packed dispatch batches plain load rows; silently dropping
-            # a destination matrix would serve the session as uniform
-            # traffic and quietly change its latency/power numbers.
+        if trace.get("dest") is not None \
+                and np.ndim(np.asarray(trace["dest"])) != 2:
+            # Lanes carry ONE [C, C] matrix each; a stacked [K, C, C]
+            # batch is a sweep input, not a session.
             raise ValueError(
-                f"session {self.id} trace carries a destination matrix "
-                f"('dest'), which the session server does not serve — run "
-                f"destination-aware traces through simulate/sweep_workload, "
-                f"or strip 'dest' to accept uniform-routing fidelity")
+                f"session {self.id} trace carries a batched destination "
+                f"matrix of shape {np.shape(np.asarray(trace['dest']))} — "
+                f"a served session needs a single [C, C] matrix")
         c = int(np.shape(trace["ext_load"])[-1])
         if c != self._n_chiplets:
             raise ValueError(

@@ -55,6 +55,14 @@ DEFAULT_RULES = {
     "state": (),
     "layers": (),
     "capacity": (),
+    # DSE fleet axes (repro.core.distributed / launch.fleet): the leading
+    # grid-point axis of a topology/placement/workload sweep and the island
+    # axis of the annealed search both shard over the 1-D fleet mesh's
+    # "grid" axis (launch.mesh.make_fleet_mesh). On the production meshes
+    # (no "grid" axis) they resolve to replicated, so sweep code annotated
+    # with these axes runs unchanged everywhere.
+    "sweep": ("grid",),
+    "islands": ("grid",),
 }
 
 # Overlays (hillclimb levers; see EXPERIMENTS.md §Perf).

@@ -19,8 +19,9 @@ here:
     pad/chunk carry `dest` whole, stacking demands uniformity;
   * padded-topology paths: masked chiplet columns contribute zero with a
     destination matrix attached;
-  * the session server refuses dest-carrying traces instead of silently
-    serving them as uniform traffic.
+  * the session server serves [C, C] dest-carrying traces (PR 9) and
+    refuses batched [K, C, C] matrices instead of silently serving them
+    as uniform traffic.
 """
 try:                                     # pragma: no cover - env dependent
     from hypothesis import given, settings, strategies as st
@@ -307,11 +308,18 @@ def test_sweep_workload_dest_separates_patterns():
 
 # -- serve guard -------------------------------------------------------------
 
-def test_serve_session_rejects_dest_traces():
+def test_serve_session_accepts_single_dest_rejects_batched():
+    # [C, C] dest traces serve (PR 9: their own lane group per tick,
+    # replay parity in tests/test_serve.py); a stacked [K, C, C] batch is
+    # a sweep input, not a session, and still fails loudly.
     from repro.serve.policies import ServerPolicy
     from repro.serve.scheduler import ServeSession, SessionRequest
     tr = traffic.generate(UniformSpec(n_intervals=8), jax.random.PRNGKey(10),
                           dest=True)
-    with pytest.raises(ValueError, match="destination matrix"):
-        ServeSession(SessionRequest(trace=tr), ServerPolicy(),
+    sess = ServeSession(SessionRequest(trace=tr), ServerPolicy(),
+                        NETWORK.n_chiplets, now=0)
+    assert sess.pending and sess.pending[0].get("dest") is not None
+    batched = dict(tr, dest=np.stack([np.asarray(tr["dest"])] * 2))
+    with pytest.raises(ValueError, match="batched destination"):
+        ServeSession(SessionRequest(trace=batched), ServerPolicy(),
                      NETWORK.n_chiplets, now=0)

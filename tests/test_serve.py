@@ -559,3 +559,72 @@ def test_property_every_session_ends_well_formed(
     assert m["completed"] + m["deadline_expired"] + m["retry_exhausted"] \
         + m["shed_queue_full"] + m["shed_memory"] + m["shed_priority"] \
         == n_sessions
+
+
+# ---------------------------------------------------------------------------
+# Destination-carrying sessions (PR 9: dest threads through the packed tick)
+# ---------------------------------------------------------------------------
+
+def _ring_dest(c: int) -> np.ndarray:
+    """Each chiplet sends everything to its ring neighbour — maximally
+    far from the uniform matrix the dest-free path assumes."""
+    d = np.zeros((c, c), np.float32)
+    for i in range(c):
+        d[i, (i + 1) % c] = 1.0
+    return d
+
+
+def test_dest_session_completes_and_bit_matches_replay():
+    sim = _sim()
+    tr = dict(_tr(0, 8), dest=_ring_dest(sim.cfg.n_chiplets))
+    server = SessionServer(sim, ServerPolicy(lanes=2, chunk_intervals=4))
+    sid = server.submit(SessionRequest(trace=tr))["session_id"]
+    server.drain()
+    assert server.sessions[sid].status == "completed"
+    _assert_replay_parity(sim, server)
+
+
+def test_dest_session_numbers_differ_from_dest_free():
+    sim = _sim()
+    plain = SessionServer(sim, ServerPolicy(lanes=1, chunk_intervals=4))
+    p = plain.submit(SessionRequest(trace=_tr(0, 8)))["session_id"]
+    plain.drain()
+    routed = SessionServer(sim, ServerPolicy(lanes=1, chunk_intervals=4))
+    r = routed.submit(SessionRequest(
+        trace=dict(_tr(0, 8), dest=_ring_dest(sim.cfg.n_chiplets))
+    ))["session_id"]
+    routed.drain()
+    a, b = plain.sessions[p].summary(), routed.sessions[r].summary()
+    assert any(a[k] != b[k] for k in PARITY_KEYS)
+
+
+def test_mixed_dest_and_plain_lanes_both_complete_with_parity():
+    """One server, one dest-free and one dest-carrying session: each lane
+    group gets its own dispatch, both bit-match their standalone replays,
+    and the dest lane leaves the plain lane's numbers untouched."""
+    sim = _sim()
+    server = SessionServer(sim, ServerPolicy(lanes=3, chunk_intervals=4))
+    plain_sid = server.submit(SessionRequest(trace=_tr(1, 8)))["session_id"]
+    dest_sid = server.submit(SessionRequest(
+        trace=dict(_tr(2, 8), dest=_ring_dest(sim.cfg.n_chiplets))
+    ))["session_id"]
+    server.drain()
+    assert server.sessions[plain_sid].status == "completed"
+    assert server.sessions[dest_sid].status == "completed"
+    _assert_replay_parity(sim, server)
+    ref = SessionServer(sim, ServerPolicy(lanes=3, chunk_intervals=4))
+    rid = ref.submit(SessionRequest(trace=_tr(1, 8)))["session_id"]
+    ref.drain()
+    mine = server.sessions[plain_sid].summary()
+    theirs = ref.sessions[rid].summary()
+    for k in PARITY_KEYS:
+        assert mine[k] == theirs[k], k
+
+
+def test_batched_dest_matrix_is_rejected():
+    sim = _sim()
+    tr = dict(_tr(0, 6),
+              dest=np.stack([_ring_dest(sim.cfg.n_chiplets)] * 2))
+    server = SessionServer(sim, ServerPolicy(lanes=1, chunk_intervals=4))
+    with pytest.raises(ValueError, match="batched destination"):
+        server.submit(SessionRequest(trace=tr))
