@@ -3,7 +3,7 @@
 # `benchmarks` namespace package resolves when a bench runs standalone.
 PY := PYTHONPATH=src:.$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: verify test smoke bench bench-placement bench-search bench-traffic bench-faults bench-serve bench-kernels bench-distributed
+.PHONY: verify test smoke bench bench-placement bench-search bench-pareto bench-traffic bench-faults bench-serve bench-kernels bench-distributed
 
 # Pre-merge gate: tier-1 pytest + the padded-topology-sweep CPU smoke.
 verify:
@@ -26,6 +26,11 @@ bench-placement:
 # Device-resident vs host-loop search engines (-> BENCH_search.json).
 bench-search:
 	$(PY) benchmarks/bench_search.py
+
+# Just the one-dispatch Pareto co-design benchmark (topology x placement
+# x knob joint search vs the sequential per-topology loop)
+bench-pareto:
+	$(PY) benchmarks/bench_pareto.py
 
 # Just the workload-DSE / ragged-batch / streaming benchmark
 # (-> BENCH_traffic.json).

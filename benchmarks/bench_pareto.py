@@ -1,0 +1,156 @@
+"""Pareto co-design benchmark: one-dispatch joint search vs the loop.
+
+Before PR 10 the only way to explore the (topology x placement x knob)
+design space was a host loop: pick a topology point, run the PR-5
+`search_placement` engine, repeat — T x K separate dispatches, each
+paying its own host sync and per-call preprocessing, each scoring a
+single workload trace. `repro.core.pareto.search_codesign` folds the
+whole joint search into ONE compiled dispatch: an outer `lax.scan` over
+the padded topology grid, K annealed island chains per point (ring
+migration every M generations), W workload traces per candidate, and a
+device-resident Pareto archive over (latency, power, energy) — the final
+result pytree is the only device->host transfer.
+
+Measured here, on the paper's Table 1 system:
+
+  * sequential warm — the pre-PR-10 loop: for every topology point and
+                      every island seed, one `search_placement` dispatch
+                      on the dominant workload (T*K dispatches).
+  * codesign cold/warm — the one-dispatch joint search, compile
+                      included/excluded, scoring all W workloads.
+  * acceptance      — warm codesign candidate-evals/sec >= 5x the
+                      sequential loop's (`meets_5x`). A candidate eval is
+                      one (placement, topology, knob, workload) scoring;
+                      the codesign engine scores W workloads per
+                      candidate where the loop scores one — that
+                      amortization is precisely the batching win being
+                      claimed. `search_dispatches == 1` and
+                      `simulate_traces <= 1` prove one-trace/one-dispatch.
+  * hypervolume     — dominated volume of the returned front against a
+                      reference point at 2x the worst finite objective
+                      (scale-free progress number for the history).
+
+Like every BENCH speedup in this repo the ratio is machine-bound; read
+`speedup_codesign_vs_sequential` from the same run, not across machines.
+Results land in benchmarks/results/BENCH_pareto.json with an appended
+`history` entry per run.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import pareto, traffic
+from repro.core.simulator import (Arch, SimConfig, clear_engine_caches,
+                                  engine_stats, reset_engine_stats,
+                                  search_placement, topology_point_config)
+from benchmarks.common import (save_json_history, timed_result_s, timed_s,
+                               warm_median)
+
+N_CHIPLETS = [16, 36, 64]
+WORKLOADS = ["dedup", "streamcluster", "canneal", "bodytrack"]
+GENERATIONS = 6
+POPULATION = 8
+ISLANDS = 8
+ARCHIVE = 32
+L_M_GRID = [0.008, 0.012, 0.02, 0.03, 0.01, 0.015, 0.025, 0.035]
+
+
+def run(n_intervals: int = 16, seed: int = 7) -> dict:
+    base = SimConfig().with_arch(Arch.RESIPI)
+    cfg_max = base.cfg.with_topology(n_chiplets=max(N_CHIPLETS))
+    traces = [traffic.generate_trace(app, n_intervals,
+                                     jax.random.PRNGKey(seed + i), cfg_max)
+              for i, app in enumerate(WORKLOADS)]
+
+    codesign = lambda s: pareto.search_codesign(
+        traces, base, n_chiplets=N_CHIPLETS, islands=ISLANDS,
+        generations=GENERATIONS, population=POPULATION, archive=ARCHIVE,
+        knob_grids={"l_m": L_M_GRID}, seed=s)
+
+    def sequential(s):
+        """The pre-PR-10 loop: T*K separate search_placement dispatches,
+        each scoring the dominant workload only."""
+        best = []
+        for c in N_CHIPLETS:
+            sim_c = topology_point_config(base, n_chiplets=c)
+            tr_c = traffic.slice_trace(traces[0], c)
+            for k in range(ISLANDS):
+                best.append(search_placement(
+                    tr_c, sim_c, generations=GENERATIONS,
+                    population=POPULATION, seed=s + k)["best_score"])
+        return np.asarray(best)
+
+    t_pts = len(N_CHIPLETS)
+    seq_evals = t_pts * ISLANDS * GENERATIONS * POPULATION
+
+    # -- sequential per-topology loop (the pre-codesign workflow) -----------
+    clear_engine_caches()
+    seq_cold_s = timed_s(lambda: sequential(seed))
+    seq_warm_s = warm_median(lambda: sequential(seed + 1))
+
+    # -- one-dispatch co-design search --------------------------------------
+    clear_engine_caches()
+    reset_engine_stats()
+    res, codesign_cold_s = timed_result_s(lambda: codesign(seed))
+    stats = engine_stats()
+    assert stats["search_dispatches"] == 1, \
+        f"co-design search was not ONE dispatch: {stats}"
+    assert stats["simulate_traces"] <= 1, \
+        f"co-design search re-traced the scan body: {stats}"
+    codesign_warm_s = warm_median(lambda: codesign(seed + 1))
+
+    evals = res["candidate_evals"]
+    assert evals == t_pts * GENERATIONS * ISLANDS * POPULATION \
+        * len(WORKLOADS), res["candidate_evals"]
+    seq_eps = seq_evals / seq_warm_s
+    codesign_eps = evals / codesign_warm_s
+
+    # -- front quality: hypervolume against a 2x-worst reference ------------
+    front = np.asarray([[e["objectives"][k] for k in
+                         ("latency", "power_mw", "energy")]
+                        for e in res["front"]])
+    ref = tuple(2.0 * front.max(axis=0))
+    hv = pareto.hypervolume(front, ref)
+
+    result = {
+        "backend": jax.default_backend(),
+        "n_intervals": n_intervals,
+        "n_topologies": t_pts,
+        "workloads": len(WORKLOADS),
+        "generations": GENERATIONS,
+        "population": POPULATION,
+        "islands": ISLANDS,
+        "archive_capacity": ARCHIVE,
+        "scan_body_traces": stats["simulate_traces"],
+        "search_dispatches": stats["search_dispatches"],
+        "seq_cold_s": seq_cold_s,
+        "seq_warm_s": seq_warm_s,
+        "seq_evals_per_sec": seq_eps,
+        "codesign_cold_s": codesign_cold_s,
+        "codesign_warm_s": codesign_warm_s,
+        "codesign_evals_per_sec": codesign_eps,
+        "candidate_evals": evals,
+        "speedup_codesign_vs_sequential": codesign_eps / seq_eps,
+        "meets_5x": bool(codesign_eps >= 5 * seq_eps),
+        "front_size": len(res["front"]),
+        "hypervolume": hv,
+        "hypervolume_ref": list(ref),
+    }
+    save_json_history("BENCH_pareto.json", result)
+    return result
+
+
+if __name__ == "__main__":
+    r = run()
+    print(f"pareto co-design ({r['n_topologies']} topologies x "
+          f"{r['islands']} islands x {r['generations']}x{r['population']} "
+          f"x {r['workloads']} workloads = {r['candidate_evals']} candidate "
+          f"evals): sequential loop {r['seq_warm_s']:.3f}s "
+          f"({r['seq_evals_per_sec']:.0f} evals/s) -> one-dispatch "
+          f"{r['codesign_warm_s']:.4f}s "
+          f"({r['codesign_evals_per_sec']:.0f} evals/s, "
+          f"{r['speedup_codesign_vs_sequential']:.1f}x, "
+          f"{r['scan_body_traces']} trace / {r['search_dispatches']} "
+          f"dispatch); front {r['front_size']} points, hypervolume "
+          f"{r['hypervolume']:.3g}; meets_5x={r['meets_5x']}")

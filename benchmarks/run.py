@@ -25,8 +25,9 @@ def _run(name, fn, derived_fn):
 
 def main() -> None:
     from benchmarks import (bench_distributed, bench_engine, bench_faults,
-                            bench_kernels, bench_placement, bench_search,
-                            bench_serve, bench_topology, bench_traffic,
+                            bench_kernels, bench_pareto, bench_placement,
+                            bench_search, bench_serve, bench_topology,
+                            bench_traffic,
                             fig10_lm_dse, fig11_main, fig12_adaptivity,
                             fig13_residency, table2_overhead, lane_schedule)
 
@@ -73,6 +74,19 @@ def main() -> None:
           f"({sea['speedup_device_vs_pr3_recorded']:.1f}x vs PR-3); "
           f"{sea['islands']} islands "
           f"{sea['islands_evals_per_sec']:.0f} evals/s", flush=True)
+    par = _run("bench_pareto", bench_pareto.run,
+               lambda r: (f"speedup="
+                          f"{r['speedup_codesign_vs_sequential']:.1f}x,"
+                          f"meets_5x={r['meets_5x']},"
+                          f"front={r['front_size']}"))
+    print(f"# pareto: {par['n_topologies']} topologies x {par['islands']} "
+          f"islands x {par['workloads']} workloads joint co-design is ONE "
+          f"dispatch ({r_traces(par)}): sequential loop "
+          f"{par['seq_evals_per_sec']:.0f} -> codesign "
+          f"{par['codesign_evals_per_sec']:.0f} candidate-evals/s "
+          f"({par['speedup_codesign_vs_sequential']:.1f}x); front "
+          f"{par['front_size']} points, hypervolume "
+          f"{par['hypervolume']:.3g}", flush=True)
     tra = _run("bench_traffic", bench_traffic.run,
                lambda r: (f"warm_speedup={r['speedup_warm']:.0f}x,"
                           f"{r['scan_body_traces']}trace/"

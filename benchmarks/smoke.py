@@ -15,16 +15,20 @@
   5. the device-resident placement search: a whole annealed search is ONE
      scan-body trace and ONE dispatch, and its best score matches a fresh
      host-oracle `simulate` of the found placement (device/host parity),
-  6. the fault-injection path: a fault frame masked at t == T matches the
+  6. the Pareto co-design engine: a joint (topology x placement x knob)
+     `search_codesign` is ONE dispatch, its front is mutually
+     non-dominated, and a host-oracle re-score of every front entry
+     reproduces the archived objectives at 1e-6,
+  7. the fault-injection path: a fault frame masked at t == T matches the
      fault-free `simulate`, a firing fault reuses the same executable, and
      the fault grid vmaps as one more sweep axis (one scan-body trace),
-  7. the session server: a short continuous-batching soak — nominal load
+  8. the session server: a short continuous-batching soak — nominal load
      drops zero healthy sessions on one shared executable, an overload
      burst sheds by policy with the queue staying bounded,
-  8. the fused epoch_step kernel: `epoch_kernel=True` reproduces the scan
+  9. the fused epoch_step kernel: `epoch_kernel=True` reproduces the scan
      body at 1e-6 through `simulate` — clean, destination-aware, and
      faulted — in interpret mode (the engine-parity gate off-TPU),
-  9. the fleet: a REAL 2-process `jax.distributed` CPU mesh (gloo
+ 10. the fleet: a REAL 2-process `jax.distributed` CPU mesh (gloo
      collectives, local coordinator) runs a small co-design grid through
      `python -m repro.launch.fleet` and must reproduce the single-process
      run per-point at 1e-6 (the GSPMD-sharded-executable parity gate).
@@ -210,6 +214,55 @@ def search_smoke() -> None:
     assert stats2["search_dispatches"] == 1
     print(f"search smoke OK in {time.time() - t0:.1f}s "
           f"(4x6 annealed search, 1 dispatch, oracle parity holds)")
+
+
+def pareto_smoke() -> None:
+    """Pareto co-design: the joint (topology x placement x knob) search is
+    ONE dispatch, the returned front is mutually non-dominated, and a
+    host-oracle re-score of every front entry reproduces its archived
+    objectives at 1e-6 (the device/host co-design parity gate)."""
+    import jax
+    import numpy as np
+
+    from repro.core import pareto, traffic
+    from repro.core.simulator import (Arch, SimConfig, engine_stats,
+                                      reset_engine_stats)
+
+    t0 = time.time()
+    base = SimConfig().with_arch(Arch.RESIPI)
+    grid_c = [9, 16]
+    cfg = base.cfg.with_topology(n_chiplets=max(grid_c))
+    traces = [traffic.generate_trace(a, 8, jax.random.PRNGKey(i), cfg)
+              for i, a in enumerate(["dedup", "streamcluster"])]
+
+    reset_engine_stats()
+    res = pareto.search_codesign(traces, base, n_chiplets=grid_c,
+                                 islands=2, generations=4, population=4,
+                                 archive=16, seed=0)
+    stats = engine_stats()
+    assert stats["search_dispatches"] == 1, \
+        f"co-design search was not ONE dispatch: {stats}"
+    assert stats["simulate_traces"] <= 1, \
+        f"co-design search re-traced the scan body: {stats}"
+    assert res["front"], "co-design search returned an empty front"
+
+    # The front is mutually non-dominated.
+    obj = np.asarray([[e["objectives"][k] for k in
+                       ("latency", "power_mw", "energy")]
+                      for e in res["front"]])
+    le = (obj[:, None] <= obj[None, :]).all(-1)
+    lt = (obj[:, None] < obj[None, :]).any(-1)
+    dominated = (le & lt).any(axis=0)
+    assert not dominated.any(), "device front contains a dominated point"
+
+    # Host-oracle parity: unpadded re-simulation of every front entry.
+    rescored = pareto.rescore_front_host(res, traces, base)
+    np.testing.assert_allclose(rescored, obj, rtol=1e-6, atol=1e-9,
+                               err_msg="device front diverged from the "
+                                       "host-oracle re-score")
+    print(f"pareto smoke OK in {time.time() - t0:.1f}s "
+          f"({len(grid_c)} topologies x 2 islands, 1 dispatch, "
+          f"{len(res['front'])}-point front, oracle parity holds)")
 
 
 def fault_smoke() -> None:
@@ -411,6 +464,7 @@ def main(argv) -> int:
     placement_sweep_smoke()
     traffic_stream_smoke()
     search_smoke()
+    pareto_smoke()
     fault_smoke()
     serve_soak_smoke()
     kernel_parity_smoke()

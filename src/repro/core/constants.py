@@ -61,6 +61,15 @@ class NetworkConfig:
     # makes placement a compile-free DSE axis (sweep_placement).
     gateway_positions: Optional[Tuple[Tuple[int, int], ...]] = None
     router_pitch_mm: float = 1.0            # mesh tile pitch (waveguide mm/hop)
+    # Arbitrary router-layout model (PR 10). `coords=None` keeps the derived
+    # mesh_x x mesh_y grid — every distance/table builder then uses the exact
+    # mesh closed forms (bit parity with the pre-coords code). An explicit
+    # `coords` tuple of (x, y) pairs pins an arbitrary layout whose adjacency
+    # is given by `coord_model` ("mesh": 4-neighbor grid steps; "hex":
+    # 6-neighbor axial steps — see repro.core.topology). Kept hashable for
+    # the same static-jit-key reasons as gateway_positions.
+    coord_model: str = "mesh"
+    coords: Optional[Tuple[Tuple[int, int], ...]] = None
 
     def __post_init__(self):
         if self.gateway_positions is not None:
@@ -72,9 +81,22 @@ class NetworkConfig:
                     "gateway_positions must be a sequence of (x, y) pairs, "
                     f"got {self.gateway_positions!r}") from e
             object.__setattr__(self, "gateway_positions", norm)
+        if self.coords is not None:
+            try:
+                norm = tuple((int(x), int(y)) for x, y in self.coords)
+            except (TypeError, ValueError) as e:
+                raise ValueError(
+                    "coords must be a sequence of (x, y) pairs, "
+                    f"got {self.coords!r}") from e
+            if not norm:
+                raise ValueError("coords must name at least one router; "
+                                 "use None for the derived mesh layout")
+            object.__setattr__(self, "coords", norm)
 
     @property
     def routers_per_chiplet(self) -> int:
+        if self.coords is not None:
+            return len(self.coords)
         return self.mesh_x * self.mesh_y
 
     @property
@@ -109,10 +131,14 @@ class NetworkConfig:
             kw["mesh_x"] = int(mesh_radix)
             kw["mesh_y"] = int(mesh_radix)
             if int(mesh_radix) != self.mesh_x \
-                    or int(mesh_radix) != self.mesh_y:
+                    or int(mesh_radix) != self.mesh_y \
+                    or self.coords is not None:
                 # An actual radix change: the placement's coordinates
                 # belong to the old mesh, so reset to the default scheme.
+                # Likewise a radix request on an explicit-coords config
+                # asks for the derived r x r grid, dropping the layout.
                 kw["gateway_positions"] = None
+                kw["coords"] = None
         return dataclasses.replace(self, **kw)
 
     def with_placement(self, positions) -> "NetworkConfig":

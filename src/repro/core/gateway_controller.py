@@ -49,15 +49,25 @@ def activation_order(positions, cfg: NetworkConfig = NETWORK) -> np.ndarray:
     `selection.normalize_placement(..., order="spread")` and the placement
     search's candidate proposals).
     """
+    from repro.core import topology
+
     pos = np.asarray(positions, np.int64).reshape(-1, 2)
     n = len(pos)
-    center = np.array([(cfg.mesh_x - 1) / 2.0, (cfg.mesh_y - 1) / 2.0])
-    centrality = np.abs(pos - center).sum(axis=1)
+    if cfg.coords is None:
+        # Derived mesh: geometric-center centrality + Manhattan spread (the
+        # pre-coords rule, bit parity).
+        center = np.array([(cfg.mesh_x - 1) / 2.0, (cfg.mesh_y - 1) / 2.0])
+        centrality = np.abs(pos - center).sum(axis=1)
+        pair = np.abs(pos[:, None, :] - pos[None, :, :]).sum(axis=-1)
+    else:
+        # Explicit layout: medoid centrality (total hops to every router)
+        # and BFS hop distances — no geometric center exists.
+        centrality = topology.centrality_lut(cfg)[pos[:, 0], pos[:, 1]]
+        pair = topology.pair_hops(cfg, pos[:, None, :], pos[None, :, :])
     order = [int(np.lexsort((np.arange(n), centrality))[0])]
     remaining = [i for i in range(n) if i != order[0]]
     while remaining:
-        dmin = [min(np.abs(pos[i] - pos[j]).sum() for j in order)
-                for i in remaining]
+        dmin = [min(pair[i, j] for j in order) for i in remaining]
         best = np.lexsort((remaining, [centrality[i] for i in remaining],
                            [-d for d in dmin]))[0]
         order.append(remaining.pop(int(best)))
@@ -77,19 +87,33 @@ def activation_order_jnp(positions, cfg: NetworkConfig = NETWORK
     round-trip. Matches the numpy `activation_order` exactly for any
     placement (integer comparisons only; pinned in tests/test_search.py).
     """
+    from repro.core import topology
+
     pos = jnp.asarray(positions, jnp.int32).reshape(-1, 2)
     n = int(pos.shape[0])
     idx = jnp.arange(n, dtype=jnp.int32)
-    # 2x the numpy rule's float centrality — integer, identical ordering.
-    cent2 = (jnp.abs(2 * pos[:, 0] - (cfg.mesh_x - 1))
-             + jnp.abs(2 * pos[:, 1] - (cfg.mesh_y - 1)))
-    pair = jnp.sum(jnp.abs(pos[:, None, :] - pos[None, :, :]), axis=-1)
+    if cfg.coords is None:
+        # 2x the numpy rule's float centrality — integer, identical order.
+        cent2 = (jnp.abs(2 * pos[:, 0] - (cfg.mesh_x - 1))
+                 + jnp.abs(2 * pos[:, 1] - (cfg.mesh_y - 1)))
+        pair = jnp.sum(jnp.abs(pos[:, None, :] - pos[None, :, :]), axis=-1)
+        big = jnp.int32(4 * (cfg.mesh_x + cfg.mesh_y))
+    else:
+        # Explicit layout: the numpy branch's integer medoid centrality and
+        # BFS pair hops become LUT gathers on the traced coordinates.
+        cent2 = jnp.asarray(topology.centrality_lut(cfg))[pos[:, 0],
+                                                          pos[:, 1]]
+        rid = jnp.asarray(topology.router_index_lut(cfg))[pos[:, 0],
+                                                          pos[:, 1]]
+        pair = jnp.asarray(topology.hop_lut(cfg))[rid[:, None],
+                                                  pos[None, :, 0],
+                                                  pos[None, :, 1]]
+        big = jnp.int32(topology.max_hops(cfg) + 1)
     # Composite lexicographic keys: b bounds the row-index tie-break, a
     # bounds (centrality, index). All terms stay far inside int32 for any
     # realistic mesh (dmin <= mesh perimeter).
     b = n
-    a = (2 * (cfg.mesh_x + cfg.mesh_y - 2) + 1) * b
-    big = jnp.int32(4 * (cfg.mesh_x + cfg.mesh_y))
+    a = topology.centrality_bound(cfg) * b
     taken = jnp.iinfo(jnp.int32).max
 
     first = jnp.argmin(cent2 * b + idx).astype(jnp.int32)

@@ -141,9 +141,12 @@ class NocModel:
 
 
 def uniform_mesh_mean_hops(cfg: NetworkConfig = NETWORK) -> float:
-    """Mean XY hop count between uniformly random distinct routers."""
-    mx, my = cfg.mesh_x, cfg.mesh_y
-    # E|x1-x2| for uniform iid on {0..n-1} = (n^2-1)/(3n)
-    ex = (mx * mx - 1) / (3.0 * mx)
-    ey = (my * my - 1) / (3.0 * my)
-    return float(ex + ey)
+    """Mean hop count between uniformly random iid routers.
+
+    Derived-mesh configs keep the exact closed form (E|x1-x2| for uniform
+    iid on {0..n-1} is (n^2-1)/(3n) per axis); explicit-coords layouts
+    average the BFS hop matrix (repro.core.topology.mean_hops — identical
+    on full grids).
+    """
+    from repro.core import topology
+    return topology.mean_hops(cfg)

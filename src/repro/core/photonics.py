@@ -120,10 +120,17 @@ def gateway_access_loss_db(gw_pos: np.ndarray,
     Returns [G] float32 dB values (design-time numpy constant; consumed by
     the selection tables as per-activation-level means).
     """
+    from repro.core import topology
+
     pos = np.asarray(gw_pos, np.int32).reshape(-1, 2)
-    edge_hops = np.minimum.reduce([
-        pos[:, 0], cfg.mesh_x - 1 - pos[:, 0],
-        pos[:, 1], cfg.mesh_y - 1 - pos[:, 1]])
+    if cfg.coords is None:
+        edge_hops = np.minimum.reduce([
+            pos[:, 0], cfg.mesh_x - 1 - pos[:, 0],
+            pos[:, 1], cfg.mesh_y - 1 - pos[:, 1]])
+    else:
+        # Explicit layout: hop distance to the nearest boundary router
+        # (design-time BFS LUT — see topology.edge_distance).
+        edge_hops = topology.edge_lut(cfg)[pos[:, 0], pos[:, 1]]
     return (edge_hops * cfg.router_pitch_mm
             * power.waveguide_db_per_mm).astype(np.float32)
 
@@ -138,10 +145,16 @@ def gateway_access_loss_db_jnp(gw_pos, cfg: NetworkConfig = NETWORK,
     candidate's optical access loss without leaving the device. Matches the
     numpy builder at 1e-6 (tests/test_search.py).
     """
+    from repro.core import topology
+
     pos = jnp.asarray(gw_pos, jnp.int32).reshape(-1, 2)
-    edge_hops = jnp.minimum(
-        jnp.minimum(pos[:, 0], cfg.mesh_x - 1 - pos[:, 0]),
-        jnp.minimum(pos[:, 1], cfg.mesh_y - 1 - pos[:, 1]))
+    if cfg.coords is None:
+        edge_hops = jnp.minimum(
+            jnp.minimum(pos[:, 0], cfg.mesh_x - 1 - pos[:, 0]),
+            jnp.minimum(pos[:, 1], cfg.mesh_y - 1 - pos[:, 1]))
+    else:
+        edge_hops = jnp.asarray(topology.edge_lut(cfg))[pos[:, 0],
+                                                        pos[:, 1]]
     return (edge_hops.astype(jnp.float32)
             * jnp.float32(cfg.router_pitch_mm * power.waveguide_db_per_mm))
 

@@ -90,7 +90,7 @@ def _mesh_coords(cfg: NetworkConfig) -> jnp.ndarray:
 # categorical sample over the free slots.
 
 def _one_move(pos: jax.Array, i: jax.Array, gumbel: jax.Array,
-              coords: jax.Array, mesh_y: int,
+              coords: jax.Array,
               blocked: jax.Array) -> jax.Array:
     """Collision-free single-gateway move (host `mutate` semantics).
 
@@ -100,12 +100,13 @@ def _one_move(pos: jax.Array, i: jax.Array, gumbel: jax.Array,
     routers excluded from the proposal space (failed hardware) — they count
     as permanently occupied. Scatter-free on purpose — tiny batched
     scatters lower poorly on CPU, and this runs per candidate per
-    generation inside the search scan.
+    generation inside the search scan. Occupancy is a coordinate-equality
+    test against `coords` rows, so arbitrary layouts (explicit
+    NetworkConfig.coords) need no flat-index arithmetic.
     """
-    n_r = coords.shape[0]
     g_max = pos.shape[0]
-    flat = pos[:, 0] * mesh_y + pos[:, 1]
-    occupied = jnp.any(jnp.arange(n_r)[None, :] == flat[:, None], axis=0)
+    occupied = jnp.any(
+        jnp.all(coords[:, None, :] == pos[None, :, :], axis=-1), axis=1)
     occupied = occupied | (blocked > 0.5)
     j = jnp.argmax(jnp.where(occupied, -jnp.inf, gumbel))
     # No free router (placement fills the mesh): skip the move, exactly
@@ -121,10 +122,8 @@ def _propose(parent: jax.Array, restart: jax.Array,
              blocked: jax.Array, cfg: NetworkConfig) -> jax.Array:
     """One candidate: random restart or 1-2 collision-free moves, then
     spread-reordered by the traceable activation rule (host parity)."""
-    m1 = _one_move(parent, move_i[0], move_gumbel[0], coords, cfg.mesh_y,
-                   blocked)
-    m2 = _one_move(m1, move_i[1], move_gumbel[1], coords, cfg.mesh_y,
-                   blocked)
+    m1 = _one_move(parent, move_i[0], move_gumbel[0], coords, blocked)
+    m2 = _one_move(m1, move_i[1], move_gumbel[1], coords, blocked)
     pos = jnp.where(restart, restart_pos, jnp.where(moves > 1, m2, m1))
     return pos[activation_order_jnp(pos, cfg)]
 
@@ -325,10 +324,12 @@ def repair_placement(placement, blocked_positions, cfg) -> tuple:
     (deterministic: ties break by flat router index). Returns a
     spread-normalized placement that is valid under `blocked_positions`.
     """
+    from repro.core import topology
+
     p = list(normalize_placement(placement, cfg))
     blocked = {(int(x), int(y)) for (x, y) in blocked_positions}
     occupied = set(p)
-    free = [(x, y) for x in range(cfg.mesh_x) for y in range(cfg.mesh_y)
+    free = [(int(x), int(y)) for x, y in topology.router_coords(cfg)
             if (x, y) not in blocked and (x, y) not in occupied]
     for i, pos in enumerate(p):
         if pos not in blocked:
@@ -338,21 +339,26 @@ def repair_placement(placement, blocked_positions, cfg) -> tuple:
                 f"cannot repair placement: {len(blocked)} blocked routers "
                 f"leave no free position for the gateway at {pos}")
         j = min(range(len(free)),
-                key=lambda k: (abs(free[k][0] - pos[0])
-                               + abs(free[k][1] - pos[1]), k))
+                key=lambda k: (int(topology.pair_hops(cfg, free[k], pos)),
+                               k))
         p[i] = free.pop(j)
     return normalize_placement(p, cfg, order="spread")
 
 
 def _blocked_mask(blocked_positions, cfg) -> jnp.ndarray:
-    """[R] float mask in `_mesh_coords` flat order (1 = excluded router)."""
-    mask = np.zeros(cfg.mesh_x * cfg.mesh_y, np.float32)
+    """[R] float mask in `_mesh_coords` row order (1 = excluded router)."""
+    from repro.core import topology
+
+    idx_lut = topology.router_index_lut(cfg)
+    bx, by = idx_lut.shape
+    mask = np.zeros(cfg.routers_per_chiplet, np.float32)
     for (x, y) in (blocked_positions or ()):
         x, y = int(x), int(y)
-        if not (0 <= x < cfg.mesh_x and 0 <= y < cfg.mesh_y):
+        r = int(idx_lut[x, y]) if (0 <= x < bx and 0 <= y < by) else -1
+        if r < 0:
             raise ValueError(f"blocked position ({x}, {y}) is outside the "
-                             f"{cfg.mesh_x}x{cfg.mesh_y} mesh")
-        mask[x * cfg.mesh_y + y] = 1.0
+                             f"{bx}x{by} mesh")
+        mask[r] = 1.0
     return jnp.asarray(mask)
 
 
@@ -371,7 +377,7 @@ def _prepare_search(trace: dict, sim, init, blocked_positions=None):
     cfg = sim.cfg
     blocked = {(int(x), int(y)) for (x, y) in (blocked_positions or ())}
     g_max = cfg.max_gateways_per_chiplet
-    if cfg.mesh_x * cfg.mesh_y - len(blocked) < g_max:
+    if cfg.routers_per_chiplet - len(blocked) < g_max:
         raise ValueError(
             f"{len(blocked)} blocked routers leave fewer than "
             f"{g_max} allowed positions on the "
@@ -506,6 +512,12 @@ def search_placement_islands(trace: dict, sim, *, islands: int = None,
         raise ValueError(
             f"non-sweepable fields: {sorted(unknown)} (islands zip with "
             f"runtime fields: {_sim.SWEEPABLE_FIELDS})")
+    if islands is not None and (isinstance(islands, bool)
+                                or not isinstance(islands,
+                                                  (int, np.integer))):
+        raise ValueError(
+            f"islands must be an int, got {type(islands).__name__} "
+            f"{islands!r}")
     lengths = {f: _sim._grid_len(f, v) for f, v in grids.items()}
     if islands is None:
         if lengths:

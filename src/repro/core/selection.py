@@ -27,7 +27,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import photonics
+from repro.core import photonics, topology
 from repro.core.constants import NETWORK, NetworkConfig
 from repro.core.gateway_controller import activation_order
 
@@ -39,14 +39,25 @@ def _validate_positions(pos: np.ndarray, cfg: NetworkConfig,
     Small meshes used to make the default edge formulas (`mx - 2`, `my - 2`)
     underflow into negative or duplicate coordinates *silently*; every
     placement now funnels through this check before any table is built.
+    Explicit-coords layouts additionally require each coordinate to name an
+    actual router (the dense LUT bounding box has off-layout holes).
     """
-    oob = ((pos[:, 0] < 0) | (pos[:, 0] >= cfg.mesh_x)
-           | (pos[:, 1] < 0) | (pos[:, 1] >= cfg.mesh_y))
+    bx, by = topology.lut_shape(cfg)
+    oob = ((pos[:, 0] < 0) | (pos[:, 0] >= bx)
+           | (pos[:, 1] < 0) | (pos[:, 1] >= by))
     if oob.any():
         bad = [tuple(p) for p in pos[oob]]
         raise ValueError(
             f"{what}: gateway coordinates {bad} fall outside the "
-            f"{cfg.mesh_x}x{cfg.mesh_y} chiplet mesh")
+            f"{bx}x{by} chiplet mesh")
+    if cfg.coords is not None:
+        idx = topology.router_index_lut(cfg)
+        hole = idx[pos[:, 0], pos[:, 1]] < 0
+        if hole.any():
+            bad = [tuple(p) for p in pos[hole]]
+            raise ValueError(
+                f"{what}: gateway coordinates {bad} are not routers of the "
+                f"{cfg.coord_model} layout in NetworkConfig.coords")
     uniq, counts = np.unique(pos, axis=0, return_counts=True)
     if (counts > 1).any():
         dup = [tuple(p) for p in uniq[counts > 1]]
@@ -68,7 +79,16 @@ def default_gateway_positions(cfg: NetworkConfig = NETWORK) -> np.ndarray:
     maximally spread. Activation order is the row order of this array.
     Raises a clear ValueError on meshes too small to host the scheme
     (the edge formulas need every sliced slot in-bounds and distinct).
+    Explicit-coords layouts (hex patches etc.) have no fixed edge slots;
+    they use the deterministic boundary max-min-spread generalization in
+    `topology.default_positions`.
     """
+    if cfg.coords is not None:
+        pos = np.array(topology.default_positions(cfg), dtype=np.int32)
+        _validate_positions(
+            pos, cfg, f"default_gateway_positions on a {cfg.coord_model} "
+                      f"layout")
+        return pos
     mx, my = cfg.mesh_x, cfg.mesh_y
     pos = np.array([
         [1, 0],                 # G1: south edge
@@ -129,14 +149,16 @@ def normalize_placement(positions, cfg: NetworkConfig = NETWORK, *,
 
 
 def _router_coords(cfg: NetworkConfig) -> np.ndarray:
-    xs, ys = np.meshgrid(np.arange(cfg.mesh_x), np.arange(cfg.mesh_y),
-                         indexing="ij")
-    return np.stack([xs.ravel(), ys.ravel()], axis=-1).astype(np.int32)
+    """[R, 2] router coordinates — mesh grid or explicit cfg.coords
+    (repro.core.topology is the single source of truth since PR 10)."""
+    return topology.router_coords(cfg)
 
 
 def hop_count(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """XY (dimension-ordered) routing hop count on the mesh — the DeFT [22]
-    intra-chiplet distance metric (deadlock-freedom does not change hops)."""
+    intra-chiplet distance metric (deadlock-freedom does not change hops).
+    Mesh-only Manhattan closed form; coordinate-model-aware callers use
+    `topology.pair_hops(cfg, a, b)` instead."""
     return np.abs(a[..., 0] - b[..., 0]) + np.abs(a[..., 1] - b[..., 1])
 
 
@@ -233,7 +255,10 @@ def _build_selection_tables_cached(cfg: NetworkConfig) -> SelectionTables:
 
     # One vectorized [R, Gmax] hop matrix feeds every activation level; the
     # per-level work is the greedy capacity walk plus fancy-indexed means.
-    dist = hop_count(routers[:, None, :], gw_pos[None, :, :])   # [R, Gmax]
+    # pair_hops is the Manhattan closed form on meshes (bit parity) and the
+    # BFS hop matrix on explicit-coords layouts.
+    dist = topology.pair_hops(cfg, routers[:, None, :],
+                              gw_pos[None, :, :])               # [R, Gmax]
     levels = np.arange(1, g_max + 1)
     caps = -(-n_r // levels)                                    # ceil(R/g)
 
@@ -304,9 +329,18 @@ def placement_tables_jnp(positions, cfg: NetworkConfig = NETWORK) -> dict:
     g_max = int(pos.shape[0])
     routers = jnp.asarray(_router_coords(cfg))
     n_r = int(routers.shape[0])
-    d_vals = cfg.mesh_x + cfg.mesh_y - 1       # distinct Manhattan values
-    dist = jnp.sum(jnp.abs(routers[:, None, :] - pos[None, :, :]),
-                   axis=-1).astype(jnp.int32)                  # [R, G]
+    if cfg.coords is None:
+        # Derived mesh: the Manhattan closed form, bit-identical to the
+        # pre-coords code path (d values 0 .. mesh_x + mesh_y - 2).
+        d_vals = cfg.mesh_x + cfg.mesh_y - 1   # distinct Manhattan values
+        dist = jnp.sum(jnp.abs(routers[:, None, :] - pos[None, :, :]),
+                       axis=-1).astype(jnp.int32)              # [R, G]
+    else:
+        # Explicit layout: hop distances are gathers from the design-time
+        # BFS LUT — same integer values pair_hops gives the numpy builder.
+        d_vals = topology.max_hops(cfg) + 1
+        lut = jnp.asarray(topology.hop_lut(cfg))               # [R, X, Y]
+        dist = lut[:, pos[:, 0], pos[:, 1]].astype(jnp.int32)  # [R, G]
     caps = jnp.asarray([-(-n_r // g) for g in range(1, g_max + 1)],
                        jnp.int32)                              # ceil(R/g)
     level_has = np.arange(1, g_max + 1)        # lane l uses gateways < l+1
@@ -328,6 +362,64 @@ def placement_tables_jnp(positions, cfg: NetworkConfig = NETWORK) -> dict:
     per_gw_db = photonics.gateway_access_loss_db_jnp(pos, cfg)
     levels = jnp.arange(1, g_max + 1, dtype=jnp.float32)
     return {"src_hops": jnp.mean(assign_d, axis=1),
+            "gw_loss_db": jnp.cumsum(per_gw_db) / levels}
+
+
+def placement_tables_from_lut_jnp(positions, hop_lut, edge_lut,
+                                  router_mask, caps, *, d_pad: int,
+                                  db_per_hop: float) -> dict:
+    """`placement_tables_jnp` with the topology as TRACED data.
+
+    The co-design engine (repro.core.pareto) scans over topology grid
+    points inside ONE compiled executable, so the chiplet geometry cannot
+    be a static `NetworkConfig`: everything shape-defining is padded and
+    rides as scan inputs. This twin runs the identical class-column
+    assignment schedule, with:
+
+      positions   [g_pad, 2] int  — candidate placement (padded gateway
+                  rows must hold any in-bounds coordinate; lanes beyond
+                  the real gateway count are masked by the consumer).
+      hop_lut     [r_pad, X, Y]   — router -> coordinate hops (padded
+                  router rows arbitrary, they are masked out).
+      edge_lut    [X, Y]          — boundary distance per coordinate.
+      router_mask [r_pad]         — 1.0 where the router exists.
+      caps        [g_pad] int     — per-level capacity ceil(R_real / g).
+      d_pad       static int      — loop bound: max hop distance + 1 over
+                  every topology sharing the executable.
+      db_per_hop  static float    — access-waveguide dB per hop
+                  (router_pitch_mm * waveguide_db_per_mm).
+
+    On an unpadded mesh fed its own LUTs this reproduces
+    `placement_tables_jnp` bit-for-bit (tests/test_pareto.py pins it).
+    """
+    pos = jnp.asarray(positions, jnp.int32).reshape(-1, 2)
+    g_pad = int(pos.shape[0])
+    lut = jnp.asarray(hop_lut)
+    r_pad = int(lut.shape[0])
+    router_on = jnp.asarray(router_mask, bool).reshape(r_pad)
+    caps = jnp.asarray(caps, jnp.int32).reshape(g_pad)
+    n_real = jnp.maximum(jnp.sum(router_on.astype(jnp.float32)), 1.0)
+    dist = lut[:, pos[:, 0], pos[:, 1]].astype(jnp.int32)      # [R, G]
+    level_has = np.arange(1, g_pad + 1)        # lane l uses gateways < l+1
+
+    assigned = jnp.zeros((g_pad, r_pad), bool)   # [L, R]
+    assign_d = jnp.zeros((g_pad, r_pad), jnp.float32)
+    load = [jnp.zeros((g_pad,), jnp.int32) for _ in range(g_pad)]
+    for d in range(d_pad):
+        for g in range(g_pad):
+            lane_on = jnp.asarray(level_has > g)               # [L] static
+            cand = ((~assigned) & (dist[None, :, g] == d)
+                    & lane_on[:, None] & router_on[None, :])   # [L, R]
+            k = jnp.cumsum(cand.astype(jnp.int32), axis=1)     # router order
+            take = cand & (k <= (caps - load[g])[:, None])
+            assigned = assigned | take
+            assign_d = jnp.where(take, jnp.float32(d), assign_d)
+            load[g] = load[g] + jnp.sum(take.astype(jnp.int32), axis=1)
+
+    per_gw_db = (edge_lut[pos[:, 0], pos[:, 1]].astype(jnp.float32)
+                 * jnp.float32(db_per_hop))
+    levels = jnp.arange(1, g_pad + 1, dtype=jnp.float32)
+    return {"src_hops": jnp.sum(assign_d, axis=1) / n_real,
             "gw_loss_db": jnp.cumsum(per_gw_db) / levels}
 
 

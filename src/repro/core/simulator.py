@@ -76,7 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import photonics, traffic
+from repro.core import photonics, topology, traffic
 from repro.core.faults import FAULT_KEYS, stack_fault_frames
 from repro.core.constants import (NETWORK, PROWAVES_MAX_WAVELENGTHS,
                                   PROWAVES_MIN_WAVELENGTHS,
@@ -203,7 +203,9 @@ def _interval_metrics(g: jax.Array, wavelengths: jax.Array,
         lam_mem = wavelengths if wavelengths.ndim == 0 \
             else jnp.mean(wavelengths)
         mesh_hops = jnp.float32(uniform_mesh_mean_hops(sim.cfg))
-        mesh_feed = 2.0 * sim.cfg.mesh_x
+        # Rows feeding the gateway cut: mesh_x on a derived mesh (the
+        # pre-coords constant, bit parity), sqrt(R) on explicit layouts.
+        mesh_feed = 2.0 * topology.feed_width(sim.cfg)
     else:
         chip_mask = topo["chip_mask"]                                  # [C]
         src_hops = topo["src_hops"][jnp.maximum(g, 1) - 1]             # [C]
@@ -563,6 +565,7 @@ def clear_engine_caches() -> None:
     this instead of reaching for the private wrappers, so adding an entry
     point can't silently leave a warm cache in a 'cold' measurement.
     """
+    from repro.core.pareto import clear_codesign_caches
     from repro.core.search import clear_search_caches
     from repro.core.traffic.dest import clear_destination_caches
 
@@ -575,6 +578,7 @@ def clear_engine_caches() -> None:
               _session_tick_jit, _session_tick_faults_jit):
         f.clear_cache()
     clear_search_caches()
+    clear_codesign_caches()
     clear_destination_caches()
 
 
@@ -587,7 +591,12 @@ def _grid_len(name: str, values) -> int:
                 f"(each a tuple of (x, y) pairs or None), got "
                 f"{type(values).__name__}")
         return len(values)
-    arr = jnp.asarray(values)
+    try:
+        arr = jnp.asarray(values)
+    except (TypeError, ValueError) as e:
+        raise ValueError(
+            f"swept field {name!r} must be a numeric grid "
+            f"({e})") from None
     if arr.ndim != 1:
         raise ValueError(
             f"swept field {name!r} must be a 1-D grid of values, got "
@@ -1927,8 +1936,9 @@ def search_placement(trace: dict, sim: SimConfig, *,
     cfg = sim.cfg
     gmax = cfg.max_gateways_per_chiplet
     blocked = {(int(x), int(y)) for (x, y) in (blocked_positions or ())}
-    coords = [(x, y) for x in range(cfg.mesh_x) for y in range(cfg.mesh_y)
-              if (x, y) not in blocked]
+    from repro.core import topology as _topology
+    coords = [(int(x), int(y)) for x, y in _topology.router_coords(cfg)
+              if (int(x), int(y)) not in blocked]
     if len(coords) < gmax:
         raise ValueError(
             f"{len(blocked)} blocked routers leave only {len(coords)} "
@@ -2037,4 +2047,7 @@ def __getattr__(name):
     if name in ("search_placement_device", "search_placement_islands"):
         from repro.core import search as _search
         return getattr(_search, name)
+    if name in ("search_codesign", "rescore_front_host"):
+        from repro.core import pareto as _pareto
+        return getattr(_pareto, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

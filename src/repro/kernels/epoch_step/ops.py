@@ -24,6 +24,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.constants import PHOTONIC_POWER
 from repro.core.gateway_controller import ControllerState
+from repro.core import topology
 from repro.core.noc import uniform_mesh_mean_hops
 from repro.kernels import resolve_interpret
 from repro.kernels.epoch_step.kernel import (COL_FAILED, COL_LASER,
@@ -156,7 +157,7 @@ def epoch_run_pallas(state, xs, sim, tables: dict, *,
         packet_bits=float(cfg.packet_bits),
         ser_k=float(cfg.link_gbps_per_wavelength / cfg.noc_freq_ghz),
         mesh_hops=float(uniform_mesh_mean_hops(cfg)),
-        mesh_feed=2.0 * cfg.mesh_x,
+        mesh_feed=2.0 * topology.feed_width(cfg),
         laser_mw=float(pwr.laser_mw_per_wavelength),
         tia_mw=float(pwr.tia_mw),
         tuning_mw=float(pwr.tuning_mw_per_mr),

@@ -14,10 +14,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import topology
 from repro.core.constants import NETWORK, NetworkConfig
 from repro.core.selection import (build_selection_tables,
                                   resolve_gateway_positions, _router_coords)
 from repro.kernels.noc_step.kernel import noc_run_pallas
+
+# Deterministic next-hop preference order for explicit-coords layouts: the
+# four grid steps first (x before y, matching XY routing's dimension order),
+# then the two hex anti-diagonal steps. On a derived mesh the hop-greedy
+# walk under this order reproduces XY routing exactly (x-distance strictly
+# drops while it can, then y) — pinned in tests/test_topology.py.
+_NEXT_HOP_PREFERENCE = ((1, 0), (-1, 0), (0, 1), (0, -1), (1, -1), (-1, 1))
 
 
 def build_topology(g_active: int, wavelengths: int,
@@ -30,6 +38,10 @@ def build_topology(g_active: int, wavelengths: int,
     gateway. Sink drain = min(optical serialization, electronic port) rate.
     Placement-aware: `cfg.gateway_positions` (or the default edge scheme)
     decides both the balanced partition and where the sinks sit.
+    Explicit-coords layouts route hop-greedily over the coord_model
+    adjacency (first `_NEXT_HOP_PREFERENCE` neighbor that strictly reduces
+    the BFS hop distance — deterministic, loop-free, XY-equivalent on
+    meshes).
     """
     tables = build_selection_tables(cfg)
     assign = tables.src_map[g_active - 1]            # [R] -> gateway id
@@ -38,19 +50,41 @@ def build_topology(g_active: int, wavelengths: int,
     r = len(routers)
     n = r + g_active
     next_mat = np.zeros((n, n), np.float32)
-    mesh_x = cfg.mesh_x
 
     def rid(x, y):
         return x * cfg.mesh_y + y
 
-    for i, (x, y) in enumerate(routers):
-        gx, gy = gw_pos[assign[i]]
-        if x == gx and y == gy:
-            next_mat[i, r + assign[i]] = 1.0         # eject into gateway
-        elif x != gx:                                 # XY: x first
-            next_mat[i, rid(x + np.sign(gx - x), y)] = 1.0
-        else:
-            next_mat[i, rid(x, y + np.sign(gy - y))] = 1.0
+    if cfg.coords is None:
+        for i, (x, y) in enumerate(routers):
+            gx, gy = gw_pos[assign[i]]
+            if x == gx and y == gy:
+                next_mat[i, r + assign[i]] = 1.0     # eject into gateway
+            elif x != gx:                             # XY: x first
+                next_mat[i, rid(x + np.sign(gx - x), y)] = 1.0
+            else:
+                next_mat[i, rid(x, y + np.sign(gy - y))] = 1.0
+    else:
+        idx_lut = topology.router_index_lut(cfg)
+        hm = topology.hop_matrix(cfg)
+        xmax, ymax = idx_lut.shape
+        gw_rid = idx_lut[gw_pos[:, 0], gw_pos[:, 1]]
+        offsets = [o for o in _NEXT_HOP_PREFERENCE
+                   if o in topology.NEIGHBOR_OFFSETS[cfg.coord_model]]
+        for i, (x, y) in enumerate(routers):
+            tgt = int(gw_rid[assign[i]])
+            if i == tgt:
+                next_mat[i, r + assign[i]] = 1.0     # eject into gateway
+                continue
+            for dx, dy in offsets:
+                nx, ny = x + dx, y + dy
+                if not (0 <= nx < xmax and 0 <= ny < ymax):
+                    continue
+                j = int(idx_lut[nx, ny])
+                if j >= 0 and hm[j, tgt] < hm[i, tgt]:
+                    next_mat[i, j] = 1.0
+                    break
+            else:                 # pragma: no cover - hop_matrix is exact
+                raise AssertionError("no hop-reducing neighbor found")
 
     # Gateway sink service: optical lanes vs the 1-flit/cycle electronic
     # port — the min is what the chiplet actually sustains (§3.1 insight).
@@ -60,7 +94,11 @@ def build_topology(g_active: int, wavelengths: int,
     drain[r:] = min(optical, 1.0)
     buf = np.full((n,), float(cfg.router_buffer_flits), np.float32)
     buf[r:] = float(cfg.gateway_buffer_flits)
-    gw_idx = np.array([rid(*gw_pos[k]) for k in range(g_active)])
+    if cfg.coords is None:
+        gw_idx = np.array([rid(*gw_pos[k]) for k in range(g_active)])
+    else:
+        gw_idx = np.array([int(topology.router_index_lut(cfg)[x, y])
+                           for x, y in gw_pos[:g_active]])
     return next_mat, drain, buf, gw_idx
 
 
@@ -123,5 +161,9 @@ def simulate_residency(ext_load: float, g_active: int, wavelengths: int,
         jnp.asarray(buf), valid_mask=jnp.ones((n,), jnp.float32),
         t_mask=t_mask, interpret=interpret)
     mean_resid = resid[:r] / active_cycles
+    if cfg.coords is not None:
+        # Explicit layouts have no dense grid to reshape into: return the
+        # flat [R] residency in router order (topology.router_coords rows).
+        return np.asarray(mean_resid), float(jnp.sum(drained))
     return (np.asarray(mean_resid).reshape(cfg.mesh_x, cfg.mesh_y),
             float(jnp.sum(drained)))

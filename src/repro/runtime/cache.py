@@ -47,7 +47,8 @@ _CACHE = {"dir": None}
 _AOT: Dict[tuple, "AotEntry"] = {}
 
 #: Entry points `aot_compile` / `warmup` know how to lower.
-AOT_ENTRY_POINTS = ("simulate", "sweep", "sweep_topology", "session_tick")
+AOT_ENTRY_POINTS = ("simulate", "sweep", "sweep_topology", "session_tick",
+                    "search")
 
 
 # ---------------------------------------------------------------------------
@@ -142,6 +143,20 @@ def _grid_key(grids: dict) -> tuple:
     return tuple(out)
 
 
+def _param_key(kw: dict) -> tuple:
+    """Hashable memo key for the "search" entry's mixed kwargs (ints,
+    floats, grid lists, the nested knob_grids dict)."""
+    def leaf(v):
+        if v is None:
+            return None
+        if isinstance(v, dict):
+            return tuple((k, leaf(v[k])) for k in sorted(v))
+        if np.ndim(v) > 0:
+            return tuple(np.asarray(v).reshape(-1).tolist())
+        return v
+    return tuple((name, leaf(kw[name])) for name in sorted(kw))
+
+
 def _builders():
     """entry name -> (args_builder, jit_fn). The builder reproduces the
     public entry point's preprocessing so the compiled call is fed
@@ -176,10 +191,17 @@ def _builders():
                 jnp.asarray(batch["t_mask"], jnp.float32), tables,
                 None if dest is None else jnp.asarray(dest, jnp.float32))
 
+    def b_search(trace, sim, **kw):
+        from repro.core import pareto
+        built, statics, _info = pareto._codesign_operands(trace, sim, **kw)
+        return built, statics
+
+    from repro.core import pareto as _pareto
     return {"simulate": (b_simulate, S._simulate_jit),
             "sweep": (b_sweep, S._sweep_jit),
             "sweep_topology": (b_sweep_topology, S._sweep_topology_jit),
-            "session_tick": (b_session_tick, S._session_tick_jit)}
+            "session_tick": (b_session_tick, S._session_tick_jit),
+            "search": (b_search, _pareto._codesign_jit)}
 
 
 def _persist_path(key: tuple) -> Optional[pathlib.Path]:
@@ -217,7 +239,9 @@ def aot_compile(entry: str, *args, **kw) -> AotEntry:
 
     Entries: "simulate" (trace, sim), "sweep" (trace, sim, **fields),
     "sweep_topology" (trace, sim, **grids), "session_tick" (states, batch,
-    tables, sim). Compiled executables are memoized on (entry, sim config,
+    tables, sim), "search" (trace, sim, **search_codesign kwargs — the
+    Pareto co-design dispatch, so a fleet worker's first `search_codesign`
+    skips tracing + XLA). Compiled executables are memoized on (entry, sim config,
     grid values, input shapes/dtypes) — a second call with a same-shaped
     trace returns the cached handle. Compiles go through the persistent
     cache when `enable_persistent_cache` is on, so AOT warmup in one
@@ -232,18 +256,24 @@ def aot_compile(entry: str, *args, **kw) -> AotEntry:
     if entry == "sweep_topology":
         trace, sim = args
         built, sim_static = build(trace, sim, **kw)
+        lower_kw = {"sim": sim_static}
         key = (entry, sim, _grid_key(kw), _shape_key(built))
         rebuild = lambda tr, sm, **g: build(tr, sm, **g)[0]
+    elif entry == "search":
+        trace, sim = args
+        built, lower_kw = build(trace, sim, **kw)
+        key = (entry, sim, _param_key(kw), _shape_key(built))
+        rebuild = lambda tr, sm, **k: build(tr, sm, **k)[0]
     elif entry == "session_tick":
         states, batch, tables, sim = args
         built = build(states, batch, tables, sim)
-        sim_static = sim
+        lower_kw = {"sim": sim}
         key = (entry, sim, (), _shape_key(built))
         rebuild = build
     else:
         sim = args[1]
         built = build(*args, **kw)
-        sim_static = sim
+        lower_kw = {"sim": sim}
         key = (entry, sim, _grid_key(kw), _shape_key(built))
         rebuild = build
 
@@ -264,7 +294,7 @@ def aot_compile(entry: str, *args, **kw) -> AotEntry:
             log.warning("could not load persisted AOT %s (%r); recompiling",
                         path.name, e)
     t0 = time.perf_counter()
-    compiled = jit_fn.lower(*built, sim=sim_static).compile()
+    compiled = jit_fn.lower(*built, **lower_kw).compile()
     log.info("AOT-compiled %s in %.3fs (key shapes: %d operands)",
              entry, time.perf_counter() - t0, len(jax.tree.leaves(built)))
     if path is not None:
@@ -335,6 +365,13 @@ def warmup(sim, *, trace: Optional[dict] = None, n_intervals: int = 16,
                      "t_mask": np.ones(ext.shape[:2], np.float32)}
             out = S.session_tick(states, batch,
                                  S.selection_tables_jax(sim.cfg), sim)
+        elif entry == "search":
+            from repro.core import pareto
+
+            g = grids or {"n_chiplets": [sim.cfg.n_chiplets]}
+            out = pareto.search_codesign(trace, sim, islands=2,
+                                         generations=2, population=2, **g)
+            out = out["island_scores"]
         else:
             raise ValueError(f"unknown warmup entry {entry!r} "
                              f"(choose from {AOT_ENTRY_POINTS})")

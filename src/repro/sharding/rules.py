@@ -57,12 +57,20 @@ DEFAULT_RULES = {
     "capacity": (),
     # DSE fleet axes (repro.core.distributed / launch.fleet): the leading
     # grid-point axis of a topology/placement/workload sweep and the island
-    # axis of the annealed search both shard over the 1-D fleet mesh's
-    # "grid" axis (launch.mesh.make_fleet_mesh). On the production meshes
-    # (no "grid" axis) they resolve to replicated, so sweep code annotated
-    # with these axes runs unchanged everywhere.
+    # axis of the annealed searches (search_placement_islands and the
+    # search_codesign co-design chains) both shard over the 1-D fleet
+    # mesh's "grid" axis (launch.mesh.make_fleet_mesh). On the production
+    # meshes (no "grid" axis) they resolve to replicated, so sweep code
+    # annotated with these axes runs unchanged everywhere.
     "sweep": ("grid",),
     "islands": ("grid",),
+    # Pareto co-design outputs: the archive capacity axis and the scanned
+    # topology-grid axis stay replicated — every fleet process carries the
+    # whole front (the archive merges candidates from ALL islands, so
+    # slicing it per-shard would drop cross-island dominators), and the
+    # topology axis is a sequential lax.scan, never a data-parallel dim.
+    "archive": (),
+    "topology_grid": (),
 }
 
 # Overlays (hillclimb levers; see EXPERIMENTS.md §Perf).

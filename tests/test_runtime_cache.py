@@ -115,6 +115,28 @@ def test_aot_session_tick_matches_jit():
                        S.session_tick(states, batch, tables, sim))
 
 
+def test_aot_search_matches_jit():
+    from repro.core import pareto
+
+    sim = _sim()
+    tr = _trace(sim, cfg=sim.cfg.with_topology(n_chiplets=9))
+    kw = dict(n_chiplets=[4, 9], islands=2, generations=2, population=2,
+              archive=8, seed=5)
+    exe = rcache.aot_compile("search", tr, sim, **kw)
+    built, statics, _ = pareto._codesign_operands(tr, sim, **kw)
+    _assert_tree_equal(exe(tr, sim, **kw),
+                       pareto._codesign_jit(*built, **statics))
+    assert exe is rcache.aot_compile("search", tr, sim, **kw)  # memo hit
+    assert "search" in rcache.AOT_ENTRY_POINTS
+
+
+def test_warmup_search_entry_runs():
+    sim = _sim()
+    walls = rcache.warmup(sim, n_intervals=4, entries=("search",),
+                          grids={"n_chiplets": [sim.cfg.n_chiplets]})
+    assert walls["search"] > 0.0
+
+
 def test_aot_memoizes_on_config_and_shapes():
     sim = _sim()
     tr = _trace(sim)

@@ -1,0 +1,223 @@
+"""Router coordinate/adjacency model tests (PR 10 enabling refactor).
+
+Pins the mesh closed forms against the generic BFS machinery (an explicit
+coords tuple spelling out the same grid must reproduce every derived-mesh
+table), exercises the hexagonal generator (axial distance closed form,
+boundary detection, default placements), and checks that the noc_step
+hop-greedy router is XY-equivalent on meshes and loop-free on hex.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import topology, traffic
+from repro.core.constants import NETWORK
+from repro.core.gateway_controller import (activation_order,
+                                           activation_order_jnp)
+from repro.core.selection import normalize_placement
+from repro.kernels.noc_step.ops import build_topology
+
+MESHES = [(4, 4), (5, 3), (6, 6)]
+
+
+def _mesh_cfg(mx, my, **kw):
+    kw.setdefault("gateway_positions", None)
+    return dataclasses.replace(NETWORK, mesh_x=mx, mesh_y=my, **kw)
+
+
+def _explicit_mesh_cfg(mx, my, **kw):
+    """The same grid as an explicit coords tuple (BFS paths, no closed
+    forms) — every geometry table must agree with the derived mesh."""
+    coords = tuple((x, y) for x in range(mx) for y in range(my))
+    return _mesh_cfg(mx, my, coords=coords, coord_model="mesh", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mesh parity: BFS/generic paths == closed forms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mx,my", MESHES)
+def test_explicit_mesh_matches_derived_geometry(mx, my):
+    mesh, expl = _mesh_cfg(mx, my), _explicit_mesh_cfg(mx, my)
+    np.testing.assert_array_equal(topology.router_coords(mesh),
+                                  topology.router_coords(expl))
+    np.testing.assert_array_equal(topology.hop_matrix(mesh),
+                                  topology.hop_matrix(expl))
+    np.testing.assert_array_equal(topology.edge_distance(mesh),
+                                  topology.edge_distance(expl))
+    np.testing.assert_array_equal(topology.router_index_lut(mesh),
+                                  topology.router_index_lut(expl))
+    assert topology.max_hops(mesh) == topology.max_hops(expl) \
+        == mx + my - 2
+
+
+@pytest.mark.parametrize("mx,my", MESHES)
+def test_mesh_router_index_lut_is_flat_order(mx, my):
+    lut = topology.router_index_lut(_mesh_cfg(mx, my))
+    for x in range(mx):
+        for y in range(my):
+            assert lut[x, y] == x * my + y
+
+
+@pytest.mark.parametrize("mx,my", MESHES)
+def test_mesh_mean_hops_closed_form_matches_matrix(mx, my):
+    mesh = _mesh_cfg(mx, my)
+    assert topology.mean_hops(mesh) == pytest.approx(
+        float(topology.hop_matrix(mesh).mean()))
+    # The explicit path computes the matrix mean directly.
+    assert topology.mean_hops(_explicit_mesh_cfg(mx, my)) == pytest.approx(
+        topology.mean_hops(mesh))
+
+
+def test_hop_lut_off_layout_sentinel():
+    cfg = _mesh_cfg(4, 4)
+    lut = topology.hop_lut(cfg)
+    assert lut.shape == (16, 4, 4)
+    assert lut.max() == topology.max_hops(cfg)  # full grid: no holes
+    hole = topology.hop_lut(topology.hex_config(1))
+    assert hole.max() == topology.max_hops(topology.hex_config(1)) + 1
+
+
+# ---------------------------------------------------------------------------
+# Hexagonal generator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rings", [1, 2, 3])
+def test_hex_coords_count_and_bounds(rings):
+    coords = topology.hex_coords(rings)
+    assert len(coords) == 3 * rings * (rings + 1) + 1
+    pos = np.asarray(coords)
+    assert pos.min() >= 0 and pos.max() <= 2 * rings
+    assert len(np.unique(pos, axis=0)) == len(pos)
+
+
+@pytest.mark.parametrize("rings", [1, 2])
+def test_hex_hop_matrix_matches_axial_closed_form(rings):
+    cfg = topology.hex_config(rings)
+    pos = topology.router_coords(cfg).astype(np.int64) - rings  # unshift
+    dq = pos[:, None, 0] - pos[None, :, 0]
+    dr = pos[:, None, 1] - pos[None, :, 1]
+    want = (np.abs(dq) + np.abs(dr) + np.abs(dq + dr)) // 2
+    np.testing.assert_array_equal(topology.hop_matrix(cfg), want)
+    assert topology.max_hops(cfg) == 2 * rings
+
+
+def test_hex_config_sizes():
+    cfg = topology.hex_config(2)
+    assert cfg.coord_model == "hex"
+    assert cfg.routers_per_chiplet == 19
+    assert (cfg.mesh_x, cfg.mesh_y) == (5, 5)  # LUT bounding box
+
+
+def test_hex_boundary_and_default_positions():
+    cfg = topology.hex_config(2)
+    ed = topology.edge_distance(cfg)
+    # Ring-2 patch: the 12 outermost routers are the boundary, the center
+    # sits 2 hops in.
+    assert int((ed == 0).sum()) == 12
+    assert ed.max() == 2
+    pos = topology.default_positions(cfg)
+    assert pos.shape == (cfg.max_gateways_per_chiplet, 2)
+    assert len({tuple(p) for p in pos}) == len(pos)
+    lut = topology.edge_lut(cfg)
+    assert all(lut[x, y] == 0 for x, y in pos)  # gateways on the boundary
+
+
+def test_hex_activation_order_numpy_jnp_parity():
+    cfg = topology.hex_config(2)
+    coords = topology.router_coords(cfg)
+    rng = np.random.RandomState(7)
+    for _ in range(8):
+        pos = coords[rng.choice(len(coords), size=4, replace=False)]
+        np.testing.assert_array_equal(
+            np.asarray(activation_order_jnp(pos, cfg)),
+            activation_order(pos, cfg))
+
+
+def test_hex_normalize_placement_spread_idempotent():
+    cfg = topology.hex_config(2)
+    coords = topology.router_coords(cfg)
+    pos = coords[np.random.RandomState(1).choice(len(coords), 4,
+                                                 replace=False)]
+    spread = normalize_placement(pos, cfg, order="spread")
+    assert normalize_placement(spread, cfg, order="spread") == spread
+
+
+# ---------------------------------------------------------------------------
+# Validation
+# ---------------------------------------------------------------------------
+
+def test_disconnected_layout_raises():
+    cfg = _mesh_cfg(8, 8, coords=((0, 0), (5, 5)))
+    with pytest.raises(ValueError, match="disconnected"):
+        topology.hop_matrix(cfg)
+
+
+def test_duplicate_coords_raise():
+    with pytest.raises(ValueError, match="duplicate"):
+        topology.router_coords(_mesh_cfg(4, 4, coords=((0, 0), (0, 0))))
+
+
+def test_negative_coords_raise():
+    with pytest.raises(ValueError, match="negative"):
+        topology.router_coords(_mesh_cfg(4, 4, coords=((-1, 0), (0, 0))))
+
+
+def test_unknown_coord_model_raises():
+    cfg = _mesh_cfg(4, 4, coords=((0, 0), (0, 1)), coord_model="torus")
+    with pytest.raises(ValueError, match="coord_model"):
+        topology.hop_matrix(cfg)
+
+
+def test_with_topology_radix_drops_explicit_coords():
+    cfg = topology.hex_config(2).with_topology(mesh_radix=4)
+    assert cfg.coords is None
+    assert (cfg.mesh_x, cfg.mesh_y) == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# noc_step routing over the coordinate model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mx,my", [(4, 4), (5, 3)])
+def test_noc_hop_greedy_routing_is_xy_on_meshes(mx, my):
+    gw = ((1, 0), (mx - 1, my - 2), (0, my - 1), (mx - 2, 1))
+    mesh = _mesh_cfg(mx, my, gateway_positions=gw)
+    expl = _explicit_mesh_cfg(mx, my, gateway_positions=gw)
+    for g in (1, 2, 4):
+        nm_m, dr_m, buf_m, gi_m = build_topology(g, 4, mesh)
+        nm_e, dr_e, buf_e, gi_e = build_topology(g, 4, expl)
+        np.testing.assert_array_equal(nm_m, nm_e)
+        np.testing.assert_array_equal(dr_m, dr_e)
+        np.testing.assert_array_equal(buf_m, buf_e)
+        np.testing.assert_array_equal(gi_m, gi_e)
+
+
+def test_noc_routing_on_hex_is_loop_free():
+    cfg = topology.hex_config(2)
+    g = cfg.max_gateways_per_chiplet
+    next_mat, drain, buf, gw_idx = build_topology(g, 4, cfg)
+    r = cfg.routers_per_chiplet
+    # Every router forwards to exactly one node; following next hops from
+    # any router must reach a gateway sink within the diameter.
+    assert np.all(next_mat[:r].sum(axis=1) == 1.0)
+    for start in range(r):
+        node, steps = start, 0
+        while node < r:
+            node = int(np.argmax(next_mat[node]))
+            steps += 1
+            assert steps <= topology.max_hops(cfg) + 1
+        assert node >= r  # landed on a sink
+
+
+def test_simulate_runs_on_hex_config():
+    from repro.core.simulator import Arch, SimConfig, simulate
+
+    sim = dataclasses.replace(
+        SimConfig().with_arch(Arch.RESIPI), cfg=topology.hex_config(2))
+    tr = traffic.generate_trace("dedup", 4, jax.random.PRNGKey(0), sim.cfg)
+    out = simulate(tr, sim)["summary"]
+    assert np.isfinite(out["mean_latency"]) and out["mean_latency"] > 0
+    assert np.isfinite(out["mean_power_mw"]) and out["mean_power_mw"] > 0
